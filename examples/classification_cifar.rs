@@ -1,0 +1,26 @@
+//! Table-1-style classification: ResNet-tiny / MobileNet-ish / ViT-tiny on
+//! synthetic CIFAR, fully-integer training vs the fp32 baseline.
+//!
+//! Run: `cargo run --release --example classification_cifar`
+
+use intrain::nn::Arith;
+use intrain::train::experiments::{run_classification, Budget, NetKind};
+
+fn main() {
+    let budget = Budget::medium();
+    println!("Table 1 (synthetic-CIFAR scale) — int8 vs fp32\n");
+    println!("{:<14} {:<10} {:>10} {:>10}", "model", "arith", "top1", "top5");
+    for (kind, name) in [
+        (NetKind::Resnet, "resnet-tiny"),
+        (NetKind::Mobilenet, "mobilenet"),
+        (NetKind::Vit, "vit-tiny"),
+    ] {
+        for (arith, aname) in [(Arith::int8(), "int8"), (Arith::Float, "fp32")] {
+            let rec = run_classification(kind, 10, arith, &budget, 3);
+            println!(
+                "{:<14} {:<10} {:>10.4} {:>10.4}",
+                name, aname, rec.final_top1, rec.final_top5
+            );
+        }
+    }
+}

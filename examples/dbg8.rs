@@ -1,0 +1,18 @@
+use intrain::data::synth_images::SynthImages;
+use intrain::models::resnet_tiny;
+use intrain::nn::Arith;
+use intrain::optim::LrSchedule;
+use intrain::train::trainer::{TrainConfig, Trainer};
+
+fn main() {
+    for (name, arith) in [("int8", Arith::int8()), ("fp32", Arith::Float)] {
+        let train = SynthImages::new(600, 20, 3, 16, 0.25, 1, 103);
+        let test = SynthImages::new(150, 20, 3, 16, 0.25, 1, 780);
+        let mut model = resnet_tiny(20, 3, 16, arith, 3);
+        let mut opt = intrain::coordinator::driver::optimizer_for(&arith, 7);
+        let cfg = TrainConfig { epochs: 10, batch: 32, verbose: true,
+            schedule: LrSchedule::Cosine { base: 0.05, t_max: 180 }, seed: 3, eval_every: 2 };
+        let rec = Trainer { model: &mut model, opt: opt.as_mut(), cfg, dense: false }.run(&train, &test);
+        println!("{name} final {}", rec.final_top1);
+    }
+}

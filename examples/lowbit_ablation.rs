@@ -1,0 +1,26 @@
+//! Table-5-style low-bit ablation: the same ResNet training at int8 …
+//! int4. Expect graceful degradation to int6, a sharp drop at int5, and
+//! divergence (or chance accuracy) at int4 — the paper's pattern.
+//!
+//! Run: `cargo run --release --example lowbit_ablation`
+
+use intrain::nn::{Arith, IntCfg};
+use intrain::train::experiments::{run_classification, Budget, NetKind};
+
+fn main() {
+    let budget = Budget::medium();
+    println!("Table 5 — low-bit integer training (ResNet-tiny, synthetic CIFAR10)\n");
+    println!("{:<8} {:>10} {:>14}", "bits", "top1", "final loss");
+    for bits in (4..=8).rev() {
+        let rec = run_classification(
+            NetKind::Resnet,
+            10,
+            Arith::Int(IntCfg::bits(bits)),
+            &budget,
+            3,
+        );
+        let fl = rec.epoch_loss.last().copied().unwrap_or(f32::NAN);
+        let verdict = if !fl.is_finite() || fl > 2.2 { "  (diverged)" } else { "" };
+        println!("int{bits:<5} {:>10.4} {fl:>14.4}{verdict}", rec.final_top1);
+    }
+}

@@ -1,0 +1,18 @@
+//! Table-2-style semantic segmentation: FCN on synthetic shape scenes
+//! (frozen batch-norms per the paper's protocol), int8 vs fp32 mIoU.
+//!
+//! Run: `cargo run --release --example segmentation`
+
+use intrain::nn::Arith;
+use intrain::train::experiments::{run_segmentation, Budget};
+
+fn main() {
+    let budget = Budget::medium();
+    println!("Table 2 (synthetic shapes) — mIoU, int8 vs fp32\n");
+    println!("{:<12} {:>10} {:>10}", "dataset", "int8", "fp32");
+    for (coco, name) in [(false, "voc-like"), (true, "coco-like")] {
+        let mi = run_segmentation(Arith::int8(), coco, &budget, 3);
+        let mf = run_segmentation(Arith::Float, coco, &budget, 3);
+        println!("{name:<12} {mi:>10.2} {mf:>10.2}");
+    }
+}

@@ -1,0 +1,45 @@
+//! END-TO-END driver: the full three-layer stack on a real workload.
+//!
+//! Rust coordinator (this binary) → AOT-compiled JAX train step → Pallas
+//! integer kernels, training the transformer LM on the synthetic corpus
+//! for several hundred steps and logging both the int8 and fp32 loss
+//! curves. Requires `make artifacts` first. Python is NOT on this path.
+//!
+//! Run: `cargo run --release --example transformer_e2e [steps]`
+
+use intrain::coordinator::e2e::{run_e2e, E2eConfig};
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let artifacts = PathBuf::from(
+        std::env::var("INTRAIN_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let mut curves = Vec::new();
+    for integer in [false, true] {
+        let label = if integer { "int8" } else { "fp32" };
+        println!("=== {label} train step ({steps} steps) ===");
+        let cfg = E2eConfig { steps, lr: 0.05, integer, log_every: steps / 10, seed: 0 };
+        let rec = run_e2e(&artifacts, &cfg)?;
+        println!(
+            "{label}: {} params, {:.2} steps/s, loss {:.4} → {:.4}\n",
+            rec.param_count,
+            rec.steps_per_sec,
+            rec.losses[0],
+            rec.losses.last().unwrap()
+        );
+        curves.push((label, rec));
+    }
+    println!("step   fp32-loss  int8-loss   |Δ|");
+    let n = curves[0].1.losses.len();
+    for s in (0..n).step_by((n / 15).max(1)) {
+        let lf = curves[0].1.losses[s];
+        let li = curves[1].1.losses[s];
+        println!("{s:>5}  {lf:>9.4}  {li:>9.4}  {:>6.4}", (lf - li).abs());
+    }
+    let lf = *curves[0].1.losses.last().unwrap();
+    let li = *curves[1].1.losses.last().unwrap();
+    println!("\nfinal: fp32 {lf:.4} vs int8 {li:.4} — trajectories within {:.1}%", 100.0 * (lf - li).abs() / lf.max(1e-6));
+    Ok(())
+}

@@ -1,0 +1,128 @@
+"""AOT export: lower the L2 train step (int8 and fp32 variants) plus an
+init function and a quantize demo to **HLO text** in ``artifacts/``.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Python runs exactly once (``make artifacts``); the Rust binary then
+executes the exported computations via PJRT with no Python anywhere on
+the request path.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_train_step(out_dir: str, *, integer: bool, batch: int) -> str:
+    spec = model.param_spec()
+    flat = model.flatten_step(integer=integer)
+    args = [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in spec] * 2
+    args += [
+        jax.ShapeDtypeStruct((batch, model.SEQ), jnp.int32),  # tokens
+        jax.ShapeDtypeStruct((batch, model.SEQ), jnp.int32),  # targets
+        jax.ShapeDtypeStruct((), jnp.int32),  # seed
+        jax.ShapeDtypeStruct((), jnp.float32),  # lr
+    ]
+    lowered = jax.jit(flat).lower(*args)
+    name = f"train_step_{'int8' if integer else 'fp32'}.hlo.txt"
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return path
+
+
+def export_init(out_dir: str) -> str:
+    def init(seed):
+        return model.init_params(jax.random.PRNGKey(seed))
+
+    lowered = jax.jit(init).lower(jax.ShapeDtypeStruct((), jnp.int32))
+    path = os.path.join(out_dir, "init_params.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return path
+
+
+def export_quant_demo(out_dir: str) -> str:
+    """Small quantize→igemm→inverse round trip — the runtime smoke test."""
+    from .kernels.igemm import igemm_pallas
+    from .kernels.quant import quantize_pallas
+    from .kernels import ref
+
+    def demo(a, b, rand_a, rand_b):
+        pa, ea = quantize_pallas(a.reshape(-1), rand_a, pbits=7)
+        pb, eb = quantize_pallas(b.reshape(-1), rand_b, pbits=7)
+        acc = igemm_pallas(pa.reshape(a.shape), pb.reshape(b.shape))
+        k = ref.scale_exp(ea, 7) + ref.scale_exp(eb, 7)
+        return (jnp.ldexp(acc.astype(jnp.float32), k),)
+
+    m = 16
+    lowered = jax.jit(demo).lower(
+        jax.ShapeDtypeStruct((m, m), jnp.float32),
+        jax.ShapeDtypeStruct((m, m), jnp.float32),
+        jax.ShapeDtypeStruct((m * m,), jnp.uint32),
+        jax.ShapeDtypeStruct((m * m,), jnp.uint32),
+    )
+    path = os.path.join(out_dir, "quant_demo.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return path
+
+
+def write_manifest(out_dir: str, batch: int) -> str:
+    """Plain-text manifest the Rust runtime parses: model dims and the
+    ordered parameter shapes."""
+    path = os.path.join(out_dir, "manifest.txt")
+    with open(path, "w") as f:
+        f.write(f"vocab {model.VOCAB}\n")
+        f.write(f"seq {model.SEQ}\n")
+        f.write(f"dim {model.DIM}\n")
+        f.write(f"depth {model.DEPTH}\n")
+        f.write(f"heads {model.HEADS}\n")
+        f.write(f"batch {batch}\n")
+        for name, shape in model.param_spec():
+            dims = "x".join(str(d) for d in shape)
+            f.write(f"param {name} {dims}\n")
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+    for fn, kw in [
+        (export_quant_demo, {}),
+        (export_init, {}),
+        (export_train_step, {"integer": False, "batch": args.batch}),
+        (export_train_step, {"integer": True, "batch": args.batch}),
+    ]:
+        path = fn(out_dir, **kw)
+        print(f"wrote {path} ({os.path.getsize(path)} bytes)")
+    print(f"wrote {write_manifest(out_dir, args.batch)}")
+    # The Makefile's sentinel target.
+    sentinel = os.path.abspath(args.out)
+    if not os.path.exists(sentinel):
+        with open(sentinel, "w") as f:
+            f.write("see train_step_{int8,fp32}.hlo.txt\n")
+
+
+if __name__ == "__main__":
+    main()

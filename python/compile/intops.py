@@ -1,0 +1,133 @@
+"""L2 integer ops: ``custom_vjp`` wrappers that run the paper's
+representation mapping + integer GEMM (the L1 Pallas kernels) in both the
+forward and backward pass, with fresh stochastic-rounding draws per
+mapping event (Remark 1: the fixed-point gradient stays unbiased).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.igemm import igemm_pallas
+from .kernels.quant import quantize_pallas
+from .kernels import ref
+
+PBITS = 7  # int8
+
+
+def _bits(key, n):
+    """uint32 SR draws from a jax PRNG key."""
+    return jax.random.bits(key, (n,), jnp.uint32)
+
+
+def _quant(x, key, pbits=PBITS):
+    """Map a tensor through the Pallas quantization kernel (SR)."""
+    flat = x.reshape(-1)
+    payload, e_max = quantize_pallas(flat, _bits(key, flat.shape[0]), pbits=pbits)
+    return payload.reshape(x.shape), ref.scale_exp(e_max, pbits)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def qmatmul(a, b, key):
+    """Integer matmul ``a [m×k] · b [k×n]`` under the representation
+    mapping: int8 payloads, int32 accumulation, exponents add; SR in both
+    passes. Differentiable via the integer backward (Eq. 15)."""
+    y, _ = _qmatmul_fwd(a, b, key)
+    return y
+
+
+def _qmatmul_fwd(a, b, key):
+    k1, k2 = jax.random.split(key)
+    pa, ka = _quant(a, k1)
+    pb, kb = _quant(b, k2)
+    acc = igemm_pallas(pa, pb)
+    y = jnp.ldexp(acc.astype(jnp.float32), ka + kb)
+    return y, (a, b, key)
+
+
+def _qmatmul_bwd(res, g):
+    a, b, key = res
+    kg1, kg2, ka1, kb1 = jax.random.split(jax.random.fold_in(key, 1), 4)
+    # ∂a = ĝ·b̂ᵀ ; ∂b = âᵀ·ĝ — integer GEMMs on freshly-mapped operands.
+    pg, kgk = _quant(g, kg1)
+    pg2, kgk2 = _quant(g, kg2)
+    pb, kbk = _quant(b, kb1)
+    pa, kak = _quant(a, ka1)
+    ga_acc = igemm_pallas(pg, pb.T)
+    gb_acc = igemm_pallas(pa.T, pg2)
+    ga = jnp.ldexp(ga_acc.astype(jnp.float32), kgk + kbk)
+    gb = jnp.ldexp(gb_acc.astype(jnp.float32), kak + kgk2)
+    return ga, gb, None
+
+
+qmatmul.defvjp(_qmatmul_fwd, _qmatmul_bwd)
+
+
+@jax.custom_vjp
+def qdq_sr(x, key):
+    """Straight-through quantize–dequantize (used for residual joins and
+    attention operands): SR forward, identity-mapped SR gradient."""
+    flat = x.reshape(-1)
+    payload, e_max = quantize_pallas(flat, _bits(key, flat.shape[0]), pbits=PBITS)
+    return ref.dequantize_ref(payload, e_max, PBITS).reshape(x.shape)
+
+
+def _qdq_fwd(x, key):
+    return qdq_sr(x, key), key
+
+
+def _qdq_bwd(key, g):
+    # The gradient itself passes through the representation mapping.
+    flat = g.reshape(-1)
+    payload, e_max = quantize_pallas(
+        flat, _bits(jax.random.fold_in(key, 2), flat.shape[0]), pbits=PBITS
+    )
+    return ref.dequantize_ref(payload, e_max, PBITS).reshape(g.shape), None
+
+
+qdq_sr.defvjp(_qdq_fwd, _qdq_bwd)
+
+
+def qlinear(x, w, b, key):
+    """Integer linear layer ``y = x·Wᵀ + b`` (W stored [out × in]).
+
+    The GEMM is the Pallas int8 kernel; the bias joins after the inverse
+    mapping (the Rust coordinator's accumulator-domain variant is
+    bit-level equivalent up to one rounding)."""
+    rows = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = qmatmul(x2, w.T, key)
+    return (y + b).reshape(*rows, w.shape[0])
+
+
+def int16_sgd_update(w, m, g, lr, momentum, weight_decay, key):
+    """Integer SGD step (Remark 5): momentum + update computed on values
+    that live on int16 dynamic fixed-point grids, with SR re-mapping of the
+    state each step (E{ŵ'} = w', Appendix A.4)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    # int16 mapping via the jnp reference (the Pallas kernel's container is
+    # int8; int16 state uses the same bit algebra in jnp — still integer).
+    def q16r(t, kk):
+        flat = t.reshape(-1)
+        n = flat.shape[0]
+        rand = jax.random.bits(kk, (n,), jnp.uint32)
+        sign, e, mant = ref._unpack(flat)
+        e_max = jnp.maximum(jnp.max(e), 1)
+        shift = jnp.minimum((e_max - e).astype(jnp.uint32), jnp.uint32(31))
+        kbits = jnp.uint32(ref.FULL_MANT_BITS - 15)
+        total = shift + kbits
+        mask = (jnp.uint32(1) << jnp.minimum(total, jnp.uint32(30))) - jnp.uint32(1)
+        q = (mant >> jnp.minimum(total, jnp.uint32(30))) + (
+            (rand & mask) < (mant & mask)
+        ).astype(jnp.uint32)
+        q = jnp.where(shift >= ref.FULL_MANT_BITS, jnp.uint32(0), q)
+        q = jnp.minimum(q, jnp.uint32((1 << 15) - 1)).astype(jnp.int32)
+        q = jnp.where(sign > 0, -q, q)
+        return jnp.ldexp(q.astype(jnp.float32), e_max - 126 - 15).reshape(t.shape)
+
+    g_hat = q16r(g + weight_decay * w, k1)
+    m_new = q16r(momentum * m + g_hat, k2)
+    w_new = q16r(w - lr * m_new, k3)
+    return w_new, m_new

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: int8 GEMM with int32 accumulation (§3.3, Figure 2).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the MXU consumes
+``(bm × bk) · (bk × bn)`` int8 tiles with an int32 accumulator tile that
+stays resident across the k-grid (the paper's int16-product/int32-accum
+pipeline, re-expressed as a systolic matmul). VMEM per step at the default
+128³ blocks: 2·16 KiB of int8 + 64 KiB of int32 ≈ 96 KiB ≪ 16 MiB.
+``interpret=True`` for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM, BN, BK = 128, 128, 128
+
+
+def _igemm_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        a_ref[...].astype(jnp.int32),
+        b_ref[...].astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _pad2(x, bm, bn):
+    m, n = x.shape
+    pm = (-m) % bm
+    pn = (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def igemm_pallas(pa, pb, *, bm: int = BM, bn: int = BN, bk: int = BK):
+    """``pa [m×k] int8 · pb [k×n] int8 → [m×n] int32`` via the Pallas kernel."""
+    m, k = pa.shape
+    k2, n = pb.shape
+    assert k == k2, f"inner dims differ: {k} vs {k2}"
+    bm = min(bm, max(8, m))
+    bn = min(bn, max(8, n))
+    bk = min(bk, max(8, k))
+    a = _pad2(jnp.asarray(pa, jnp.int8), bm, bk)
+    b = _pad2(jnp.asarray(pb, jnp.int8), bk, bn)
+    gm, gk = a.shape[0] // bm, a.shape[1] // bk
+    gn = b.shape[1] // bn
+    out = pl.pallas_call(
+        _igemm_kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], b.shape[1]), jnp.int32),
+        interpret=True,
+    )(a, b)
+    return out[:m, :n]

@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: the linear fixed-point mapping (§3.1, Figure 1a).
+
+TPU mapping of the paper's GPU-emulator bit plumbing (DESIGN.md
+§Hardware-Adaptation): the tensor is processed in VMEM-sized 1-D blocks;
+pass 1 reduces per-block maximum exponents (the two-pass analogue of a
+warp-shuffle max), pass 2 does the bitcast → align → stochastic-round map
+on the VPU. ``interpret=True`` everywhere — the CPU PJRT client cannot run
+Mosaic custom-calls; the BlockSpec structure is what carries to real TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK = 512
+
+
+def _pad_to(x, mult):
+    n = x.shape[0]
+    rem = (-n) % mult
+    if rem:
+        x = jnp.pad(x, (0, rem))
+    return x, n
+
+
+def _expmax_kernel(x_ref, o_ref):
+    """Per-block maximum biased exponent."""
+    bits = x_ref[...].view(jnp.uint32)
+    e = ((bits >> 23) & 0xFF).astype(jnp.int32)
+    o_ref[0] = jnp.maximum(jnp.max(e), 1)
+
+
+def _map_kernel(x_ref, emax_ref, rand_ref, o_ref, *, pbits, stochastic):
+    """Align mantissas to the shared exponent and round to ``pbits`` bits."""
+    bits = x_ref[...].view(jnp.uint32)
+    sign = bits >> 31
+    e = jnp.maximum(((bits >> 23) & 0xFF).astype(jnp.int32), 1)
+    frac = bits & jnp.uint32(0x7FFFFF)
+    mant = jnp.where(((bits >> 23) & 0xFF) > 0, frac | jnp.uint32(0x800000), frac)
+    e_max = emax_ref[0]
+    shift = (e_max - e).astype(jnp.uint32)
+    k = jnp.uint32(ref.FULL_MANT_BITS - pbits)
+    dead = shift >= ref.FULL_MANT_BITS
+    shift_c = jnp.minimum(shift, jnp.uint32(31))
+    if stochastic:
+        rand = rand_ref[...]
+        total = shift_c + k
+        mask_one = (jnp.uint32(1) << jnp.minimum(total, jnp.uint32(30))) - jnp.uint32(1)
+        q_one = (mant >> jnp.minimum(total, jnp.uint32(30))) + (
+            (rand & mask_one) < (mant & mask_one)
+        ).astype(jnp.uint32)
+        aligned = mant >> shift_c
+        mask_two = (jnp.uint32(1) << k) - jnp.uint32(1)
+        q_two = (aligned >> k) + ((rand & mask_two) < (aligned & mask_two)).astype(
+            jnp.uint32
+        )
+        q = jnp.where(total < 31, q_one, q_two)
+        q = jnp.where(dead, jnp.uint32(0), q)
+    else:
+        aligned = jnp.where(dead, jnp.uint32(0), mant >> shift_c)
+        q = (aligned >> k) + ((aligned >> (k - jnp.uint32(1))) & jnp.uint32(1))
+    maxp = jnp.uint32((1 << pbits) - 1)
+    q = jnp.minimum(q, maxp).astype(jnp.int32)
+    o_ref[...] = jnp.where(sign > 0, -q, q).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("pbits", "stochastic"))
+def quantize_pallas(x, rand, *, pbits: int = 7, stochastic: bool = True):
+    """Quantize a tensor with the Pallas mapping kernel.
+
+    ``x`` any shape f32; ``rand`` uint32 of the same size (ignored when
+    ``stochastic=False``). Returns ``(payload int8 flat, e_max int32)``.
+    """
+    flat = jnp.asarray(x, jnp.float32).reshape(-1)
+    flat_p, n = _pad_to(flat, BLOCK)
+    rand_p, _ = _pad_to(jnp.asarray(rand, jnp.uint32).reshape(-1), BLOCK)
+    nblocks = flat_p.shape[0] // BLOCK
+    # Pass 1: block maxima (Pallas reduction), then a tiny jnp max.
+    block_max = pl.pallas_call(
+        _expmax_kernel,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nblocks,), jnp.int32),
+        interpret=True,
+    )(flat_p)
+    e_max = jnp.maximum(jnp.max(block_max), 1)
+    # Pass 2: the mapping itself.
+    payload = pl.pallas_call(
+        functools.partial(_map_kernel, pbits=pbits, stochastic=stochastic),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((flat_p.shape[0],), jnp.int8),
+        interpret=True,
+    )(flat_p, e_max.reshape(1), rand_p)
+    return payload[:n], e_max

@@ -1,0 +1,144 @@
+"""Pure-jnp oracle for the dynamic fixed-point representation mapping.
+
+Bit-exact mirror of the Rust substrate (``rust/src/dfp``):
+
+* ``splitmix64`` / ``hash2``  — the counter-based stochastic-rounding
+  stream (same constants, same outputs, so golden vectors transfer).
+* ``quantize_ref``            — linear fixed-point mapping (§3.1):
+  unpack sign/exponent/mantissa, align to the tensor-wide max exponent,
+  stochastically round 24→pbits bits (Appendix A.1 / Figure 4).
+* ``dequantize_ref``          — the non-linear inverse mapping (§3.2):
+  int→float conversion *is* the LZA normalization.
+* ``igemm_ref``               — int8 GEMM with int32 accumulation and
+  exponent addition (§3.3 / Figure 2).
+
+This is the correctness signal for the Pallas kernels: pytest asserts
+``kernel == ref`` across shapes, dtypes and bit-widths.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+FULL_MANT_BITS = 24
+
+
+# --------------------------------------------------------------------------
+# Counter-based RNG (mirrors rust/src/dfp/rng.rs exactly)
+# --------------------------------------------------------------------------
+
+def splitmix64(z: np.ndarray) -> np.ndarray:
+    """SplitMix64 finalizer on uint64 arrays."""
+    with np.errstate(over="ignore"):
+        z = (np.asarray(z, np.uint64) + np.uint64(0x9E3779B97F4A7C15)).astype(np.uint64)
+        z = ((z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)).astype(np.uint64)
+        z = ((z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)).astype(np.uint64)
+        return (z ^ (z >> np.uint64(31))).astype(np.uint64)
+
+
+def hash2(seed: int, index: np.ndarray) -> np.ndarray:
+    """Stateless ``hash2(seed, index)`` — same stream as the Rust side."""
+    with np.errstate(over="ignore"):
+        idx = np.asarray(index, dtype=np.uint64)
+        mixed = splitmix64((idx + np.uint64(0xA0761D6478BD642F)).astype(np.uint64))
+        return splitmix64(np.uint64(seed) ^ mixed)
+
+
+def sr_bits(seed: int, n: int) -> np.ndarray:
+    """Low 32 bits of ``hash2(seed, 0..n)`` — the per-element SR draws."""
+    return (hash2(seed, np.arange(n, dtype=np.uint64)) & np.uint64(0xFFFFFFFF)).astype(
+        np.uint32
+    )
+
+
+# --------------------------------------------------------------------------
+# Representation mapping (mirrors rust/src/dfp/map.rs)
+# --------------------------------------------------------------------------
+
+def _unpack(x):
+    """Unpack f32 → (sign, exp∈[1,254], 24-bit mantissa) as integer arrays."""
+    bits = jnp.asarray(x, jnp.float32).view(jnp.uint32)
+    sign = (bits >> 31).astype(jnp.int32)
+    e = ((bits >> 23) & 0xFF).astype(jnp.int32)
+    frac = (bits & 0x7FFFFF).astype(jnp.uint32)
+    mant = jnp.where(e > 0, frac | jnp.uint32(0x800000), frac)
+    e = jnp.maximum(e, 1)
+    return sign, e, mant
+
+
+def shared_exponent(x) -> jnp.ndarray:
+    """Tensor-wide max biased exponent (≥1; the zero tensor maps to 1)."""
+    _, e, _ = _unpack(x)
+    return jnp.maximum(jnp.max(e), 1)
+
+
+def _sr(m, k, rand):
+    """Stochastic rounding of ``k`` low bits given uint32 random draws."""
+    mask = (jnp.uint32(1) << k) - jnp.uint32(1)
+    low = m & mask
+    hi = m >> k
+    return hi + ((rand & mask) < low).astype(jnp.uint32)
+
+
+def _nearest(m, k):
+    return (m >> k) + ((m >> (k - jnp.uint32(1))) & jnp.uint32(1))
+
+
+def quantize_ref(x, pbits: int, rand=None, e_max=None):
+    """Linear fixed-point mapping. ``rand`` (uint32 per element) selects
+    stochastic rounding; ``None`` = round-to-nearest. Returns
+    ``(payload int8, e_max int32 scalar)``."""
+    x = jnp.asarray(x, jnp.float32).reshape(-1)
+    sign, e, mant = _unpack(x)
+    if e_max is None:
+        e_max = jnp.maximum(jnp.max(e), 1)
+    shift = (e_max - e).astype(jnp.uint32)
+    k = jnp.uint32(FULL_MANT_BITS - pbits)
+    dead = shift >= FULL_MANT_BITS
+    shift_c = jnp.minimum(shift, jnp.uint32(31))
+    if rand is None:
+        aligned = jnp.where(dead, jnp.uint32(0), mant >> shift_c)
+        q = _nearest(aligned, k)
+    else:
+        rand = jnp.asarray(rand, jnp.uint32).reshape(-1)
+        total = shift_c + k
+        # Single-step SR of the original mantissa keeps the estimator
+        # unbiased w.r.t. the pre-alignment value when total < 31
+        # (mirrors map.rs `map_one`).
+        q_one = _sr(mant, jnp.minimum(total, jnp.uint32(30)), rand)
+        q_two = _sr(mant >> shift_c, k, rand)
+        q = jnp.where(total < 31, q_one, q_two)
+        q = jnp.where(dead, jnp.uint32(0), q)
+    maxp = jnp.uint32((1 << pbits) - 1)
+    q = jnp.minimum(q, maxp).astype(jnp.int32)
+    payload = jnp.where(sign > 0, -q, q).astype(jnp.int8)
+    return payload, jnp.asarray(e_max, jnp.int32)
+
+
+def scale_exp(e_max, pbits: int):
+    """Power-of-two exponent of the payload grid: ``e_max − 126 − pbits``."""
+    return e_max - 126 - pbits
+
+
+def dequantize_ref(payload, e_max, pbits: int):
+    """Inverse mapping: ``payload × 2^(e_max−126−pbits)`` (ldexp = LZA)."""
+    k = scale_exp(e_max, pbits)
+    return jnp.ldexp(payload.astype(jnp.float32), k)
+
+
+def igemm_ref(pa, pb, ka, kb):
+    """Integer GEMM on payloads: int32 accumulation, exponents add.
+
+    ``pa [m×k] int8``, ``pb [k×n] int8``; returns f32 via the inverse
+    mapping with combined exponent ``ka + kb``."""
+    acc = jnp.dot(
+        pa.astype(jnp.int32), pb.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    return jnp.ldexp(acc.astype(jnp.float32), ka + kb)
+
+
+def qdq_ref(x, pbits: int, rand=None):
+    """Quantize–dequantize round trip (the per-tensor 'fake-quant' view of
+    the representation mapping) preserving the input's shape."""
+    shape = jnp.asarray(x).shape
+    payload, e_max = quantize_ref(x, pbits, rand)
+    return dequantize_ref(payload, e_max, pbits).reshape(shape)

@@ -1,0 +1,205 @@
+"""L2: integer transformer language model (the e2e workload).
+
+A decoder-only causal LM whose linear projections and attention matmuls
+run through the L1 Pallas integer kernels ([`intops.qmatmul`]); softmax
+and layer-norm stay float (the paper's ViT boundary keeps softmax float;
+our Rust substrate additionally implements integer LN — see DESIGN.md).
+The whole train step — forward, backward (integer, via custom_vjp), and
+the int16 SGD update — lowers to ONE jitted function, AOT-exported to HLO
+text and driven from the Rust coordinator with Python off the request
+path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import intops
+
+# Model configuration (scaled to the CPU budget; structure matches the
+# paper's transformer experiments).
+VOCAB = 256
+SEQ = 32
+DIM = 128
+DEPTH = 2
+HEADS = 4
+MLP_RATIO = 2
+
+
+def param_spec():
+    """Ordered (name, shape) list — the manifest the Rust runtime uses."""
+    spec = [
+        ("embed", (VOCAB, DIM)),
+        ("pos", (SEQ, DIM)),
+    ]
+    for layer in range(DEPTH):
+        spec += [
+            (f"l{layer}.ln1_g", (DIM,)),
+            (f"l{layer}.ln1_b", (DIM,)),
+            (f"l{layer}.wqkv", (3 * DIM, DIM)),
+            (f"l{layer}.bqkv", (3 * DIM,)),
+            (f"l{layer}.wproj", (DIM, DIM)),
+            (f"l{layer}.bproj", (DIM,)),
+            (f"l{layer}.ln2_g", (DIM,)),
+            (f"l{layer}.ln2_b", (DIM,)),
+            (f"l{layer}.wfc1", (MLP_RATIO * DIM, DIM)),
+            (f"l{layer}.bfc1", (MLP_RATIO * DIM,)),
+            (f"l{layer}.wfc2", (DIM, MLP_RATIO * DIM)),
+            (f"l{layer}.bfc2", (DIM,)),
+        ]
+    spec += [
+        ("lnf_g", (DIM,)),
+        ("lnf_b", (DIM,)),
+        ("head", (VOCAB, DIM)),
+    ]
+    return spec
+
+
+def init_params(key):
+    """He/GPT-style init, returned as a flat tuple in `param_spec` order."""
+    params = []
+    for name, shape in param_spec():
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_b", "bqkv", "bproj", "bfc1", "bfc2")) or ".b" in name:
+            params.append(jnp.zeros(shape, jnp.float32))
+        elif name in ("embed", "pos"):
+            params.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            fan_in = shape[-1]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) * (2.0 / fan_in) ** 0.5 * 0.5
+            )
+    return tuple(params)
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return g * (x - mu) * jax.lax.rsqrt(var + eps) + b
+
+
+def _attention(x, wqkv, bqkv, wproj, bproj, key, *, integer):
+    b, t, d = x.shape
+    dh = d // HEADS
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if integer:
+        qkv = intops.qlinear(x, wqkv, bqkv, k1)
+    else:
+        qkv = x @ wqkv.T + bqkv
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(z):
+        return z.reshape(b, t, HEADS, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q) / (dh**0.5), heads(k), heads(v)
+    if integer:
+        # Attention matmuls through the representation mapping (per-tensor
+        # scale; Q·Kᵀ and P·V as integer products).
+        q = intops.qdq_sr(q, k2)
+        k = intops.qdq_sr(k, jax.random.fold_in(k2, 1))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)  # float softmax (paper)
+    if integer:
+        p = intops.qdq_sr(p, k3)
+        v = intops.qdq_sr(v, jax.random.fold_in(k3, 1))
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+    if integer:
+        return intops.qlinear(o, wproj, bproj, k4)
+    return o @ wproj.T + bproj
+
+
+def forward(params, tokens, key, *, integer):
+    """Logits ``[B, T, VOCAB]`` for int32 token ids ``[B, T]``."""
+    it = iter(params)
+    p = {name: next(it) for name, _ in param_spec()}
+    x = p["embed"][tokens] + p["pos"][None, :, :]
+    for layer in range(DEPTH):
+        key, k1, k2 = jax.random.split(key, 3)
+        h = _layernorm(x, p[f"l{layer}.ln1_g"], p[f"l{layer}.ln1_b"])
+        x = x + _attention(
+            h,
+            p[f"l{layer}.wqkv"],
+            p[f"l{layer}.bqkv"],
+            p[f"l{layer}.wproj"],
+            p[f"l{layer}.bproj"],
+            k1,
+            integer=integer,
+        )
+        h = _layernorm(x, p[f"l{layer}.ln2_g"], p[f"l{layer}.ln2_b"])
+        if integer:
+            k2a, k2b = jax.random.split(k2)
+            h = intops.qlinear(h, p[f"l{layer}.wfc1"], p[f"l{layer}.bfc1"], k2a)
+            h = jax.nn.gelu(h)
+            h = intops.qlinear(h, p[f"l{layer}.wfc2"], p[f"l{layer}.bfc2"], k2b)
+        else:
+            h = jax.nn.gelu(h @ p[f"l{layer}.wfc1"].T + p[f"l{layer}.bfc1"])
+            h = h @ p[f"l{layer}.wfc2"].T + p[f"l{layer}.bfc2"]
+        x = x + h
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    key, kh = jax.random.split(key)
+    if integer:
+        return intops.qlinear(x, p["head"], jnp.zeros((VOCAB,), jnp.float32), kh)
+    return x @ p["head"].T
+
+
+def loss_fn(params, tokens, targets, key, *, integer):
+    logits = forward(params, tokens, key, integer=integer)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def make_train_step(*, integer):
+    """Build the jitted train step: (params…, m…, tokens, targets, seed,
+    lr) → (params…, m…, loss). Momentum state is carried explicitly so the
+    whole optimizer lives inside the AOT graph."""
+
+    def step(params, moments, tokens, targets, seed, lr):
+        key = jax.random.PRNGKey(seed)
+        kf, ku = jax.random.split(key)
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, tokens, targets, kf, integer=integer
+        )
+        new_p = []
+        new_m = []
+        for i, (w, m, g) in enumerate(zip(params, moments, grads)):
+            if integer:
+                w2, m2 = intops.int16_sgd_update(
+                    w, m, g, lr, 0.9, 1e-4, jax.random.fold_in(ku, i)
+                )
+            else:
+                g = g + 1e-4 * w
+                m2 = 0.9 * m + g
+                w2 = w - lr * m2
+            new_p.append(w2)
+            new_m.append(m2)
+        return tuple(new_p), tuple(new_m), loss
+
+    return step
+
+
+def flatten_step(*, integer):
+    """Flatten the step to positional args for AOT export: inputs are
+    ``2·P + 4`` arrays, outputs ``2·P + 1``."""
+    nparams = len(param_spec())
+    step = make_train_step(integer=integer)
+
+    def flat(*args):
+        params = args[:nparams]
+        moments = args[nparams : 2 * nparams]
+        tokens, targets, seed, lr = args[2 * nparams :]
+        p, m, loss = step(params, moments, tokens, targets, seed, lr)
+        # Keep `seed` live in the fp32 graph (no SR consumes it there):
+        # a runtime-dependent select that always adds 0.0 — without it the
+        # HLO exporter prunes the parameter and the Rust caller's argument
+        # count no longer matches.
+        loss = loss + jnp.where(seed < jnp.int32(-2147483647), 1.0, 0.0)
+        return (*p, *m, loss)
+
+    return flat

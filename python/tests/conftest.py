@@ -1,0 +1,6 @@
+"""Make `pytest python/tests/` work from the repo root by putting the
+`python/` directory (the `compile` package's parent) on sys.path."""
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

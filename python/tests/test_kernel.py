@@ -1,0 +1,164 @@
+"""Kernel-vs-reference correctness: the CORE signal for L1.
+
+The Pallas kernels must agree exactly (integer outputs) with the pure-jnp
+oracle across shapes, bit-widths and rounding modes, and the oracle itself
+must satisfy the paper's statistical properties (unbiasedness, error
+bounds).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.igemm import igemm_pallas
+from compile.kernels.quant import quantize_pallas
+
+RNG = np.random.default_rng(42)
+
+
+def rand_f32(n, scale=1.0):
+    return (RNG.normal(size=n) * scale).astype(np.float32)
+
+
+# -- cross-language RNG golden vectors (mirrors rust dfp::rng tests) -------
+
+def test_hash2_golden():
+    assert int(ref.hash2(3, np.uint64(9))) == 0xF93CFA476D846C32
+    assert int(ref.hash2(0, np.uint64(0))) == 0xB1A6D212199B7394
+    assert int(ref.hash2(12345, np.uint64(678910))) == 0x0EAB021472799AA3
+
+
+# -- quantization kernel vs oracle ----------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 512, 513, 2048, 5000])
+@pytest.mark.parametrize("pbits", [7, 6, 5, 4, 3])
+def test_quant_kernel_matches_ref_stochastic(n, pbits):
+    x = rand_f32(n)
+    rand = ref.sr_bits(seed=n * 31 + pbits, n=n)
+    pk, ek = quantize_pallas(x, rand, pbits=pbits)
+    pr, er = ref.quantize_ref(x, pbits, rand)
+    assert int(ek) == int(er)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+
+
+@pytest.mark.parametrize("n", [64, 1000])
+def test_quant_kernel_matches_ref_nearest(n):
+    x = rand_f32(n, scale=3.0)
+    pk, ek = quantize_pallas(x, np.zeros(n, np.uint32), pbits=7, stochastic=False)
+    pr, er = ref.quantize_ref(x, 7, None)
+    assert int(ek) == int(er)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+
+
+@pytest.mark.parametrize(
+    "special",
+    [
+        np.zeros(16, np.float32),
+        np.full(16, 1e-30, np.float32),  # deep subnormal band
+        np.array([1.0, -1.0, 0.5, -0.25] * 4, np.float32),  # exact grid
+        np.full(16, 3.4e38, np.float32),  # near f32 max
+    ],
+)
+def test_quant_edge_tensors(special):
+    rand = ref.sr_bits(1, special.size)
+    pk, ek = quantize_pallas(special, rand, pbits=7)
+    pr, er = ref.quantize_ref(special, 7, rand)
+    assert int(ek) == int(er)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+
+
+def test_quant_error_bounded_by_ulp():
+    x = rand_f32(512)
+    p, e = ref.quantize_ref(x, 7, None)
+    back = np.asarray(ref.dequantize_ref(p, e, 7))
+    ulp = float(jnp.ldexp(1.0, ref.scale_exp(e, 7)))
+    assert np.max(np.abs(back - x)) <= ulp + 1e-12
+
+
+def test_quant_sr_unbiased():
+    # E{x̂} = x over independent SR draws (Appendix A.1).
+    x = np.array([0.3, -0.7, 0.011, 0.77, -0.123], np.float32)
+    acc = np.zeros_like(x, np.float64)
+    trials = 4000
+    for s in range(trials):
+        rand = ref.sr_bits(s, x.size)
+        p, e = ref.quantize_ref(x, 7, rand)
+        acc += np.asarray(ref.dequantize_ref(p, e, 7), np.float64)
+    mean = acc / trials
+    ulp = float(jnp.ldexp(1.0, ref.scale_exp(np.int32(127), 7)))
+    np.testing.assert_allclose(mean, x, atol=4 * ulp / np.sqrt(trials) + 1e-6)
+
+
+def test_exact_grid_values_are_exact():
+    x = np.array([1.0, 0.5, -0.25, 0.0, 1.984375], np.float32)
+    for s in range(4):
+        rand = ref.sr_bits(s, x.size)
+        p, e = ref.quantize_ref(x, 7, rand)
+        back = np.asarray(ref.dequantize_ref(p, e, 7))
+        np.testing.assert_array_equal(back, x)
+
+
+# -- integer GEMM kernel ----------------------------------------------------
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(1, 1, 1), (3, 5, 7), (16, 16, 16), (37, 129, 65), (128, 256, 64)],
+)
+def test_igemm_matches_numpy(m, k, n):
+    a = RNG.integers(-127, 128, size=(m, k)).astype(np.int8)
+    b = RNG.integers(-127, 128, size=(k, n)).astype(np.int8)
+    acc = np.asarray(igemm_pallas(a, b))
+    want = a.astype(np.int32) @ b.astype(np.int32)
+    np.testing.assert_array_equal(acc, want)
+
+
+def test_igemm_accumulates_int32_without_overflow():
+    # Max-magnitude payloads at k=512: |acc| ≤ 512·127² ≈ 2^23 — exact.
+    k = 512
+    a = np.full((4, k), 127, np.int8)
+    b = np.full((k, 4), 127, np.int8)
+    acc = np.asarray(igemm_pallas(a, b))
+    assert (acc == k * 127 * 127).all()
+
+
+def test_quant_gemm_roundtrip_close_to_float():
+    m, k, n = 24, 48, 16
+    a = rand_f32(m * k).reshape(m, k)
+    b = rand_f32(k * n).reshape(k, n) * 0.1
+    pa, ea = ref.quantize_ref(a, 7, None)
+    pb, eb = ref.quantize_ref(b, 7, None)
+    got = np.asarray(
+        ref.igemm_ref(
+            np.asarray(pa).reshape(m, k),
+            np.asarray(pb).reshape(k, n),
+            ref.scale_exp(ea, 7),
+            ref.scale_exp(eb, 7),
+        )
+    )
+    want = a @ b
+    bound = (
+        k
+        * (np.abs(a).max() * float(jnp.ldexp(1.0, ref.scale_exp(eb, 7)))
+           + np.abs(b).max() * float(jnp.ldexp(1.0, ref.scale_exp(ea, 7))))
+    )
+    assert np.max(np.abs(got - want)) <= bound
+
+
+# -- hypothesis-style randomized sweep (shapes × dtypes × bit-widths) -------
+
+def test_randomized_shape_sweep():
+    # A seeded sweep standing in for hypothesis (not installed offline):
+    # 40 random (shape, pbits, mode) combinations, kernel == ref each time.
+    for trial in range(40):
+        n = int(RNG.integers(1, 3000))
+        pbits = int(RNG.integers(3, 8))
+        stochastic = bool(RNG.integers(0, 2))
+        scale = float(10.0 ** RNG.integers(-20, 20))
+        x = rand_f32(n, scale=scale)
+        rand = ref.sr_bits(trial, n)
+        pk, ek = quantize_pallas(x, rand, pbits=pbits, stochastic=stochastic)
+        pr, er = ref.quantize_ref(x, pbits, rand if stochastic else None)
+        assert int(ek) == int(er), f"trial {trial}"
+        np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr), err_msg=f"trial {trial}")

@@ -1,0 +1,111 @@
+"""L2 model tests: shapes, gradient flow, integer-vs-float trajectory,
+and the int16 SGD update semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import intops, model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0))
+
+
+def toy_batch(bs=2, seed=0):
+    key = jax.random.PRNGKey(seed)
+    tok = jax.random.randint(key, (bs, model.SEQ), 0, model.VOCAB, jnp.int32)
+    tgt = jnp.roll(tok, -1, axis=1)
+    return tok, tgt
+
+
+def test_param_spec_matches_init(params):
+    spec = model.param_spec()
+    assert len(params) == len(spec)
+    for p, (_, shape) in zip(params, spec):
+        assert p.shape == shape
+
+
+@pytest.mark.parametrize("integer", [False, True])
+def test_forward_shapes(params, integer):
+    tok, _ = toy_batch()
+    logits = model.forward(params, tok, jax.random.PRNGKey(1), integer=integer)
+    assert logits.shape == (2, model.SEQ, model.VOCAB)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_int_logits_close_to_float(params):
+    tok, _ = toy_batch()
+    lf = model.forward(params, tok, jax.random.PRNGKey(1), integer=False)
+    li = model.forward(params, tok, jax.random.PRNGKey(1), integer=True)
+    # int8 mapping noise at init scale: logits track within a coarse band.
+    scale = float(jnp.abs(lf).max())
+    assert float(jnp.abs(lf - li).max()) < 0.35 * max(scale, 1.0)
+
+
+def test_qmatmul_gradients_unbiased():
+    a = jnp.array([[0.3, -0.5], [0.11, 0.77]], jnp.float32)
+    b = jnp.array([[0.2, 0.4], [-0.33, 0.25]], jnp.float32)
+
+    def loss(a, b, key):
+        return jnp.sum(intops.qmatmul(a, b, key) ** 2) * 0.5
+
+    gw = jax.grad(lambda a, b: jnp.sum((a @ b) ** 2) * 0.5, argnums=0)(a, b)
+    trials = 300
+    acc = np.zeros_like(np.asarray(gw))
+    for s in range(trials):
+        g = jax.grad(loss, argnums=0)(a, b, jax.random.PRNGKey(s))
+        acc += np.asarray(g)
+    mean = acc / trials
+    # The integer gradient is itself a noisy product of quantized tensors;
+    # its mean must land near the analytic gradient.
+    np.testing.assert_allclose(mean, np.asarray(gw), atol=0.05 * float(jnp.abs(gw).max()))
+
+
+@pytest.mark.parametrize("integer", [False, True])
+def test_train_step_decreases_loss(params, integer):
+    step = jax.jit(model.flatten_step(integer=integer))
+    moments = tuple(jnp.zeros_like(p) for p in params)
+    tok, tgt = toy_batch(bs=2, seed=3)
+    state = (*params, *moments)
+    losses = []
+    for i in range(8):
+        out = step(*state, tok, tgt, jnp.int32(i), jnp.float32(0.05))
+        state = out[:-1]
+        losses.append(float(out[-1]))
+    # Same batch repeated — loss must fall substantially.
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_int_trajectory_tracks_float(params):
+    # Figure 3(c) at L2 granularity: identical batches, both arithmetics.
+    tok, tgt = toy_batch(bs=2, seed=5)
+    moments = tuple(jnp.zeros_like(p) for p in params)
+    traj = {}
+    for integer in (False, True):
+        step = jax.jit(model.flatten_step(integer=integer))
+        state = (*params, *moments)
+        ls = []
+        for i in range(6):
+            out = step(*state, tok, tgt, jnp.int32(i), jnp.float32(0.05))
+            state = out[:-1]
+            ls.append(float(out[-1]))
+        traj[integer] = ls
+    for lf, li in zip(traj[False], traj[True]):
+        assert abs(lf - li) < 0.35 * max(abs(lf), 1.0), traj
+
+
+def test_int16_sgd_update_unbiased():
+    w = jnp.array([0.5, -0.25, 0.123], jnp.float32)
+    m = jnp.zeros_like(w)
+    g = jnp.array([0.1, -0.2, 0.05], jnp.float32)
+    want_m = 0.0 * m + (g + 1e-2 * w)
+    want_w = w - 0.1 * want_m
+    acc = np.zeros(3)
+    trials = 500
+    for s in range(trials):
+        w2, _ = intops.int16_sgd_update(w, m, g, 0.1, 0.0, 1e-2, jax.random.PRNGKey(s))
+        acc += np.asarray(w2)
+    np.testing.assert_allclose(acc / trials, np.asarray(want_w), atol=2e-4)

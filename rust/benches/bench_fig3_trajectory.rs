@@ -1,0 +1,83 @@
+//! Figure 3 + Theorem 1 regeneration.
+//!
+//! * Fig 3(c): loss trajectories of float vs fully-integer training on the
+//!   same model/data/seed — reports max and mean trajectory deviation.
+//! * Fig 3(a)/(b): landscape convexity fractions (float vs int8 probes).
+//! * Theorem 1 / Remark 3: measured optimality gaps on the strongly-convex
+//!   quadratic, vs the theoretical bound, at two learning rates.
+
+use intrain::data::synth_images::SynthImages;
+use intrain::models::resnet_tiny;
+use intrain::nn::Arith;
+use intrain::optim::LrSchedule;
+use intrain::train::convex::{run_gap, theoretical_gap, QuadCfg};
+use intrain::train::experiments::{run_classification, Budget, NetKind};
+use intrain::train::landscape::probe;
+use intrain::train::trainer::{TrainConfig, Trainer};
+use intrain::util::bench::{row, section};
+
+fn main() {
+    section("Figure 3(c): loss trajectory, float vs int8 (same seed/data)");
+    let budget = Budget::small();
+    let rf = run_classification(NetKind::Resnet, 10, Arith::Float, &budget, 3);
+    let ri = run_classification(NetKind::Resnet, 10, Arith::int8(), &budget, 3);
+    let mut max_dev = 0f32;
+    let mut mean_dev = 0f64;
+    for (a, b) in rf.step_loss.iter().zip(&ri.step_loss) {
+        max_dev = max_dev.max((a - b).abs());
+        mean_dev += (a - b).abs() as f64;
+    }
+    mean_dev /= rf.step_loss.len().max(1) as f64;
+    for (e, (lf, li)) in rf.epoch_loss.iter().zip(&ri.epoch_loss).enumerate() {
+        row(&[("epoch", e.to_string()), ("float", format!("{lf:.4}")), ("int8", format!("{li:.4}"))]);
+    }
+    row(&[
+        ("trajectory max |Δ|", format!("{max_dev:.4}")),
+        ("mean |Δ|", format!("{mean_dev:.4}")),
+        ("float top1", format!("{:.4}", rf.final_top1)),
+        ("int8 top1", format!("{:.4}", ri.final_top1)),
+    ]);
+
+    section("Figure 3(a)/(b): loss-landscape convexity around w*");
+    let train = SynthImages::new(400, 10, 3, 16, 0.25, 1, 100);
+    let mut model = resnet_tiny(10, 3, 16, Arith::Float, 3);
+    let mut opt = intrain::optim::FloatSgd::new(0.9, 1e-4);
+    let cfg = TrainConfig {
+        epochs: 4,
+        batch: 32,
+        schedule: LrSchedule::Constant(0.05),
+        ..Default::default()
+    };
+    Trainer { model: &mut model, opt: &mut opt, cfg, dense: false }.run(&train, &train);
+    let lf = probe(&mut model, &train, 64, 9, 0.4, 7);
+    let mut mi = resnet_tiny(10, 3, 16, Arith::int8(), 3);
+    {
+        let src = model.params();
+        let mut dst = mi.params();
+        for (d, s) in dst.iter_mut().zip(src) {
+            d.data.copy_from_slice(&s.data);
+        }
+    }
+    use intrain::nn::Layer;
+    let li = probe(&mut mi, &train, 64, 9, 0.4, 7);
+    row(&[
+        ("float bowl fraction", format!("{:.3}", lf.bowl_fraction())),
+        ("int8 bowl fraction", format!("{:.3}", li.bowl_fraction())),
+        ("float center", format!("{:.4}", lf.center())),
+        ("int8 center", format!("{:.4}", li.center())),
+    ]);
+
+    section("Theorem 1 / Remark 3: optimality gap (strongly convex quadratic)");
+    for lr in [0.05f32, 0.01] {
+        let cfg = QuadCfg { lr, steps: 3000, ..Default::default() };
+        let gf = run_gap(&cfg, false);
+        let gi = run_gap(&cfg, true);
+        row(&[
+            ("lr", format!("{lr}")),
+            ("float gap", format!("{:.4}", gf.gap)),
+            ("int8 gap", format!("{:.4}", gi.gap)),
+            ("bound αLM/2c", format!("{:.4}", theoretical_gap(&cfg))),
+        ]);
+    }
+    println!("\nPaper shape: int8 trajectory tracks float; both landscapes are\nlocally convex bowls; the int gap exceeds float only by the M^q term\nand shrinks with the learning rate.");
+}

@@ -1,0 +1,99 @@
+//! §Perf: hot-path micro/meso benchmarks — the numbers tracked in
+//! EXPERIMENTS.md §Perf.
+//!
+//! * quantize (linear fixed-point mapping) throughput, SR and nearest;
+//! * int8 GEMM throughput (GMAC/s) across sizes, vs the f32 GEMM;
+//! * integer conv2d, batch-norm fwd+bwd;
+//! * full training-step time for ResNet-tiny (int8 vs fp32);
+//! * integer SGD update throughput.
+
+use intrain::dfp::gemm::igemm_into;
+use intrain::dfp::{quantize, RoundMode};
+use intrain::models::resnet_tiny;
+use intrain::nn::batchnorm::batchnorm;
+use intrain::nn::qmat::{fgemm, MatKind};
+use intrain::nn::{Arith, Ctx, Layer, Param, Tensor};
+use intrain::optim::{IntSgd, Optimizer};
+use intrain::util::bench::{bench, row, section};
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = intrain::dfp::rng::Rng::new(seed);
+    (0..n).map(|_| rng.next_gaussian()).collect()
+}
+
+fn main() {
+    section("quantize (linear fixed-point mapping)");
+    for n in [1 << 14, 1 << 18, 1 << 20] {
+        let xs = randv(n, 1);
+        let r = bench(&format!("quantize/sr/{n}"), 0.4, || {
+            std::hint::black_box(quantize(&xs, 7, RoundMode::Stochastic(7)));
+        });
+        row(&[("MB/s", format!("{:.0}", n as f64 * 4.0 / r.mean_s / 1e6))]);
+        let r = bench(&format!("quantize/nearest/{n}"), 0.4, || {
+            std::hint::black_box(quantize(&xs, 7, RoundMode::Nearest));
+        });
+        row(&[("MB/s", format!("{:.0}", n as f64 * 4.0 / r.mean_s / 1e6))]);
+    }
+
+    section("integer GEMM (int8×int8→int32) vs f32 GEMM");
+    for (m, k, n) in [(128, 128, 128), (256, 256, 256), (512, 512, 512)] {
+        let a: Vec<i8> = randv(m * k, 2).iter().map(|&x| (x * 50.0) as i8).collect();
+        let b: Vec<i8> = randv(k * n, 3).iter().map(|&x| (x * 50.0) as i8).collect();
+        let mut out = vec![0i32; m * n];
+        let macs = (m * k * n) as f64;
+        let r = bench(&format!("igemm/{m}x{k}x{n}"), 0.5, || {
+            igemm_into(&a, &b, m, k, n, &mut out);
+            std::hint::black_box(&out);
+        });
+        row(&[("GMAC/s", format!("{:.2}", macs / r.mean_s / 1e9))]);
+        let af = randv(m * k, 4);
+        let bf = randv(k * n, 5);
+        let r = bench(&format!("fgemm/{m}x{k}x{n}"), 0.5, || {
+            std::hint::black_box(fgemm(MatKind::AB, &af, &bf, (m, k, n)));
+        });
+        row(&[("GMAC/s", format!("{:.2}", macs / r.mean_s / 1e9))]);
+    }
+
+    section("integer batch-norm fwd+bwd (N=32, C=32, 16×16)");
+    let x = Tensor::new(randv(32 * 32 * 256, 6), vec![32, 32, 16, 16]);
+    for (name, arith) in [("int8", Arith::int8()), ("fp32", Arith::Float)] {
+        let mut bn = batchnorm(32, arith);
+        bench(&format!("batchnorm/{name}"), 0.5, || {
+            let mut ctx = Ctx::train(0, 0);
+            let y = bn.forward(&x, &mut ctx);
+            std::hint::black_box(bn.backward(&y, &mut ctx));
+        });
+    }
+
+    section("full training step (ResNet-tiny, batch 32, 16×16)");
+    let xb = Tensor::new(randv(32 * 3 * 256, 7), vec![32, 3, 16, 16]);
+    let targets: Vec<usize> = (0..32).map(|i| i % 10).collect();
+    for (name, arith) in [("int8", Arith::int8()), ("fp32", Arith::Float)] {
+        let mut model = resnet_tiny(10, 3, 16, arith, 3);
+        let mut opt = intrain::coordinator::driver::optimizer_for(&arith, 7);
+        let mut step = 0u64;
+        bench(&format!("train_step/{name}"), 1.0, || {
+            let mut ctx = Ctx::train(0, step);
+            let logits = model.forward(&xb, &mut ctx);
+            let (_, grad) = intrain::nn::softmax_ce::softmax_ce(&logits, &targets);
+            model.backward(&grad, &mut ctx);
+            let mut params = model.params();
+            opt.step(&mut params, 0.05, step);
+            opt.zero_grad(&mut params);
+            step += 1;
+        });
+    }
+
+    section("integer SGD update (1M params)");
+    let n = 1 << 20;
+    let mut p = Param::new(randv(n, 8), vec![n]);
+    p.grad = randv(n, 9);
+    let mut opt = IntSgd::new(0.9, 1e-4, 1);
+    let mut s = 0u64;
+    let r = bench("isgd/1M", 0.5, || {
+        let mut ps = [&mut p];
+        opt.step(&mut ps, 0.05, s);
+        s += 1;
+    });
+    row(&[("Mparam/s", format!("{:.1}", n as f64 / r.mean_s / 1e6))]);
+}

@@ -1,0 +1,23 @@
+//! Table 2 regeneration: semantic segmentation (FCN, frozen BN per the
+//! paper's protocol) — mIoU with int8 vs fp32 training on the VOC-like and
+//! COCO-like synthetic shape datasets.
+
+use intrain::nn::Arith;
+use intrain::train::experiments::{run_segmentation, Budget};
+use intrain::util::bench::{row, section};
+
+fn main() {
+    section("Table 2: Semantic segmentation — mIoU, int8 vs fp32");
+    let budget = Budget::small();
+    for (coco, name) in [(false, "voc-like"), (true, "coco-like")] {
+        let mi = run_segmentation(Arith::int8(), coco, &budget, 3);
+        let mf = run_segmentation(Arith::Float, coco, &budget, 3);
+        row(&[
+            ("dataset", name.to_string()),
+            ("int8 mIoU", format!("{mi:.2}")),
+            ("fp32 mIoU", format!("{mf:.2}")),
+            ("Δ", format!("{:+.2}", mi - mf)),
+        ]);
+    }
+    println!("\nPaper shape: int8 mIoU within a fraction of a point of float\n(74.73 vs 75.00 on VOC for DeepLab-V1 in the paper).");
+}

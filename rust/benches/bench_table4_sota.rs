@@ -1,0 +1,44 @@
+//! Table 4 regeneration: comparison with the prior-work quantized-training
+//! family. "Ours" is the representation mapping (+SR, +integer SGD); the
+//! comparators are the Appendix-A.6 symmetric uniform quantizer in the
+//! configurations the cited methods use:
+//!   [2][3]-style  — EMA-adaptive scale (precision/distribution adaptive)
+//!   [4]-style     — gradient clipping
+//!   plain A.6     — instantaneous max scale, no clipping
+//! All arms share the model, data, seed and schedule; only the quantizer
+//! differs — the paper's claim is the *ordering*.
+
+use intrain::baselines::uniform::UniformCfg;
+use intrain::nn::Arith;
+use intrain::train::experiments::{run_classification, Budget, NetKind};
+use intrain::util::bench::{row, section};
+
+fn main() {
+    section("Table 4: Comparison with SoTA quantized training (ResNet / synthetic CIFAR10)");
+    let budget = Budget::small();
+    let arms: Vec<(&str, Arith)> = vec![
+        ("ours (repr. mapping)", Arith::int8()),
+        ("uniform A.6 (plain)", Arith::Uniform(UniformCfg::int8())),
+        (
+            "uniform + grad clip [4]",
+            Arith::Uniform(UniformCfg { grad_clip: 1.0, ..UniformCfg::int8() }),
+        ),
+        (
+            "uniform + EMA scale [2][3]",
+            Arith::Uniform(UniformCfg { scale_ema: 0.1, ..UniformCfg::int8() }),
+        ),
+        ("fp32 reference", Arith::Float),
+    ];
+    for (kind, model) in [(NetKind::Resnet, "ResNet"), (NetKind::Mobilenet, "MobileNet")] {
+        println!("\n  --- {model} ---");
+        for (name, arith) in &arms {
+            let rec = run_classification(kind, 10, *arith, &budget, 3);
+            row(&[
+                ("method", name.to_string()),
+                ("top1", format!("{:.4}", rec.final_top1)),
+                ("final loss", format!("{:.4}", rec.epoch_loss.last().unwrap())),
+            ]);
+        }
+    }
+    println!("\nPaper shape: ours ≥ all uniform-quantization arms and ≈ fp32\n(Table 4: ours 72.8 vs 70.5/71.9/71.2 on MobileNetV2).");
+}

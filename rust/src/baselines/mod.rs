@@ -1,0 +1,5 @@
+//! Baseline quantized-training methods the paper compares against.
+
+pub mod uniform;
+
+pub use uniform::{uniform_dequant_scale, uniform_quantize, UniformCfg};

@@ -1,0 +1,139 @@
+//! Symmetric uniform quantization with clipping — Appendix A.6.
+//!
+//! The quantizer used by the prior int8-training work the paper compares
+//! against in Table 4 ([2] Zhang et al., [3] Zhao et al., [4] Zhu et al.):
+//!
+//! ```text
+//! s = max(|x|)            (possibly EMA-smoothed / clipped)
+//! x_q = round(127 · clamp(x, s) / s)
+//! x̂  = x_q · s / 127
+//! ```
+//!
+//! Unlike the paper's representation mapping this (i) divides by a
+//! data-dependent scale, (ii) clips, (iii) rounds to nearest — a *biased*
+//! estimator, which is exactly the deficiency Table 4 exposes. Optional
+//! gradient clipping (as in [4]) and EMA scale adaptation (as in [2][3])
+//! are provided so the Table 4 comparison reproduces each arm.
+
+/// Configuration of the uniform-quantization baseline.
+#[derive(Clone, Copy, Debug)]
+pub struct UniformCfg {
+    /// Total bit-width (8 ⇒ levels in [−127, 127]).
+    pub bits: u32,
+    /// Clip gradients to this L∞ magnitude before quantizing (0 = off);
+    /// models the "direction sensitive gradient clipping" family [4].
+    pub grad_clip: f32,
+    /// EMA factor for scale adaptation (1.0 = instantaneous max, the plain
+    /// A.6 quantizer; <1.0 models the precision-adaptive methods [2][3]).
+    pub scale_ema: f32,
+}
+
+impl Default for UniformCfg {
+    fn default() -> Self {
+        UniformCfg { bits: 8, grad_clip: 0.0, scale_ema: 1.0 }
+    }
+}
+
+impl UniformCfg {
+    /// Plain Appendix-A.6 quantizer at 8 bits.
+    pub fn int8() -> Self {
+        Self::default()
+    }
+
+    /// Maximum quantization level, `2^(bits−1) − 1` (127 for int8).
+    pub fn qmax(&self) -> i32 {
+        (1i32 << (self.bits - 1)) - 1
+    }
+}
+
+/// Quantize a tensor per A.6: returns `(payloads, scale)` with
+/// `x̂ = payload · scale / qmax`.
+pub fn uniform_quantize(xs: &[f32], cfg: &UniformCfg, prev_scale: f32) -> (Vec<i8>, f32) {
+    let mut s = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    if s == 0.0 {
+        s = 1e-12;
+    }
+    // EMA adaptation (precision-adaptive family): blend with running scale.
+    if cfg.scale_ema < 1.0 && prev_scale > 0.0 {
+        s = cfg.scale_ema * s + (1.0 - cfg.scale_ema) * prev_scale;
+    }
+    let qmax = cfg.qmax() as f32;
+    let payload = xs
+        .iter()
+        .map(|&x| {
+            let c = x.clamp(-s, s);
+            (qmax * c / s).round() as i8
+        })
+        .collect();
+    (payload, s)
+}
+
+/// Dequantization scale for a payload produced by [`uniform_quantize`].
+pub fn uniform_dequant_scale(scale: f32, cfg: &UniformCfg) -> f32 {
+    scale / cfg.qmax() as f32
+}
+
+/// Clip a gradient tensor in place to L∞ magnitude `c` (no-op for c ≤ 0).
+pub fn clip_grad(gs: &mut [f32], c: f32) {
+    if c > 0.0 {
+        for g in gs.iter_mut() {
+            *g = g.clamp(-c, c);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let xs: Vec<f32> = (0..100).map(|i| ((i as f32) * 0.37).sin()).collect();
+        let cfg = UniformCfg::int8();
+        let (q, s) = uniform_quantize(&xs, &cfg, 0.0);
+        let ds = uniform_dequant_scale(s, &cfg);
+        for (&x, &p) in xs.iter().zip(&q) {
+            assert!((x - p as f32 * ds).abs() <= ds * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn nearest_rounding_is_biased_vs_sr() {
+        // The baseline annihilates values below half an lsb — the bias the
+        // paper's SR avoids. One big value sets the scale; a tiny value
+        // quantizes to exactly 0 every time.
+        let xs = [1.0f32, 0.001];
+        let cfg = UniformCfg::int8();
+        let (q, _) = uniform_quantize(&xs, &cfg, 0.0);
+        assert_eq!(q[1], 0);
+    }
+
+    #[test]
+    fn clipping_saturates() {
+        let xs = [10.0f32, -10.0, 0.5];
+        let cfg = UniformCfg::int8();
+        // EMA with a small running scale forces clipping of the extremes.
+        let cfg_ema = UniformCfg { scale_ema: 0.1, ..cfg };
+        let (q, s) = uniform_quantize(&xs, &cfg_ema, 1.0);
+        assert!(s < 10.0);
+        assert_eq!(q[0], 127);
+        assert_eq!(q[1], -127);
+    }
+
+    #[test]
+    fn grad_clip_limits_magnitude() {
+        let mut g = vec![5.0f32, -3.0, 0.1];
+        clip_grad(&mut g, 1.0);
+        assert_eq!(g, vec![1.0, -1.0, 0.1]);
+        let mut g2 = vec![5.0f32];
+        clip_grad(&mut g2, 0.0); // off
+        assert_eq!(g2, vec![5.0]);
+    }
+
+    #[test]
+    fn zero_tensor_safe() {
+        let (q, s) = uniform_quantize(&[0.0, 0.0], &UniformCfg::int8(), 0.0);
+        assert_eq!(q, vec![0, 0]);
+        assert!(s > 0.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! CLI dispatch: maps `intrain <command> [--options]` onto the experiment
+//! entry points. Each experiment is also exposed as a library function so
+//! the examples and benches reuse the exact same code paths.
+
+use crate::coordinator::e2e::{run_e2e, E2eConfig};
+use crate::data::blobs::Blobs;
+use crate::data::synth_images::SynthImages;
+use crate::models::{mlp, resnet_tiny};
+use crate::nn::{Arith, IntCfg};
+use crate::optim::{FloatSgd, IntSgd, LrSchedule, Optimizer};
+use crate::train::trainer::{TrainConfig, Trainer};
+use crate::util::cli::Args;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// Pick the optimizer matching an arithmetic mode (integer SGD for the
+/// paper's pipeline, float SGD otherwise).
+pub fn optimizer_for(arith: &Arith, seed: u64) -> Box<dyn Optimizer> {
+    match arith {
+        Arith::Int(_) => Box::new(IntSgd::new(0.9, 1e-4, seed)),
+        _ => Box::new(FloatSgd::new(0.9, 1e-4)),
+    }
+}
+
+/// Parse `--arith {int8,int7,…,int4,fp32,uniform}`.
+pub fn parse_arith(s: &str) -> Result<Arith> {
+    Ok(match s {
+        "fp32" | "float" => Arith::Float,
+        "int8" => Arith::int8(),
+        "int7" => Arith::Int(IntCfg::bits(7)),
+        "int6" => Arith::Int(IntCfg::bits(6)),
+        "int5" => Arith::Int(IntCfg::bits(5)),
+        "int4" => Arith::Int(IntCfg::bits(4)),
+        "uniform" => Arith::Uniform(crate::baselines::uniform::UniformCfg::int8()),
+        other => bail!("unknown arith {other:?}"),
+    })
+}
+
+/// `intrain e2e` — the three-layer transformer training loop.
+pub fn cmd_e2e(args: &Args) -> Result<()> {
+    let cfg = E2eConfig {
+        steps: args.get_or("steps", 200usize),
+        lr: args.get_or("lr", 0.05f32),
+        integer: args.get("arith").map(|a| a != "fp32").unwrap_or(true),
+        log_every: args.get_or("log-every", 20usize),
+        seed: args.get_or("seed", 0u64),
+    };
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let rec = run_e2e(&artifacts, &cfg)?;
+    println!(
+        "e2e done: {} params, {} steps, {:.2} steps/s, loss {:.4} → {:.4}",
+        rec.param_count,
+        rec.losses.len(),
+        rec.steps_per_sec,
+        rec.losses.first().unwrap_or(&f32::NAN),
+        rec.losses.last().unwrap_or(&f32::NAN)
+    );
+    Ok(())
+}
+
+/// `intrain classify` — train the tiny ResNet on synthetic CIFAR.
+pub fn cmd_classify(args: &Args) -> Result<()> {
+    let arith = parse_arith(args.get("arith").unwrap_or("int8"))?;
+    let n = args.get_or("samples", 800usize);
+    let hw = args.get_or("hw", 16usize);
+    let train = SynthImages::new(n, 10, 3, hw, 0.25, 1, 100);
+    let test = SynthImages::new(n / 4, 10, 3, hw, 0.25, 1, 200);
+    let mut model = resnet_tiny(10, 3, hw, arith, args.get_or("seed", 3u64));
+    let mut opt = optimizer_for(&arith, 7);
+    let cfg = TrainConfig {
+        epochs: args.get_or("epochs", 6usize),
+        batch: args.get_or("batch", 32usize),
+        schedule: LrSchedule::Cosine {
+            base: args.get_or("lr", 0.05f32),
+            t_max: (args.get_or("epochs", 6usize) * n / args.get_or("batch", 32usize)) as u64,
+        },
+        seed: args.get_or("seed", 3u64),
+        eval_every: 0,
+        verbose: true,
+    };
+    let rec =
+        Trainer { model: &mut model, opt: opt.as_mut(), cfg, dense: false }.run(&train, &test);
+    println!("classify[{:?}] top1={:.4} top5={:.4}", arith, rec.final_top1, rec.final_top5);
+    Ok(())
+}
+
+/// `intrain mlp` — the fastest smoke workload.
+pub fn cmd_mlp(args: &Args) -> Result<()> {
+    let arith = parse_arith(args.get("arith").unwrap_or("int8"))?;
+    let train = Blobs::new_split(600, 4, 16, 0.3, 1, 10);
+    let test = Blobs::new_split(200, 4, 16, 0.3, 1, 20);
+    let mut model = mlp(&[16, 32, 4], arith, 3);
+    let mut opt = optimizer_for(&arith, 7);
+    let cfg = TrainConfig {
+        epochs: args.get_or("epochs", 10usize),
+        verbose: true,
+        ..Default::default()
+    };
+    let rec =
+        Trainer { model: &mut model, opt: opt.as_mut(), cfg, dense: false }.run(&train, &test);
+    println!("mlp[{arith:?}] top1={:.4}", rec.final_top1);
+    Ok(())
+}
+
+/// `intrain gap` — the Theorem-1 optimality-gap experiment.
+pub fn cmd_gap(args: &Args) -> Result<()> {
+    use crate::train::convex::{run_gap, theoretical_gap, QuadCfg};
+    let cfg = QuadCfg {
+        lr: args.get_or("lr", 0.05f32),
+        steps: args.get_or("steps", 3000usize),
+        ..Default::default()
+    };
+    let rf = run_gap(&cfg, false);
+    let ri = run_gap(&cfg, true);
+    println!(
+        "optimality gap  float={:.4}  int8={:.4}  bound={:.4} (Theorem 1)",
+        rf.gap,
+        ri.gap,
+        theoretical_gap(&cfg)
+    );
+    Ok(())
+}
+
+/// Top-level dispatch.
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("e2e") => cmd_e2e(args),
+        Some("classify") => cmd_classify(args),
+        Some("mlp") => cmd_mlp(args),
+        Some("gap") => cmd_gap(args),
+        Some(other) => bail!("unknown command {other:?}; see --help"),
+        None => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+/// CLI help text.
+pub const HELP: &str = "\
+intrain — fully-integer deep learning training (NeurIPS 2022 reproduction)
+
+USAGE: intrain <command> [--key value]...
+
+COMMANDS:
+  e2e       train the AOT transformer via PJRT (needs `make artifacts`)
+            --steps N --lr F --arith {int8,fp32} --artifacts DIR
+  classify  train ResNet-tiny on synthetic CIFAR
+            --arith {int8,int7,int6,int5,int4,fp32,uniform} --epochs N
+  mlp       fast MLP smoke workload        --arith ... --epochs N
+  gap       Theorem-1 optimality-gap experiment  --lr F --steps N
+
+Benches reproducing every paper table/figure: `cargo bench`.
+Examples: `cargo run --release --example quickstart` (and 6 more).";

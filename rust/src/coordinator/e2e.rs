@@ -1,0 +1,104 @@
+//! End-to-end transformer training through the three-layer stack:
+//! Rust (this file) feeds batches from the synthetic corpus into the
+//! AOT-compiled JAX train step (which itself calls the Pallas integer
+//! kernels), holds the parameter/momentum state as PJRT literals, and
+//! logs the loss curve. Python is not involved at any point here.
+
+use crate::data::corpus::Corpus;
+use crate::runtime::{f32_literal, i32_literal, Manifest, Runtime};
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::time::Instant;
+
+/// e2e run configuration.
+#[derive(Clone, Debug)]
+pub struct E2eConfig {
+    /// Training steps.
+    pub steps: usize,
+    /// Learning rate.
+    pub lr: f32,
+    /// Use the int8 train step (vs fp32 baseline).
+    pub integer: bool,
+    /// Print every n steps (0 = silent).
+    pub log_every: usize,
+    /// Corpus seed.
+    pub seed: u64,
+}
+
+impl Default for E2eConfig {
+    fn default() -> Self {
+        E2eConfig { steps: 200, lr: 0.05, integer: true, log_every: 20, seed: 0 }
+    }
+}
+
+/// What the run produced.
+#[derive(Clone, Debug, Default)]
+pub struct E2eRecord {
+    /// Loss per step.
+    pub losses: Vec<f32>,
+    /// Steps per second (excluding compile).
+    pub steps_per_sec: f64,
+    /// Parameter count.
+    pub param_count: usize,
+}
+
+/// Run the e2e training loop against `artifacts/`.
+pub fn run_e2e(artifacts: &Path, cfg: &E2eConfig) -> Result<E2eRecord> {
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(&artifacts.join("manifest.txt"))?;
+    let init = rt.load(&artifacts.join("init_params.hlo.txt"))?;
+    let step_name =
+        if cfg.integer { "train_step_int8.hlo.txt" } else { "train_step_fp32.hlo.txt" };
+    let step = rt.load(&artifacts.join(step_name))?;
+
+    // Initialize parameters on device via the AOT init computation.
+    let seed_lit = xla::Literal::scalar(cfg.seed as i32);
+    let mut params = init.run(&[&seed_lit]).context("running init_params")?;
+    anyhow::ensure!(
+        params.len() == manifest.params.len(),
+        "init returned {} tensors, manifest lists {}",
+        params.len(),
+        manifest.params.len()
+    );
+    // Zero momentum state, shaped like the parameters.
+    let mut moments: Vec<xla::Literal> = manifest
+        .params
+        .iter()
+        .map(|(_, shape)| {
+            let n: usize = shape.iter().product();
+            f32_literal(&vec![0f32; n], shape)
+        })
+        .collect::<Result<_>>()?;
+
+    let corpus = Corpus::new(manifest.vocab, cfg.seed);
+    let mut rec =
+        E2eRecord { param_count: manifest.param_count(), ..Default::default() };
+    let t0 = Instant::now();
+    for s in 0..cfg.steps {
+        let (tok, tgt) = corpus.batch(s as u64, manifest.batch, manifest.seq);
+        let tok: Vec<i32> = tok.iter().map(|&t| t as i32).collect();
+        let tgt: Vec<i32> = tgt.iter().map(|&t| t as i32).collect();
+        let tok_lit = i32_literal(&tok, &[manifest.batch, manifest.seq])?;
+        let tgt_lit = i32_literal(&tgt, &[manifest.batch, manifest.seq])?;
+        let seed = xla::Literal::scalar(s as i32);
+        let lr = xla::Literal::scalar(cfg.lr);
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(2 * params.len() + 4);
+        args.extend(params.iter());
+        args.extend(moments.iter());
+        args.push(&tok_lit);
+        args.push(&tgt_lit);
+        args.push(&seed);
+        args.push(&lr);
+        let mut out = step.run(&args).with_context(|| format!("train step {s}"))?;
+        let loss: f32 = out.pop().context("missing loss output")?.to_vec::<f32>()?[0];
+        let p = params.len();
+        moments = out.split_off(p);
+        params = out;
+        rec.losses.push(loss);
+        if cfg.log_every > 0 && s % cfg.log_every == 0 {
+            println!("step {s:>5}  loss {loss:.4}");
+        }
+    }
+    rec.steps_per_sec = cfg.steps as f64 / t0.elapsed().as_secs_f64();
+    Ok(rec)
+}

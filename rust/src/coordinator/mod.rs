@@ -1,0 +1,10 @@
+//! L3 coordinator: drives the AOT train-step executables over the
+//! synthetic corpus and dispatches the CLI experiments. Because this
+//! paper's contribution lives at L1/L2 (a numeric format), the coordinator
+//! is deliberately thin — process lifecycle, data feeding, metric logging —
+//! per the architecture contract.
+
+pub mod driver;
+pub mod e2e;
+
+pub use e2e::{run_e2e, E2eConfig, E2eRecord};

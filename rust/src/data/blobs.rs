@@ -1,0 +1,106 @@
+//! Gaussian-blob classification — the MLP smoke workload.
+
+use super::loader::Dataset;
+use crate::dfp::rng::Rng;
+
+/// Isotropic Gaussian clusters on the unit circle, one per class.
+pub struct Blobs {
+    data: Vec<f32>,
+    labels: Vec<usize>,
+    /// Feature dimension.
+    pub dim: usize,
+    /// Class count.
+    pub classes: usize,
+}
+
+impl Blobs {
+    /// Generate `n` samples over `classes` clusters in `dim` dimensions.
+    /// `world_seed` fixes the class centers (share it between train and
+    /// test splits); `sample_seed` drives the per-sample noise.
+    pub fn new_split(
+        n: usize,
+        classes: usize,
+        dim: usize,
+        noise: f32,
+        world_seed: u64,
+        sample_seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(sample_seed);
+        // Class centers: random unit-ish vectors, fixed by the world seed.
+        let mut centers = vec![0f32; classes * dim];
+        let mut crng = Rng::new(world_seed ^ 0xC0FFEE);
+        for c in centers.iter_mut() {
+            *c = crng.next_gaussian();
+        }
+        for cl in 0..classes {
+            let row = &mut centers[cl * dim..(cl + 1) * dim];
+            let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
+            for v in row.iter_mut() {
+                *v *= 2.0 / norm;
+            }
+        }
+        let mut data = vec![0f32; n * dim];
+        let mut labels = vec![0usize; n];
+        for i in 0..n {
+            let cl = i % classes;
+            labels[i] = cl;
+            for d in 0..dim {
+                data[i * dim + d] = centers[cl * dim + d] + noise * rng.next_gaussian();
+            }
+        }
+        Blobs { data, labels, dim, classes }
+    }
+
+    /// Single-seed convenience (world = samples).
+    pub fn new(n: usize, classes: usize, dim: usize, noise: f32, seed: u64) -> Self {
+        Self::new_split(n, classes, dim, noise, seed, seed)
+    }
+}
+
+impl Dataset for Blobs {
+    fn len(&self) -> usize {
+        self.labels.len()
+    }
+    fn input_len(&self) -> usize {
+        self.dim
+    }
+    fn sample(&self, i: usize, out: &mut [f32]) -> Vec<usize> {
+        out.copy_from_slice(&self.data[i * self.dim..(i + 1) * self.dim]);
+        vec![self.labels[i]]
+    }
+    fn input_shape(&self) -> Vec<usize> {
+        vec![self.dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_and_reproducible() {
+        let a = Blobs::new(90, 3, 8, 0.3, 7);
+        let b = Blobs::new(90, 3, 8, 0.3, 7);
+        assert_eq!(a.data, b.data);
+        let counts = a.labels.iter().fold([0usize; 3], |mut c, &l| {
+            c[l] += 1;
+            c
+        });
+        assert_eq!(counts, [30, 30, 30]);
+    }
+
+    #[test]
+    fn classes_are_separated() {
+        let ds = Blobs::new(300, 3, 8, 0.2, 3);
+        // Within-class distance ≪ between-class distance for low noise.
+        let mut x0 = vec![0f32; 8];
+        let mut x1 = vec![0f32; 8];
+        let mut x3 = vec![0f32; 8];
+        ds.sample(0, &mut x0);
+        ds.sample(3, &mut x3); // same class (i%3)
+        ds.sample(1, &mut x1); // different class
+        let d_same: f32 = x0.iter().zip(&x3).map(|(a, b)| (a - b) * (a - b)).sum();
+        let d_diff: f32 = x0.iter().zip(&x1).map(|(a, b)| (a - b) * (a - b)).sum();
+        assert!(d_same < d_diff);
+    }
+}

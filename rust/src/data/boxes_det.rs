@@ -1,0 +1,166 @@
+//! Synthetic object-detection scenes — the COCO/VOC/Cityscapes stand-in
+//! (Table 3): bright square/disc objects on textured background with
+//! ground-truth boxes for the SSD-lite head.
+
+use crate::dfp::rng::{hash2, Rng};
+
+/// One ground-truth box (pixel units, inclusive-exclusive).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GtBox {
+    /// Left.
+    pub x0: f32,
+    /// Top.
+    pub y0: f32,
+    /// Right.
+    pub x1: f32,
+    /// Bottom.
+    pub y1: f32,
+}
+
+impl GtBox {
+    /// Intersection-over-union with another box.
+    pub fn iou(&self, o: &GtBox) -> f32 {
+        let ix = (self.x1.min(o.x1) - self.x0.max(o.x0)).max(0.0);
+        let iy = (self.y1.min(o.y1) - self.y0.max(o.y0)).max(0.0);
+        let inter = ix * iy;
+        let a = (self.x1 - self.x0) * (self.y1 - self.y0);
+        let b = (o.x1 - o.x0) * (o.y1 - o.y0);
+        inter / (a + b - inter).max(1e-6)
+    }
+
+    /// Center x.
+    pub fn cx(&self) -> f32 {
+        0.5 * (self.x0 + self.x1)
+    }
+    /// Center y.
+    pub fn cy(&self) -> f32 {
+        0.5 * (self.y0 + self.y1)
+    }
+    /// Width.
+    pub fn w(&self) -> f32 {
+        self.x1 - self.x0
+    }
+    /// Height.
+    pub fn h(&self) -> f32 {
+        self.y1 - self.y0
+    }
+}
+
+/// A rendered detection scene.
+pub struct DetScene {
+    /// CHW image.
+    pub img: Vec<f32>,
+    /// Ground-truth boxes.
+    pub boxes: Vec<GtBox>,
+}
+
+/// Detection dataset configuration.
+pub struct BoxesDet {
+    /// Samples.
+    pub n: usize,
+    /// Image side.
+    pub hw: usize,
+    /// Channels.
+    pub ch: usize,
+    /// Max objects per scene.
+    pub max_objects: usize,
+    /// Base seed.
+    pub seed: u64,
+}
+
+impl BoxesDet {
+    /// COCO-like: busier scenes.
+    pub fn coco_like(n: usize, seed: u64) -> Self {
+        BoxesDet { n, hw: 32, ch: 3, max_objects: 3, seed }
+    }
+
+    /// VOC-like: 1–2 larger objects.
+    pub fn voc_like(n: usize, seed: u64) -> Self {
+        BoxesDet { n, hw: 32, ch: 3, max_objects: 2, seed }
+    }
+
+    /// Cityscapes-like: small objects near a "horizon" band.
+    pub fn cityscapes_like(n: usize, seed: u64) -> Self {
+        BoxesDet { n, hw: 32, ch: 3, max_objects: 4, seed }
+    }
+
+    /// Render scene `i`.
+    pub fn scene(&self, i: usize) -> DetScene {
+        let hw = self.hw;
+        let mut rng = Rng::new(hash2(self.seed, i as u64));
+        let mut img = vec![0f32; self.ch * hw * hw];
+        for v in img.iter_mut() {
+            *v = 0.1 * rng.next_gaussian();
+        }
+        let nobj = 1 + rng.below(self.max_objects);
+        let mut boxes = Vec::with_capacity(nobj);
+        for _ in 0..nobj {
+            let w = 4.0 + rng.next_f32() * (hw as f32 / 2.5 - 4.0);
+            let h = 4.0 + rng.next_f32() * (hw as f32 / 2.5 - 4.0);
+            let x0 = rng.next_f32() * (hw as f32 - w);
+            let y0 = rng.next_f32() * (hw as f32 - h);
+            let b = GtBox { x0, y0, x1: x0 + w, y1: y0 + h };
+            // Skip heavy overlaps so ground truth stays unambiguous.
+            if boxes.iter().any(|o: &GtBox| b.iou(o) > 0.3) {
+                continue;
+            }
+            let bright = 0.7 + 0.3 * rng.next_f32();
+            for y in y0 as usize..(b.y1 as usize).min(hw) {
+                for x in x0 as usize..(b.x1 as usize).min(hw) {
+                    for k in 0..self.ch {
+                        img[k * hw * hw + y * hw + x] = bright * if k == 0 { 1.0 } else { 0.6 };
+                    }
+                }
+            }
+            boxes.push(b);
+        }
+        DetScene { img, boxes }
+    }
+
+    /// Number of scenes.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iou_identity_and_disjoint() {
+        let a = GtBox { x0: 0.0, y0: 0.0, x1: 10.0, y1: 10.0 };
+        assert!((a.iou(&a) - 1.0).abs() < 1e-6);
+        let b = GtBox { x0: 20.0, y0: 20.0, x1: 30.0, y1: 30.0 };
+        assert_eq!(a.iou(&b), 0.0);
+        let c = GtBox { x0: 5.0, y0: 0.0, x1: 15.0, y1: 10.0 };
+        assert!((a.iou(&c) - 50.0 / 150.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scenes_have_objects_in_bounds() {
+        let ds = BoxesDet::coco_like(20, 3);
+        for i in 0..20 {
+            let s = ds.scene(i);
+            assert!(!s.boxes.is_empty());
+            for b in &s.boxes {
+                assert!(b.x0 >= 0.0 && b.x1 <= 32.0 && b.y0 >= 0.0 && b.y1 <= 32.0);
+                assert!(b.w() >= 4.0 && b.h() >= 4.0);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = BoxesDet::voc_like(5, 8);
+        let a = ds.scene(2);
+        let b = ds.scene(2);
+        assert_eq!(a.img, b.img);
+        assert_eq!(a.boxes, b.boxes);
+    }
+}

@@ -1,0 +1,17 @@
+//! Synthetic workloads standing in for the paper's datasets.
+//!
+//! The paper's claim under test is *trajectory equivalence between integer
+//! and float training on identical data*, which is dataset-agnostic (the
+//! method is explicitly distribution-independent, §1 challenge (iii)); the
+//! generators below produce deterministic, seed-reproducible workloads for
+//! each task family so every experiment compares int8 vs fp32 on exactly
+//! the same samples.
+
+pub mod blobs;
+pub mod boxes_det;
+pub mod corpus;
+pub mod loader;
+pub mod shapes_seg;
+pub mod synth_images;
+
+pub use loader::{BatchIter, Dataset};

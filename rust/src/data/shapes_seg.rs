@@ -1,0 +1,138 @@
+//! Synthetic semantic-segmentation scenes — the VOC/COCO stand-in
+//! (Table 2): random geometric shapes on textured background, per-pixel
+//! class masks.
+
+use super::loader::Dataset;
+use crate::dfp::rng::{hash2, Rng};
+
+/// Shape-scene segmentation dataset (CHW input, HW mask of class ids;
+/// class 0 = background).
+pub struct ShapesSeg {
+    /// Samples.
+    pub n: usize,
+    /// Classes including background.
+    pub classes: usize,
+    /// Image side.
+    pub hw: usize,
+    /// Channels.
+    pub ch: usize,
+    /// Sample-stream seed.
+    pub seed: u64,
+    /// World seed (class colors; share between splits).
+    pub world: u64,
+    /// Max shapes per scene.
+    pub max_shapes: usize,
+}
+
+impl ShapesSeg {
+    /// VOC-like config: 6 classes, 32×32.
+    pub fn voc_like(n: usize, world: u64, seed: u64) -> Self {
+        ShapesSeg { n, classes: 6, hw: 32, ch: 3, seed, world, max_shapes: 3 }
+    }
+
+    /// COCO-like config: 10 classes, 32×32, busier scenes.
+    pub fn coco_like(n: usize, world: u64, seed: u64) -> Self {
+        ShapesSeg { n, classes: 10, hw: 32, ch: 3, seed, world, max_shapes: 5 }
+    }
+
+    /// Rasterize sample `i` into `img` (CHW) and `mask` (HW class ids).
+    pub fn render(&self, i: usize, img: &mut [f32], mask: &mut [usize]) {
+        let hw = self.hw;
+        let mut rng = Rng::new(hash2(self.seed, i as u64));
+        // Textured background.
+        for p in 0..hw * hw {
+            mask[p] = 0;
+        }
+        let bf = 1.0 + rng.next_f32() * 2.0;
+        for y in 0..hw {
+            for x in 0..hw {
+                let v = 0.15
+                    * ((bf * x as f32 / hw as f32 * 6.28).sin()
+                        + (bf * y as f32 / hw as f32 * 6.28).cos());
+                for k in 0..self.ch {
+                    img[k * hw * hw + y * hw + x] = v + 0.05 * rng.next_gaussian();
+                }
+            }
+        }
+        // Shapes: each non-background class has a fixed form+color family.
+        let nshapes = 1 + rng.below(self.max_shapes);
+        for _ in 0..nshapes {
+            let cl = 1 + rng.below(self.classes - 1);
+            let cx = (rng.next_f32() * hw as f32) as i32;
+            let cy = (rng.next_f32() * hw as f32) as i32;
+            let r = 3 + rng.below(hw / 4) as i32;
+            // Class-deterministic color (distinct channel signature).
+            let mut color = [0f32; 8];
+            let mut crng = Rng::new(self.world ^ (cl as u64).wrapping_mul(0xABCD));
+            for c in color.iter_mut().take(self.ch) {
+                *c = crng.next_f32() * 1.6 - 0.8;
+            }
+            // Form: circle for even classes, square for odd.
+            for y in (cy - r).max(0)..(cy + r).min(hw as i32) {
+                for x in (cx - r).max(0)..(cx + r).min(hw as i32) {
+                    let dx = x - cx;
+                    let dy = y - cy;
+                    let inside = if cl % 2 == 0 {
+                        dx * dx + dy * dy <= r * r
+                    } else {
+                        dx.abs() <= r * 3 / 4 && dy.abs() <= r * 3 / 4
+                    };
+                    if inside {
+                        let p = (y as usize) * hw + x as usize;
+                        mask[p] = cl;
+                        for k in 0..self.ch {
+                            img[k * hw * hw + p] = color[k] + 0.05 * rng.next_gaussian();
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Dataset for ShapesSeg {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn input_len(&self) -> usize {
+        self.ch * self.hw * self.hw
+    }
+    fn labels_per_sample(&self) -> usize {
+        self.hw * self.hw
+    }
+    fn sample(&self, i: usize, out: &mut [f32]) -> Vec<usize> {
+        let mut mask = vec![0usize; self.hw * self.hw];
+        self.render(i, out, &mut mask);
+        mask
+    }
+    fn input_shape(&self) -> Vec<usize> {
+        vec![self.ch, self.hw, self.hw]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_consistent_with_images() {
+        let ds = ShapesSeg::voc_like(20, 5, 5);
+        let mut img = vec![0f32; ds.input_len()];
+        let mask = ds.sample(3, &mut img);
+        assert_eq!(mask.len(), 32 * 32);
+        // At least one foreground pixel, all ids in range.
+        assert!(mask.iter().any(|&m| m > 0));
+        assert!(mask.iter().all(|&m| m < 6));
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = ShapesSeg::coco_like(20, 6, 6);
+        let mut a = vec![0f32; ds.input_len()];
+        let mut b = vec![0f32; ds.input_len()];
+        let ma = ds.sample(7, &mut a);
+        let mb = ds.sample(7, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(ma, mb);
+    }
+}

@@ -1,0 +1,166 @@
+//! Procedural class-conditional images — the stand-in for CIFAR10/100 and
+//! the ImageNet subset (see DESIGN.md §Substitutions).
+//!
+//! Each class is a distinct texture process: two oriented sinusoid gratings
+//! with class-specific frequency/orientation/phase, a class-colored
+//! Gaussian blob at a class-dependent position, and per-sample jitter +
+//! pixel noise. The task is learnable by a small CNN but not linearly
+//! separable at the pixel level, and every sample is reproducible from
+//! `(seed, index)`.
+
+use super::loader::Dataset;
+use crate::dfp::rng::{hash2, Rng};
+
+/// Class-conditional texture images (CHW float in [−1, 1]).
+pub struct SynthImages {
+    /// Samples.
+    pub n: usize,
+    /// Classes.
+    pub classes: usize,
+    /// Channels (3 = RGB-like).
+    pub ch: usize,
+    /// Height/width.
+    pub hw: usize,
+    /// Pixel noise σ.
+    pub noise: f32,
+    seed: u64,
+    // Per-class texture parameters (fixed by seed).
+    fx: Vec<f32>,
+    fy: Vec<f32>,
+    phase: Vec<f32>,
+    color: Vec<f32>, // classes × ch mixing weights
+    bx: Vec<f32>,
+    by: Vec<f32>,
+}
+
+impl SynthImages {
+    /// CIFAR10-like configuration: 3×32×32, 10 classes.
+    pub fn cifar10_like(n: usize, world: u64, samples: u64) -> Self {
+        Self::new(n, 10, 3, 32, 0.25, world, samples)
+    }
+
+    /// CIFAR100-like: 3×32×32, 100 classes (harder: denser class grid).
+    pub fn cifar100_like(n: usize, world: u64, samples: u64) -> Self {
+        Self::new(n, 100, 3, 32, 0.2, world, samples)
+    }
+
+    /// ImageNet-subset-like: 3×48×48, 20 classes.
+    pub fn imagenet_sub_like(n: usize, world: u64, samples: u64) -> Self {
+        Self::new(n, 20, 3, 48, 0.25, world, samples)
+    }
+
+    /// General constructor. `world` fixes the per-class texture processes
+    /// (share between splits); `samples` drives per-sample jitter/noise.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        n: usize,
+        classes: usize,
+        ch: usize,
+        hw: usize,
+        noise: f32,
+        world: u64,
+        samples: u64,
+    ) -> Self {
+        let mut rng = Rng::new(world ^ 0x51A7);
+        let mut fx = vec![0f32; classes];
+        let mut fy = vec![0f32; classes];
+        let mut phase = vec![0f32; classes];
+        let mut color = vec![0f32; classes * ch];
+        let mut bx = vec![0f32; classes];
+        let mut by = vec![0f32; classes];
+        for c in 0..classes {
+            fx[c] = 1.0 + rng.next_f32() * 5.0;
+            fy[c] = 1.0 + rng.next_f32() * 5.0;
+            phase[c] = rng.next_f32() * std::f32::consts::TAU;
+            bx[c] = 0.2 + 0.6 * rng.next_f32();
+            by[c] = 0.2 + 0.6 * rng.next_f32();
+            for k in 0..ch {
+                color[c * ch + k] = rng.next_f32() * 2.0 - 1.0;
+            }
+        }
+        SynthImages { n, classes, ch, hw, noise, seed: samples, fx, fy, phase, color, bx, by }
+    }
+}
+
+impl Dataset for SynthImages {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn input_len(&self) -> usize {
+        self.ch * self.hw * self.hw
+    }
+    fn sample(&self, i: usize, out: &mut [f32]) -> Vec<usize> {
+        let cl = i % self.classes;
+        let mut rng = Rng::new(hash2(self.seed, i as u64));
+        // Per-sample jitter of the class texture.
+        let jfx = self.fx[cl] * (1.0 + 0.04 * rng.next_gaussian());
+        let jfy = self.fy[cl] * (1.0 + 0.04 * rng.next_gaussian());
+        let jph = self.phase[cl] + 0.1 * rng.next_gaussian();
+        let jbx = self.bx[cl] + 0.05 * rng.next_gaussian();
+        let jby = self.by[cl] + 0.05 * rng.next_gaussian();
+        let hw = self.hw;
+        let tau = std::f32::consts::TAU;
+        for y in 0..hw {
+            for x in 0..hw {
+                let u = x as f32 / hw as f32;
+                let v = y as f32 / hw as f32;
+                let grate = (tau * (jfx * u + jfy * v) + jph).sin()
+                    + 0.5 * (tau * (jfy * u - jfx * v) - jph).sin();
+                let d2 = (u - jbx) * (u - jbx) + (v - jby) * (v - jby);
+                let blob = (-d2 * 40.0).exp();
+                for k in 0..self.ch {
+                    let base = 0.5 * grate * self.color[cl * self.ch + k]
+                        + blob * self.color[cl * self.ch + (k + 1) % self.ch];
+                    out[k * hw * hw + y * hw + x] =
+                        (base + self.noise * rng.next_gaussian()).clamp(-1.0, 1.0);
+                }
+            }
+        }
+        vec![cl]
+    }
+    fn input_shape(&self) -> Vec<usize> {
+        vec![self.ch, self.hw, self.hw]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproducible_per_index() {
+        let ds = SynthImages::cifar10_like(100, 4, 4);
+        let mut a = vec![0f32; ds.input_len()];
+        let mut b = vec![0f32; ds.input_len()];
+        assert_eq!(ds.sample(17, &mut a), ds.sample(17, &mut b));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn classes_differ_more_than_samples_within_class() {
+        // Averaged over pairs (individual pairs are noisy by design).
+        let ds = SynthImages::cifar10_like(200, 4, 4);
+        let mut xa = vec![0f32; ds.input_len()];
+        let mut xb = vec![0f32; ds.input_len()];
+        let mut d_same = 0f64;
+        let mut d_diff = 0f64;
+        for k in 0..10 {
+            ds.sample(k * 10, &mut xa); // class 0 samples
+            ds.sample(k * 10 + 10, &mut xb); // class 0 again
+            d_same += xa.iter().zip(&xb).map(|(a, b)| ((a - b) * (a - b)) as f64).sum::<f64>();
+            ds.sample(k * 10 + 1, &mut xb); // class 1
+            d_diff += xa.iter().zip(&xb).map(|(a, b)| ((a - b) * (a - b)) as f64).sum::<f64>();
+        }
+        assert!(d_same < d_diff, "same={d_same} diff={d_diff}");
+    }
+
+    #[test]
+    fn values_bounded() {
+        let ds = SynthImages::new(10, 4, 3, 16, 0.3, 9, 9);
+        let mut x = vec![0f32; ds.input_len()];
+        for i in 0..10 {
+            ds.sample(i, &mut x);
+            assert!(x.iter().all(|v| (-1.0..=1.0).contains(v)));
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! IEEE-754 single-precision bit plumbing.
+//!
+//! The paper's linear fixed-point mapping (§3.1) operates directly on the
+//! float number format: it unpacks `(sign, exponent, mantissa)`, aligns all
+//! mantissas of a tensor to the tensor-wide maximum exponent, and rounds the
+//! 24-bit mantissas (23 explicit bits + the implicit hidden bit) down to the
+//! payload width. This module provides the unpack/pack primitives shared by
+//! the mapping ([`crate::dfp::map`]) and its inverse ([`crate::dfp::inverse`]).
+
+/// Number of explicit mantissa bits in an IEEE-754 binary32.
+pub const MANT_BITS: u32 = 23;
+/// Full mantissa width including the implicit hidden bit.
+pub const FULL_MANT_BITS: u32 = 24;
+/// Exponent bias of binary32.
+pub const EXP_BIAS: i32 = 127;
+/// Exponent field of all-ones (Inf/NaN).
+pub const EXP_SPECIAL: i32 = 0xFF;
+
+/// Unpacked view of one f32: `(sign, biased_exponent, 24-bit mantissa)`.
+///
+/// For normal numbers the hidden bit is made explicit (bit 23 set). For
+/// sub-normals (biased exponent 0) the mantissa is taken as-is and the
+/// exponent is reported as 1, matching the IEEE interpretation
+/// `0.m × 2^(1-bias)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Unpacked {
+    /// true = negative.
+    pub sign: bool,
+    /// Biased exponent in `[1, 254]` for finite values after normalization
+    /// of the subnormal case.
+    pub exp: i32,
+    /// 24-bit mantissa (hidden bit explicit for normals).
+    pub mant: u32,
+}
+
+/// Unpack an f32 into sign / biased exponent / 24-bit mantissa.
+///
+/// Zero unpacks to `mant == 0` (exponent 1), so it aligns to any shared
+/// exponent without affecting the maximum.
+#[inline(always)]
+pub fn unpack(x: f32) -> Unpacked {
+    let b = x.to_bits();
+    let sign = (b >> 31) != 0;
+    let e = ((b >> MANT_BITS) & 0xFF) as i32;
+    let frac = b & 0x7F_FFFF;
+    if e == 0 {
+        // Sub-normal (or zero): value = 0.frac × 2^(1-127).
+        Unpacked { sign, exp: 1, mant: frac }
+    } else {
+        Unpacked { sign, exp: e, mant: frac | 0x80_0000 }
+    }
+}
+
+/// Biased exponent of an f32 as stored (0 for zero/subnormals).
+#[inline(always)]
+pub fn raw_exponent(x: f32) -> i32 {
+    ((x.to_bits() >> MANT_BITS) & 0xFF) as i32
+}
+
+/// True if the value is Inf or NaN (exponent field all ones).
+#[inline(always)]
+pub fn is_special(x: f32) -> bool {
+    raw_exponent(x) == EXP_SPECIAL
+}
+
+/// Real value of a payload `q` under a shared biased exponent `e_max` and
+/// payload mantissa width `pbits` (e.g. 7 for int8).
+///
+/// Derivation: a normal float is `m × 2^(e − bias − 23)` with `m` the 24-bit
+/// mantissa. After aligning to `e_max` and rounding `24 → pbits` bits
+/// (a right shift by `24 − pbits`), the represented value is
+/// `q × 2^(e_max − bias − 23 + (24 − pbits))  =  q × 2^(e_max − 126 − pbits)`.
+#[inline(always)]
+pub fn payload_scale(e_max: i32, pbits: u32) -> f32 {
+    exp2i(e_max - 126 - pbits as i32)
+}
+
+/// `2^k` for integer `k`, exact over the range used by the mapping,
+/// flushing to 0 / saturating to Inf outside the f64 range.
+#[inline(always)]
+pub fn exp2i(k: i32) -> f32 {
+    // Use f64 intermediate so that scales down to 2^-180 (sub-f32 range)
+    // still round-trip correctly through products before conversion.
+    (2f64).powi(k) as f32
+}
+
+/// `2^k` in f64 for integer exponents (used where products of two scales
+/// would underflow f32, e.g. GEMM output scales).
+#[inline(always)]
+pub fn exp2i64(k: i32) -> f64 {
+    (2f64).powi(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repack(u: Unpacked) -> f32 {
+        // Reconstruct the value from the unpacked form: m × 2^(e - 150).
+        let v = u.mant as f64 * (2f64).powi(u.exp - 150);
+        if u.sign {
+            -(v as f32)
+        } else {
+            v as f32
+        }
+    }
+
+    #[test]
+    fn unpack_roundtrips_normals() {
+        for &x in &[1.0f32, -1.0, 0.5, 3.1415926, 1e-20, -7.25e12, 1.1754944e-38] {
+            let u = unpack(x);
+            assert_eq!(repack(u), x, "roundtrip failed for {x}");
+        }
+    }
+
+    #[test]
+    fn unpack_zero() {
+        let u = unpack(0.0);
+        assert_eq!(u.mant, 0);
+        assert_eq!(u.exp, 1);
+        assert!(!u.sign);
+        let u = unpack(-0.0);
+        assert!(u.sign);
+        assert_eq!(u.mant, 0);
+    }
+
+    #[test]
+    fn unpack_subnormals() {
+        let x = f32::from_bits(0x0000_0001); // smallest subnormal
+        let u = unpack(x);
+        assert_eq!(u.exp, 1);
+        assert_eq!(u.mant, 1);
+        assert_eq!(repack(u), x);
+    }
+
+    #[test]
+    fn hidden_bit_set_for_normals() {
+        let u = unpack(1.0);
+        assert_eq!(u.mant, 0x80_0000);
+        assert_eq!(u.exp, EXP_BIAS);
+    }
+
+    #[test]
+    fn payload_scale_matches_definition() {
+        // For e_max = 127 (value 1.0) and int8 payloads (7 mantissa bits),
+        // payload 64 must represent 1.0: 64 × 2^(127-126-7) = 64 × 2^-6 = 1.
+        assert_eq!(payload_scale(127, 7) * 64.0, 1.0);
+        // int4 (3 payload bits): payload 4 represents 1.0.
+        assert_eq!(payload_scale(127, 3) * 4.0, 1.0);
+    }
+
+    #[test]
+    fn special_detection() {
+        assert!(is_special(f32::INFINITY));
+        assert!(is_special(f32::NAN));
+        assert!(!is_special(f32::MAX));
+    }
+
+    #[test]
+    fn exp2i_extremes() {
+        assert_eq!(exp2i(0), 1.0);
+        assert_eq!(exp2i(-1), 0.5);
+        assert_eq!(exp2i(10), 1024.0);
+        assert_eq!(exp2i(-160), 0.0); // flushes under f32
+        assert!(exp2i64(-160) > 0.0);
+    }
+}

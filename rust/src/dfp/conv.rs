@@ -1,0 +1,267 @@
+//! Integer convolution = im2col + integer GEMM.
+//!
+//! A convolution is an inner product per output pixel, so the unbiasedness
+//! argument of §3.4 Eq. 1 carries over unchanged. We lower NCHW conv2d to
+//! the blocked integer GEMM of [`super::gemm`] via an `i8` im2col buffer;
+//! the payload-level `im2col`/`col2im` pair is also what the backward pass
+//! uses (input gradients scatter back through `col2im`).
+
+use super::gemm::{igemm_into, IgemmOut};
+use super::tensor::DfpTensor;
+
+/// Static shape of a conv2d (single group, square-free general form).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    /// Batch.
+    pub n: usize,
+    /// Input channels.
+    pub c_in: usize,
+    /// Input height / width.
+    pub h: usize,
+    pub w: usize,
+    /// Output channels.
+    pub c_out: usize,
+    /// Kernel height / width.
+    pub kh: usize,
+    pub kw: usize,
+    /// Stride.
+    pub stride: usize,
+    /// Symmetric zero padding.
+    pub pad: usize,
+}
+
+impl ConvShape {
+    /// Output spatial height.
+    pub fn h_out(&self) -> usize {
+        (self.h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+    /// Output spatial width.
+    pub fn w_out(&self) -> usize {
+        (self.w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+    /// GEMM K dimension: `c_in · kh · kw`.
+    pub fn patch(&self) -> usize {
+        self.c_in * self.kh * self.kw
+    }
+    /// Elements per input image.
+    pub fn in_img(&self) -> usize {
+        self.c_in * self.h * self.w
+    }
+    /// Elements per output image.
+    pub fn out_img(&self) -> usize {
+        self.c_out * self.h_out() * self.w_out()
+    }
+}
+
+/// im2col on i8 payloads: input image (CHW) → column matrix
+/// `[patch × (h_out·w_out)]` row-major (patch rows, pixel columns).
+pub fn im2col_i8(img: &[i8], s: &ConvShape, col: &mut [i8]) {
+    let (ho, wo) = (s.h_out(), s.w_out());
+    debug_assert_eq!(img.len(), s.in_img());
+    debug_assert_eq!(col.len(), s.patch() * ho * wo);
+    let mut r = 0usize;
+    for c in 0..s.c_in {
+        let plane = &img[c * s.h * s.w..(c + 1) * s.h * s.w];
+        for ky in 0..s.kh {
+            for kx in 0..s.kw {
+                let dst = &mut col[r * ho * wo..(r + 1) * ho * wo];
+                let mut d = 0usize;
+                for oy in 0..ho {
+                    let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                    if iy < 0 || iy >= s.h as isize {
+                        for _ in 0..wo {
+                            dst[d] = 0;
+                            d += 1;
+                        }
+                        continue;
+                    }
+                    let rowbase = iy as usize * s.w;
+                    for ox in 0..wo {
+                        let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+                        dst[d] = if ix < 0 || ix >= s.w as isize {
+                            0
+                        } else {
+                            plane[rowbase + ix as usize]
+                        };
+                        d += 1;
+                    }
+                }
+                r += 1;
+            }
+        }
+    }
+}
+
+/// col2im accumulation on i32: scatter-add a column matrix back to an
+/// input-shaped i32 accumulator (used by the input-gradient path).
+pub fn col2im_i32(col: &[i32], s: &ConvShape, img: &mut [i32]) {
+    let (ho, wo) = (s.h_out(), s.w_out());
+    debug_assert_eq!(img.len(), s.in_img());
+    debug_assert_eq!(col.len(), s.patch() * ho * wo);
+    let mut r = 0usize;
+    for c in 0..s.c_in {
+        for ky in 0..s.kh {
+            for kx in 0..s.kw {
+                let src = &col[r * ho * wo..(r + 1) * ho * wo];
+                let mut d = 0usize;
+                for oy in 0..ho {
+                    let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                    if iy < 0 || iy >= s.h as isize {
+                        d += wo;
+                        continue;
+                    }
+                    let rowbase = c * s.h * s.w + iy as usize * s.w;
+                    for ox in 0..wo {
+                        let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+                        if ix >= 0 && ix < s.w as isize {
+                            img[rowbase + ix as usize] += src[d];
+                        }
+                        d += 1;
+                    }
+                }
+                r += 1;
+            }
+        }
+    }
+}
+
+/// Integer conv2d forward over a batch.
+///
+/// `input` is an NCHW [`DfpTensor`], `weight` is `[c_out × patch]` (already
+/// flattened `c_out, c_in, kh, kw`). Returns NCHW int32 accumulators plus
+/// the combined scale exponent.
+pub fn iconv2d(input: &DfpTensor, weight: &DfpTensor, s: &ConvShape) -> IgemmOut {
+    assert_eq!(input.len(), s.n * s.in_img(), "input size mismatch");
+    assert_eq!(weight.len(), s.c_out * s.patch(), "weight size mismatch");
+    let (ho, wo) = (s.h_out(), s.w_out());
+    let pix = ho * wo;
+    let mut acc = vec![0i32; s.n * s.out_img()];
+    let mut col = vec![0i8; s.patch() * pix];
+    for b in 0..s.n {
+        let img = &input.payload[b * s.in_img()..(b + 1) * s.in_img()];
+        im2col_i8(img, s, &mut col);
+        let out = &mut acc[b * s.out_img()..(b + 1) * s.out_img()];
+        // [c_out × patch] · [patch × pix] → [c_out × pix]
+        igemm_into(&weight.payload, &col, s.c_out, s.patch(), pix, out);
+    }
+    IgemmOut { acc, scale_exp: input.scale_exp() + weight.scale_exp() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfp::inverse::inverse_i32;
+    use crate::dfp::map::quantize;
+    use crate::dfp::rng::Rng;
+    use crate::dfp::tensor::RoundMode;
+
+    fn fconv(input: &[f32], weight: &[f32], s: &ConvShape) -> Vec<f32> {
+        let (ho, wo) = (s.h_out(), s.w_out());
+        let mut out = vec![0f32; s.n * s.c_out * ho * wo];
+        for b in 0..s.n {
+            for co in 0..s.c_out {
+                for oy in 0..ho {
+                    for ox in 0..wo {
+                        let mut acc = 0f32;
+                        for ci in 0..s.c_in {
+                            for ky in 0..s.kh {
+                                for kx in 0..s.kw {
+                                    let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                                    let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+                                    if iy < 0 || iy >= s.h as isize || ix < 0 || ix >= s.w as isize
+                                    {
+                                        continue;
+                                    }
+                                    let iv = input[b * s.in_img()
+                                        + ci * s.h * s.w
+                                        + iy as usize * s.w
+                                        + ix as usize];
+                                    let wv = weight[co * s.patch()
+                                        + ci * s.kh * s.kw
+                                        + ky * s.kw
+                                        + kx];
+                                    acc += iv * wv;
+                                }
+                            }
+                        }
+                        out[b * s.out_img() + co * ho * wo + oy * wo + ox] = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn identity_kernel_is_identity() {
+        // 1×1 conv with weight 1.0 must copy the input exactly.
+        let s = ConvShape { n: 1, c_in: 1, h: 4, w: 4, c_out: 1, kh: 1, kw: 1, stride: 1, pad: 0 };
+        let input: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) / 8.0).collect();
+        let qi = quantize(&input, 7, RoundMode::Nearest);
+        let qw = quantize(&[1.0f32], 7, RoundMode::Nearest);
+        let o = iconv2d(&qi, &qw, &s);
+        let out = inverse_i32(&o.acc, o.scale_exp);
+        assert_eq!(out, qi.to_f32());
+    }
+
+    #[test]
+    fn conv_matches_float_reference() {
+        let mut rng = Rng::new(31);
+        let s = ConvShape { n: 2, c_in: 3, h: 8, w: 8, c_out: 4, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let input: Vec<f32> = (0..s.n * s.in_img()).map(|_| rng.next_gaussian()).collect();
+        let weight: Vec<f32> =
+            (0..s.c_out * s.patch()).map(|_| rng.next_gaussian() * 0.2).collect();
+        let qi = quantize(&input, 7, RoundMode::Nearest);
+        let qw = quantize(&weight, 7, RoundMode::Nearest);
+        let o = iconv2d(&qi, &qw, &s);
+        let got = inverse_i32(&o.acc, o.scale_exp);
+        // Reference over the *dequantized* operands must match exactly
+        // (integer GEMM is exact on the grid):
+        let want = fconv(&qi.to_f32(), &qw.to_f32(), &s);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-4 * w.abs().max(1.0), "{g} vs {w}");
+        }
+        // And close to the full-precision conv within the quantization bound.
+        let wantf = fconv(&input, &weight, &s);
+        let k = s.patch() as f32;
+        let bound = k * 3.0 * (qi.scale() + qw.scale());
+        for (g, w) in got.iter().zip(&wantf) {
+            assert!((g - w).abs() <= bound, "{g} vs {w} bound={bound}");
+        }
+    }
+
+    #[test]
+    fn strided_shapes() {
+        let s = ConvShape { n: 1, c_in: 1, h: 7, w: 7, c_out: 1, kh: 3, kw: 3, stride: 2, pad: 1 };
+        assert_eq!((s.h_out(), s.w_out()), (4, 4));
+        let input = vec![1.0f32; s.in_img()];
+        let weight = vec![1.0f32; s.patch()];
+        let qi = quantize(&input, 7, RoundMode::Nearest);
+        let qw = quantize(&weight, 7, RoundMode::Nearest);
+        let o = iconv2d(&qi, &qw, &s);
+        let out = inverse_i32(&o.acc, o.scale_exp);
+        // Corner pixel (pad=1, stride=2) sees a 2×2 window of ones.
+        assert_eq!(out[0], 4.0);
+        // Interior sees full 3×3.
+        assert_eq!(out[5], 9.0);
+    }
+
+    #[test]
+    fn col2im_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> — adjointness, the property the
+        // backward pass relies on.
+        let s = ConvShape { n: 1, c_in: 2, h: 5, w: 5, c_out: 1, kh: 3, kw: 3, stride: 2, pad: 1 };
+        let mut rng = Rng::new(5);
+        let x: Vec<i8> = (0..s.in_img()).map(|_| (rng.next_u32() % 200) as i8).collect();
+        let ncol = s.patch() * s.h_out() * s.w_out();
+        let y: Vec<i32> = (0..ncol).map(|_| (rng.next_u32() % 100) as i32 - 50).collect();
+        let mut colx = vec![0i8; ncol];
+        im2col_i8(&x, &s, &mut colx);
+        let lhs: i64 =
+            colx.iter().zip(&y).map(|(&a, &b)| a as i64 * b as i64).sum();
+        let mut ximg = vec![0i32; s.in_img()];
+        col2im_i32(&y, &s, &mut ximg);
+        let rhs: i64 = x.iter().zip(&ximg).map(|(&a, &b)| a as i64 * b as i64).sum();
+        assert_eq!(lhs, rhs);
+    }
+}

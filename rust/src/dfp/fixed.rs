@@ -1,0 +1,160 @@
+//! Fixed-point scalar kernels: integer reciprocal and inverse square root.
+//!
+//! The integer batch-norm (§3.4 Eq. 3–5) needs the per-channel scalars
+//! `1/√(σ̂² + ε)` and `1/N`. These are *scalars per channel*, not tensor
+//! ops, but to keep the pipeline integer-only we compute them with
+//! Newton–Raphson on fixed-point integers (shift/multiply/subtract only),
+//! the way an integer DSP or the paper's emulator would.
+//!
+//! Representation: a positive quantity `v = p · 2^k` with payload `p` and
+//! exponent `k` (same convention as [`super::tensor::DfpTensor`] scales).
+
+/// Fixed-point value `p · 2^k`, `p > 0`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fx {
+    /// Positive payload.
+    pub p: i64,
+    /// Power-of-two exponent.
+    pub k: i32,
+}
+
+impl Fx {
+    /// Construct, asserting positivity.
+    pub fn new(p: i64, k: i32) -> Fx {
+        debug_assert!(p > 0, "Fx payload must be positive, got {p}");
+        Fx { p, k }
+    }
+
+    /// The represented real value (for tests / inverse mapping).
+    pub fn to_f64(self) -> f64 {
+        self.p as f64 * (2f64).powi(self.k)
+    }
+
+    /// Normalize so the payload has its MSB at bit 30 (keeps Newton
+    /// iterations in i64 without overflow). Exponent adjusts accordingly.
+    pub fn normalize30(self) -> Fx {
+        let msb = 63 - self.p.leading_zeros() as i32; // position of leading 1
+        let shift = msb - 30;
+        if shift >= 0 {
+            Fx { p: self.p >> shift, k: self.k + shift }
+        } else {
+            Fx { p: self.p << (-shift), k: self.k + shift }
+        }
+    }
+}
+
+/// Fixed-point reciprocal `1/v` by Newton–Raphson: `r ← r·(2 − v·r)`,
+/// quadratic convergence; 4 iterations from a ≤6%-error linear seed give
+/// better than 2^-40 relative accuracy. All arithmetic is integer
+/// (i128 intermediates = the DSP's double-width accumulator).
+pub fn fx_recip(v: Fx) -> Fx {
+    let v = v.normalize30(); // p ∈ [2^30, 2^31)
+    // x = p·2^-31 ∈ [0.5, 1); r holds (1/x) in Q61, r ∈ (2^61, 2^62].
+    let p = v.p as i128;
+    // Classical division seed r0 = 48/17 − 32/17·x (max rel. err ≈ 1/17).
+    let c48: i128 = ((48.0 / 17.0) * (1u128 << 61) as f64) as i128;
+    let c32: i128 = ((32.0 / 17.0) * (1u128 << 61) as f64) as i128;
+    let mut r: i128 = c48 - ((c32 * p) >> 31);
+    for _ in 0..4 {
+        // t = x·r in Q92 (p ≤ 2^31, r ≤ 2^62 ⇒ t ≤ 2^93, fits i128).
+        let t = p * r;
+        let two_minus = (1i128 << 93) - t; // (2 − x·r) in Q92
+        r = (r * (two_minus >> 31)) >> 61; // r·(2−x·r) in Q61
+    }
+    // 1/v = (1/x)·2^-(k+31) = r·2^(-92-k).
+    Fx { p: r as i64, k: -92 - v.k }.normalize30()
+}
+
+/// Fixed-point inverse square root `1/√v` by Newton–Raphson:
+/// `r ← r·(3 − v·r²)/2`.
+pub fn fx_rsqrt(v: Fx) -> Fx {
+    let v = v.normalize30(); // p ∈ [2^30, 2^31), value = (p·2^-31)·2^(k+31)
+    let mut m = v.k + 31; // v = x·2^m with x = p·2^-31 ∈ [0.5, 1)
+    let mut x_q31 = v.p as i128; // x in Q31
+    if m & 1 != 0 {
+        // Fold one octave into x so the remaining exponent is even:
+        // v = (2x)·2^(m−1), 2x ∈ [1, 2).
+        x_q31 <<= 1;
+        m -= 1;
+    }
+    // Seed 1/√x, piecewise-linear over [0.5,1) and [1,2), ≤3% error (Q61).
+    let q61 = (1u128 << 61) as f64;
+    let mut r: i128 = if x_q31 < (1i128 << 31) {
+        let a = (1.828 * q61) as i128;
+        let b = (0.828 * q61) as i128;
+        a - ((b >> 31) * x_q31)
+    } else {
+        let a = (1.293 * q61) as i128;
+        let b = (0.293 * q61) as i128;
+        a - ((b >> 31) * x_q31)
+    };
+    for _ in 0..5 {
+        let rr = (r * r) >> 61; // r² in Q61 (≤ 2^63)
+        let xrr = (x_q31 * rr) >> 31; // x·r² in Q61 (≤ 2^64)
+        let three_minus = (3i128 << 61) - xrr; // (3 − x·r²) in Q61
+        // r(Q61)·(tm>>31)(Q30) = Q91; >>30 → Q61; the trailing ÷2 folds
+        // into one net >>31.
+        r = (r * (three_minus >> 31)) >> 31;
+    }
+    // 1/√v = (1/√x)·2^(-m/2) = r·2^(-61 − m/2).
+    Fx { p: r as i64, k: -61 - m / 2 }.normalize30()
+}
+
+/// Reciprocal of a small positive integer (e.g. batch size `N`) as Fx.
+pub fn fx_recip_int(n: usize) -> Fx {
+    fx_recip(Fx::new(n as i64, 0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_preserves_value() {
+        for &(p, k) in &[(3i64, 0i32), (1 << 40, -13), (12345, 7)] {
+            let v = Fx::new(p, k);
+            let n = v.normalize30();
+            let rel = (v.to_f64() - n.to_f64()).abs() / v.to_f64();
+            assert!(rel < 1e-9, "p={p} k={k}");
+            let msb = 63 - n.p.leading_zeros();
+            assert_eq!(msb, 30);
+        }
+    }
+
+    #[test]
+    fn recip_accuracy() {
+        for &x in &[1.0f64, 2.0, 3.0, 0.1, 7.77, 1e6, 1e-6, 255.0, 1e9] {
+            // Build Fx from f64 for the test.
+            let bits = x.to_bits();
+            let e = ((bits >> 52) & 0x7FF) as i32 - 1075;
+            let m = ((bits & ((1u64 << 52) - 1)) | (1u64 << 52)) as i64;
+            let v = Fx::new(m, e);
+            let r = fx_recip(v);
+            let rel = (r.to_f64() - 1.0 / x).abs() * x;
+            assert!(rel < 1e-6, "x={x} got={} want={}", r.to_f64(), 1.0 / x);
+        }
+    }
+
+    #[test]
+    fn rsqrt_accuracy() {
+        for &x in &[1.0f64, 2.0, 4.0, 0.25, 3.0, 10.0, 1e8, 1e-8, 42.0, 65535.0] {
+            let bits = x.to_bits();
+            let e = ((bits >> 52) & 0x7FF) as i32 - 1075;
+            let m = ((bits & ((1u64 << 52) - 1)) | (1u64 << 52)) as i64;
+            let v = Fx::new(m, e);
+            let r = fx_rsqrt(v);
+            let want = 1.0 / x.sqrt();
+            let rel = ((r.to_f64() - want) / want).abs();
+            assert!(rel < 1e-5, "x={x} got={} want={want}", r.to_f64());
+        }
+    }
+
+    #[test]
+    fn recip_int_small_n() {
+        for n in 1..=64usize {
+            let r = fx_recip_int(n);
+            let rel = (r.to_f64() - 1.0 / n as f64).abs() * n as f64;
+            assert!(rel < 1e-6, "n={n}");
+        }
+    }
+}

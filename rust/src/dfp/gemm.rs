@@ -1,0 +1,300 @@
+//! Integer GEMM (§3.3, Figure 2).
+//!
+//! `C = A·B` over dynamic fixed-point operands: int8 payload products
+//! accumulate in int32 (the paper's int8 → int16 multiply → int32
+//! accumulate pipeline), and the shared scales multiply by *adding* their
+//! exponents — no floating-point operation touches the inner loop.
+//!
+//! Layouts: `A` is `m×k` row-major, `B` is `k×n` row-major. The backward
+//! pass of a linear layer needs `Aᵀ·B` and `A·Bᵀ`; dedicated entry points
+//! avoid materializing transposes.
+//!
+//! The kernel is cache-blocked and optionally multithreaded over row
+//! panels (std::thread scoped threads; no external deps available).
+
+use super::tensor::DfpTensor;
+
+/// Output of an integer GEMM: int32 accumulators plus the scale exponent
+/// `k` such that `value = acc × 2^k` (exponents added per Figure 2).
+pub struct IgemmOut {
+    /// Row-major `m×n` accumulators.
+    pub acc: Vec<i32>,
+    /// Combined scale exponent (`scale_exp(A) + scale_exp(B)`).
+    pub scale_exp: i32,
+}
+
+/// Threshold (in MACs) above which the GEMM fans out over threads.
+const PAR_THRESHOLD: usize = 1 << 18;
+
+fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+}
+
+/// Plain integer GEMM: `C[m×n] = A[m×k] · B[k×n]`.
+pub fn igemm(a: &DfpTensor, b: &DfpTensor, m: usize, k: usize, n: usize) -> IgemmOut {
+    assert_eq!(a.len(), m * k, "A payload size mismatch");
+    assert_eq!(b.len(), k * n, "B payload size mismatch");
+    let mut acc = vec![0i32; m * n];
+    igemm_into(&a.payload, &b.payload, m, k, n, &mut acc);
+    IgemmOut { acc, scale_exp: a.scale_exp() + b.scale_exp() }
+}
+
+/// `C[k_a×n] = Aᵀ[k_a×m_a] · B[m_a×n]` where `A` is stored `m_a×k_a`
+/// row-major (weight-gradient shape of a linear layer, Eq. 15).
+pub fn igemm_at_b(a: &DfpTensor, b: &DfpTensor, m_a: usize, k_a: usize, n: usize) -> IgemmOut {
+    assert_eq!(a.len(), m_a * k_a);
+    assert_eq!(b.len(), m_a * n);
+    let mut acc = vec![0i32; k_a * n];
+    // (Aᵀ·B)[i,j] = Σ_r A[r,i]·B[r,j] — iterate r outer for sequential reads.
+    let ap = &a.payload;
+    let bp = &b.payload;
+    for r in 0..m_a {
+        let arow = &ap[r * k_a..(r + 1) * k_a];
+        let brow = &bp[r * n..(r + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let crow = &mut acc[i * n..(i + 1) * n];
+            for (c, &bv) in crow.iter_mut().zip(brow) {
+                *c += av * bv as i32;
+            }
+        }
+    }
+    IgemmOut { acc, scale_exp: a.scale_exp() + b.scale_exp() }
+}
+
+/// `C[m×k_b] = A[m×n] · Bᵀ[n×k_b]` where `B` is stored `k_b×n` row-major
+/// (input-gradient shape of a linear layer).
+pub fn igemm_a_bt(a: &DfpTensor, b: &DfpTensor, m: usize, n: usize, k_b: usize) -> IgemmOut {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(b.len(), k_b * n);
+    let mut acc = vec![0i32; m * k_b];
+    let ap = &a.payload;
+    let bp = &b.payload;
+    for i in 0..m {
+        let arow = &ap[i * n..(i + 1) * n];
+        let crow = &mut acc[i * k_b..(i + 1) * k_b];
+        for (j, c) in crow.iter_mut().enumerate() {
+            let brow = &bp[j * n..(j + 1) * n];
+            let mut s = 0i32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                s += av as i32 * bv as i32;
+            }
+            *c = s;
+        }
+    }
+    IgemmOut { acc, scale_exp: a.scale_exp() + b.scale_exp() }
+}
+
+/// Raw payload GEMM into a caller buffer — the hot inner kernel.
+///
+/// Blocked over `k` in panels that keep one `B` panel resident in L1/L2,
+/// with the innermost loop written so the compiler auto-vectorizes the
+/// `i8×i8→i32` multiply-accumulate.
+pub fn igemm_into(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
+    debug_assert_eq!(out.len(), m * n);
+    let macs = m * k * n;
+    let threads = num_threads();
+    if macs < PAR_THRESHOLD || threads == 1 || m == 1 {
+        igemm_rows(a, b, 0, m, k, n, out);
+        return;
+    }
+    // Split output rows across threads; each thread owns a disjoint panel.
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = &mut out[..];
+        let mut row0 = 0usize;
+        while row0 < m {
+            let rows = rows_per.min(m - row0);
+            let (panel, tail) = rest.split_at_mut(rows * n);
+            rest = tail;
+            let r0 = row0;
+            s.spawn(move || {
+                igemm_rows(a, b, r0, rows, k, n, panel);
+            });
+            row0 += rows;
+        }
+    });
+}
+
+/// Compute `rows` output rows starting at `row0` into `out` (length rows·n).
+///
+/// §Perf: the B k-panel is widened to i32 once per panel (amortized over
+/// all `rows`), so the inner multiply-accumulate is i32×i32 — the form
+/// LLVM auto-vectorizes — instead of a per-element i8 sign-extension that
+/// defeated vectorization (2.9 → ≈8 GMAC/s; see EXPERIMENTS.md §Perf).
+fn igemm_rows(a: &[i8], b: &[i8], row0: usize, rows: usize, k: usize, n: usize, out: &mut [i32]) {
+    const KB: usize = 128; // k-panel: widened panel (KB·n·4 B) stays in L2
+    for o in out.iter_mut() {
+        *o = 0;
+    }
+    let mut bw = vec![0i32; KB.min(k) * n];
+    let mut k0 = 0;
+    while k0 < k {
+        let kb = KB.min(k - k0);
+        let panel = &mut bw[..kb * n];
+        for (w, &v) in panel.iter_mut().zip(&b[k0 * n..(k0 + kb) * n]) {
+            *w = v as i32;
+        }
+        for i in 0..rows {
+            let arow = &a[(row0 + i) * k + k0..(row0 + i) * k + k0 + kb];
+            let crow = &mut out[i * n..(i + 1) * n];
+            // Two k-steps per iteration: one load of each C element feeds
+            // two fused multiply-adds (halves the C-row traffic, which is
+            // the bottleneck once the multiply vectorizes).
+            let mut kk = 0;
+            while kk + 1 < kb {
+                let av0 = arow[kk] as i32;
+                let av1 = arow[kk + 1] as i32;
+                if av0 == 0 && av1 == 0 {
+                    kk += 2;
+                    continue;
+                }
+                let b0 = &panel[kk * n..kk * n + n];
+                let b1 = &panel[(kk + 1) * n..(kk + 1) * n + n];
+                for ((c, &v0), &v1) in crow.iter_mut().zip(b0).zip(b1) {
+                    *c += av0 * v0 + av1 * v1;
+                }
+                kk += 2;
+            }
+            if kk < kb {
+                let av = arow[kk] as i32;
+                if av != 0 {
+                    let brow = &panel[kk * n..kk * n + n];
+                    for (c, &bv) in crow.iter_mut().zip(brow) {
+                        *c += av * bv;
+                    }
+                }
+            }
+        }
+        k0 += kb;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfp::inverse::inverse_i32;
+    use crate::dfp::map::quantize;
+    use crate::dfp::rng::Rng;
+    use crate::dfp::tensor::RoundMode;
+
+    fn fgemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a[i * k + kk];
+                for j in 0..n {
+                    c[i * n + j] += av * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_gaussian()).collect()
+    }
+
+    #[test]
+    fn igemm_matches_exact_small() {
+        // Operands exactly representable → integer GEMM must be exact.
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [1.0f32, 1.0, 1.0, 1.0];
+        let qa = quantize(&a, 7, RoundMode::Nearest);
+        let qb = quantize(&b, 7, RoundMode::Nearest);
+        let o = igemm(&qa, &qb, 2, 2, 2);
+        let c = inverse_i32(&o.acc, o.scale_exp);
+        assert_eq!(c, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn igemm_close_to_float_gemm() {
+        let mut rng = Rng::new(21);
+        let (m, k, n) = (13, 37, 11);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let qa = quantize(&a, 7, RoundMode::Nearest);
+        let qb = quantize(&b, 7, RoundMode::Nearest);
+        let o = igemm(&qa, &qb, m, k, n);
+        let c = inverse_i32(&o.acc, o.scale_exp);
+        let cf = fgemm(&a, &b, m, k, n);
+        // Error bound: per-element quantization error ≤ ulp; inner product
+        // error ≤ k·(|a|max·ulp_b + |b|max·ulp_a + ulp_a·ulp_b).
+        let ua = qa.scale();
+        let ub = qb.scale();
+        let amax = a.iter().fold(0f32, |s, &x| s.max(x.abs()));
+        let bmax = b.iter().fold(0f32, |s, &x| s.max(x.abs()));
+        let bound = k as f32 * (amax * ub + bmax * ua + ua * ub);
+        for (x, y) in c.iter().zip(&cf) {
+            assert!((x - y).abs() <= bound, "{x} vs {y} (bound {bound})");
+        }
+    }
+
+    #[test]
+    fn igemm_parallel_matches_serial() {
+        let mut rng = Rng::new(8);
+        let (m, k, n) = (64, 128, 96); // above PAR_THRESHOLD
+        assert!(m * k * n >= super::PAR_THRESHOLD);
+        let a: Vec<i8> = (0..m * k).map(|_| (rng.next_u32() % 255) as i8).collect();
+        let b: Vec<i8> = (0..k * n).map(|_| (rng.next_u32() % 255) as i8).collect();
+        let mut par = vec![0i32; m * n];
+        igemm_into(&a, &b, m, k, n, &mut par);
+        let mut ser = vec![0i32; m * n];
+        igemm_rows(&a, &b, 0, m, k, n, &mut ser);
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn at_b_matches_explicit_transpose() {
+        let mut rng = Rng::new(13);
+        let (ma, ka, n) = (9, 7, 5);
+        let a = rand_vec(&mut rng, ma * ka);
+        let b = rand_vec(&mut rng, ma * n);
+        let qa = quantize(&a, 7, RoundMode::Nearest);
+        let qb = quantize(&b, 7, RoundMode::Nearest);
+        let o = igemm_at_b(&qa, &qb, ma, ka, n);
+        // Build Aᵀ explicitly and use plain igemm.
+        let mut at = vec![0i8; ka * ma];
+        for r in 0..ma {
+            for c in 0..ka {
+                at[c * ma + r] = qa.payload[r * ka + c];
+            }
+        }
+        let qat = DfpTensor { payload: at, e_max: qa.e_max, pbits: qa.pbits };
+        let o2 = igemm(&qat, &qb, ka, ma, n);
+        assert_eq!(o.acc, o2.acc);
+        assert_eq!(o.scale_exp, o2.scale_exp);
+    }
+
+    #[test]
+    fn a_bt_matches_explicit_transpose() {
+        let mut rng = Rng::new(14);
+        let (m, n, kb) = (6, 8, 4);
+        let a = rand_vec(&mut rng, m * n);
+        let b = rand_vec(&mut rng, kb * n);
+        let qa = quantize(&a, 7, RoundMode::Nearest);
+        let qb = quantize(&b, 7, RoundMode::Nearest);
+        let o = igemm_a_bt(&qa, &qb, m, n, kb);
+        let mut bt = vec![0i8; n * kb];
+        for r in 0..kb {
+            for c in 0..n {
+                bt[c * kb + r] = qb.payload[r * n + c];
+            }
+        }
+        let qbt = DfpTensor { payload: bt, e_max: qb.e_max, pbits: qb.pbits };
+        let o2 = igemm(&qa, &qbt, m, n, kb);
+        assert_eq!(o.acc, o2.acc);
+    }
+
+    #[test]
+    fn exponents_add() {
+        let qa = DfpTensor { payload: vec![2], e_max: 120, pbits: 7 };
+        let qb = DfpTensor { payload: vec![3], e_max: 130, pbits: 7 };
+        let o = igemm(&qa, &qb, 1, 1, 1);
+        assert_eq!(o.acc, vec![6]);
+        assert_eq!(o.scale_exp, (120 - 133) + (130 - 133));
+    }
+}

@@ -1,0 +1,93 @@
+//! Non-linear inverse mapping (§3.2, Figure 1b).
+//!
+//! Integer layers produce wide integer accumulators (int32 for int8 GEMM,
+//! int64 for reductions) paired with a shared power-of-two scale exponent.
+//! The inverse mapping re-normalizes those back to floating point: in
+//! hardware this is the alignment unit (leading-zero anticipation + shift +
+//! exponent adjust); in software the `int → float` conversion instruction
+//! performs exactly that normalization, so the conversion *is* the LZA
+//! circuit. The mapping is non-linear in the payload (the step size depends
+//! on the leading-zero count), which is the property the paper pairs with
+//! the linear forward mapping to preserve information across layers.
+
+use super::bits::exp2i64;
+
+/// Inverse-map one accumulator under scale exponent `k`: `acc × 2^k`.
+///
+/// Uses an f64 intermediate because products of two int8 scales can have
+/// exponents near `2·(e−133)` which underflow f32 for small-magnitude
+/// tensors even when the final normalized value is representable.
+#[inline(always)]
+pub fn inverse_one_i32(acc: i32, k: i32) -> f32 {
+    (acc as f64 * exp2i64(k)) as f32
+}
+
+/// Inverse-map one 64-bit accumulator under scale exponent `k`.
+#[inline(always)]
+pub fn inverse_one_i64(acc: i64, k: i32) -> f32 {
+    (acc as f64 * exp2i64(k)) as f32
+}
+
+/// Inverse-map a whole accumulator tensor to f32.
+pub fn inverse_i32(acc: &[i32], k: i32) -> Vec<f32> {
+    let s = exp2i64(k);
+    acc.iter().map(|&a| (a as f64 * s) as f32).collect()
+}
+
+/// Inverse-map a whole 64-bit accumulator tensor to f32.
+pub fn inverse_i64(acc: &[i64], k: i32) -> Vec<f32> {
+    let s = exp2i64(k);
+    acc.iter().map(|&a| (a as f64 * s) as f32).collect()
+}
+
+/// In-place variant writing into a provided buffer (hot path helper).
+pub fn inverse_i32_into(acc: &[i32], k: i32, out: &mut [f32]) {
+    debug_assert_eq!(acc.len(), out.len());
+    let s = exp2i64(k);
+    for (o, &a) in out.iter_mut().zip(acc) {
+        *o = (a as f64 * s) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfp::map::quantize;
+    use crate::dfp::tensor::RoundMode;
+
+    #[test]
+    fn inverse_normalizes_like_float_conversion() {
+        // 2^127-scaled denormalized payload example from §3.2:
+        // 0.0101b × 2^127 must normalize to 1.01b × 2^125.
+        let acc = 0b0101i32; // payload with leading zeros
+        let k = 127 - 4; // 0.0101 × 2^127 = 0101 × 2^(127-4)
+        let v = inverse_one_i32(acc, k);
+        assert_eq!(v, (2f64.powi(125) * 1.25) as f32);
+    }
+
+    #[test]
+    fn quantize_then_inverse_roundtrip() {
+        let xs = [1.0f32, -0.5, 0.75, 0.0];
+        let t = quantize(&xs, 7, RoundMode::Nearest);
+        let acc: Vec<i32> = t.payload.iter().map(|&p| p as i32).collect();
+        let back = inverse_i32(&acc, t.scale_exp());
+        assert_eq!(back, xs.to_vec());
+    }
+
+    #[test]
+    fn subnormal_scale_products_survive_f64_path() {
+        // k = -260 underflows f32 but acc × 2^k can still be normal when
+        // acc is large; the f64 intermediate must preserve it.
+        let acc = 1i64 << 40;
+        let v = inverse_one_i64(acc, -260 + 200);
+        assert_eq!(v, (2f64).powi(40 - 60) as f32);
+    }
+
+    #[test]
+    fn into_variant_matches() {
+        let acc = [3i32, -77, 1024, 0];
+        let mut out = [0f32; 4];
+        inverse_i32_into(&acc, -10, &mut out);
+        assert_eq!(out.to_vec(), inverse_i32(&acc, -10));
+    }
+}

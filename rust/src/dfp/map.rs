@@ -1,0 +1,318 @@
+//! Linear fixed-point mapping (§3.1, Figure 1a).
+//!
+//! Converts an f32 tensor to its dynamic fixed-point form by pure bit
+//! manipulation — no division, no clipping-by-threshold:
+//!
+//! 1. unpack every element to `(sign, exp, 24-bit mantissa)`;
+//! 2. `e_max = max_i exp_i` — the single shared scale of the tensor;
+//! 3. right-shift each mantissa by `e_max − exp_i` (pushing small values
+//!    into the sub-normal region so all elements share `e_max`);
+//! 4. round the 24-bit aligned mantissa to `pbits` bits, stochastically
+//!    (Appendix A.1) on training paths.
+//!
+//! The mapping is *linear* in the represented value (a uniform grid of step
+//! `2^(e_max−126−pbits)`); the inverse mapping (module [`super::inverse`])
+//! is the non-linear float re-normalization.
+
+use super::bits::{is_special, unpack, FULL_MANT_BITS};
+use super::round::{nearest_round_u32, stochastic_round_u32};
+use super::rng::hash2;
+use super::tensor::{Dfp16Tensor, DfpTensor, RoundMode};
+
+/// Compute the shared biased exponent `e_max` of a slice.
+///
+/// Non-finite elements (Inf/NaN) are rejected in debug builds and treated
+/// as absent in release (training with the paper's method never produces
+/// them; the guard catches upstream bugs early).
+pub fn shared_exponent(xs: &[f32]) -> i32 {
+    let mut e_max = 1i32; // zero tensor ⇒ minimum normalized exponent
+    for &x in xs {
+        debug_assert!(!is_special(x), "non-finite input to fixed-point mapping: {x}");
+        let e = unpack(x).exp;
+        if e > e_max {
+            e_max = e;
+        }
+    }
+    e_max
+}
+
+/// Map one f32 to a signed payload under a given shared exponent.
+///
+/// `rand` supplies the stochastic-rounding bits (ignored for `Nearest`).
+/// The payload saturates at `±(2^pbits − 1)`; saturation can only trigger
+/// via round-up carry on the maximal element (e.g. mantissa `0xFF_FFFF`
+/// rounding 24→7 bits may carry to 128), mirroring a saturating hardware
+/// rounder.
+#[inline(always)]
+pub fn map_one(x: f32, e_max: i32, pbits: u32, mode: RoundMode, rand: u32) -> i8 {
+    let u = unpack(x);
+    let shift = (e_max - u.exp) as u32;
+    // Elements more than 24 octaves below e_max align to mantissa 0 …
+    let aligned = if shift >= FULL_MANT_BITS { 0 } else { u.mant >> shift };
+    // … but stochastic rounding can still pull tiny values up one ulp:
+    // we keep the discarded bits in the rounding step by folding the align
+    // shift and the 24→pbits shift into a single rounding of the *original*
+    // mantissa when possible. For shift ≥ 24 the probability mass is below
+    // 2^-(pbits) of one ulp per octave and is dropped (hardware drops it too).
+    let k = FULL_MANT_BITS - pbits; // bits discarded by precision reduction
+    let q = match mode {
+        RoundMode::Stochastic(_) => {
+            if shift >= FULL_MANT_BITS {
+                0
+            } else {
+                // Round the aligned mantissa's low (k) bits stochastically.
+                // Folding alignment+precision: shift first (exact zeros fill
+                // from the right), then SR the k discarded precision bits of
+                // the aligned value. To keep the estimator unbiased w.r.t.
+                // the *aligned* value we SR (shift+k) low bits of the
+                // original mantissa in one step when it fits in 31 bits.
+                let total = shift + k;
+                if total < 31 {
+                    stochastic_round_u32(u.mant, total, rand) // unbiased vs original
+                } else {
+                    stochastic_round_u32(aligned, k, rand)
+                }
+            }
+        }
+        RoundMode::Nearest => nearest_round_u32(aligned, k),
+    };
+    let maxp = (1u32 << pbits) - 1;
+    let q = q.min(maxp) as i8; // saturating carry
+    if u.sign {
+        -q
+    } else {
+        q
+    }
+}
+
+/// Linear fixed-point mapping of a whole tensor to `i8` payloads.
+///
+/// With `RoundMode::Stochastic(seed)`, element `i` uses the counter-based
+/// draw `hash2(seed, i)` — reproducible and embarrassingly parallel.
+pub fn quantize(xs: &[f32], pbits: u32, mode: RoundMode) -> DfpTensor {
+    debug_assert!(pbits >= 1 && pbits <= 7, "i8 payload supports 1..=7 mantissa bits");
+    let e_max = shared_exponent(xs);
+    quantize_with_emax(xs, e_max, pbits, mode)
+}
+
+/// Mapping with a caller-supplied shared exponent (used when several
+/// tensors must share a scale, e.g. the aligned residual add).
+pub fn quantize_with_emax(xs: &[f32], e_max: i32, pbits: u32, mode: RoundMode) -> DfpTensor {
+    let mut payload = Vec::with_capacity(xs.len());
+    match mode {
+        RoundMode::Stochastic(seed) => {
+            for (i, &x) in xs.iter().enumerate() {
+                payload.push(map_one(x, e_max, pbits, mode, hash2(seed, i as u64) as u32));
+            }
+        }
+        RoundMode::Nearest => {
+            for &x in xs {
+                payload.push(map_one(x, e_max, pbits, mode, 0));
+            }
+        }
+    }
+    DfpTensor { payload, e_max, pbits }
+}
+
+/// Linear fixed-point mapping to `i16` payloads (int16, used by the
+/// integer SGD state per Remark 5).
+pub fn quantize16(xs: &[f32], pbits: u32, mode: RoundMode) -> Dfp16Tensor {
+    debug_assert!(pbits >= 1 && pbits <= 15);
+    let e_max = shared_exponent(xs);
+    quantize16_with_emax(xs, e_max, pbits, mode)
+}
+
+/// int16 mapping with a caller-supplied shared exponent.
+pub fn quantize16_with_emax(xs: &[f32], e_max: i32, pbits: u32, mode: RoundMode) -> Dfp16Tensor {
+    let k = FULL_MANT_BITS.saturating_sub(pbits);
+    let maxp = (1u32 << pbits) - 1;
+    let mut payload = Vec::with_capacity(xs.len());
+    for (i, &x) in xs.iter().enumerate() {
+        let u = unpack(x);
+        let shift = (e_max - u.exp) as u32;
+        let q = match mode {
+            RoundMode::Stochastic(seed) => {
+                let total = shift + k;
+                if shift >= FULL_MANT_BITS {
+                    0
+                } else if total < 31 {
+                    stochastic_round_u32(u.mant, total, hash2(seed, i as u64) as u32)
+                } else {
+                    stochastic_round_u32(u.mant >> shift, k, hash2(seed, i as u64) as u32)
+                }
+            }
+            RoundMode::Nearest => {
+                if shift >= FULL_MANT_BITS {
+                    0
+                } else {
+                    nearest_round_u32(u.mant >> shift, k)
+                }
+            }
+        };
+        let q = q.min(maxp) as i16;
+        payload.push(if u.sign { -q } else { q });
+    }
+    Dfp16Tensor { payload, e_max, pbits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfp::rng::Rng;
+
+    #[test]
+    fn shared_exponent_of_zero_tensor() {
+        assert_eq!(shared_exponent(&[0.0, -0.0, 0.0]), 1);
+    }
+
+    #[test]
+    fn quantize_exact_powers_of_two() {
+        // Values exactly on the grid must be exact under both modes.
+        let xs = [1.0f32, 0.5, -0.25, 0.0];
+        for mode in [RoundMode::Nearest, RoundMode::Stochastic(3)] {
+            let t = quantize(&xs, 7, mode);
+            assert_eq!(t.e_max, 127);
+            assert_eq!(t.to_f32(), xs.to_vec());
+        }
+    }
+
+    #[test]
+    fn quantize_saturating_carry() {
+        // 1.9999999 has mantissa 0xFF_FFFF; nearest-rounding carries to 128
+        // which must saturate at 127 (payload), value 127/64 = 1.984375.
+        let x = f32::from_bits(0x3FFF_FFFF);
+        let t = quantize(&[x], 7, RoundMode::Nearest);
+        assert_eq!(t.payload[0], 127);
+    }
+
+    #[test]
+    fn quantize_error_bounded_by_one_ulp() {
+        let mut rng = Rng::new(10);
+        let xs: Vec<f32> = (0..1000).map(|_| rng.next_gaussian()).collect();
+        for mode in [RoundMode::Nearest, RoundMode::Stochastic(5)] {
+            let t = quantize(&xs, 7, mode);
+            let ulp = t.scale();
+            for (i, (&x, y)) in xs.iter().zip(t.to_f32()).enumerate() {
+                assert!(
+                    (x - y).abs() <= ulp,
+                    "i={i} x={x} y={y} ulp={ulp} mode={mode:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_quantize_unbiased() {
+        // E{x̂} = x (§3.4): average many independently-seeded mappings.
+        // (Values stay clear of the saturating-carry edge — the maximal
+        // element with mantissa within 2^17 of 0xFF_FFFF saturates at 127
+        // and is the one place the estimator is clipped; see
+        // `saturation_edge_is_the_only_bias` below.)
+        let xs = [0.3f32, -0.7, 0.011, 0.77, -0.123];
+        let n = 40_000u64;
+        let mut acc = vec![0f64; xs.len()];
+        for s in 0..n {
+            let t = quantize(&xs, 7, RoundMode::Stochastic(s));
+            for (a, v) in acc.iter_mut().zip(t.to_f32()) {
+                *a += v as f64;
+            }
+        }
+        let ulp = quantize(&xs, 7, RoundMode::Nearest).scale() as f64;
+        for (&x, &a) in xs.iter().zip(&acc) {
+            let mean = a / n as f64;
+            // SR noise per draw ≤ 1 ulp; mean error shrinks as 1/sqrt(n).
+            let tol = 4.0 * ulp / (n as f64).sqrt() + 1e-7;
+            assert!((mean - x as f64).abs() < tol, "x={x} mean={mean} tol={tol}");
+        }
+    }
+
+    #[test]
+    fn saturation_edge_is_the_only_bias() {
+        // The tensor maximum with mantissa in the top 2^17 band can carry
+        // to payload 128 which saturates at 127 (≤ 1 ulp, one-sided). The
+        // resulting bias is bounded by ulp and only affects that element.
+        let x = 0.9990234f32; // mantissa 0x7FC000 band, e_max element
+        let n = 20_000u64;
+        let mut acc = 0f64;
+        for s in 0..n {
+            acc += quantize(&[x], 7, RoundMode::Stochastic(s)).get_f32(0) as f64;
+        }
+        let mean = acc / n as f64;
+        let ulp = quantize(&[x], 7, RoundMode::Nearest).scale() as f64;
+        assert!(mean <= x as f64 + 1e-9, "saturation can only bias down");
+        assert!((x as f64 - mean) <= ulp, "bias bounded by one ulp");
+    }
+
+    #[test]
+    fn small_values_survive_in_expectation() {
+        // A value 2^-10 below e_max is far sub-ulp for int8, but SR must
+        // keep its expectation: mean over draws ≈ x, not 0.
+        let xs = [1.0f32, 0.0009765625]; // 2^0 and 2^-10
+        let n = 200_000u64;
+        let mut acc = 0f64;
+        for s in 0..n {
+            let t = quantize(&xs, 7, RoundMode::Stochastic(s ^ 0xABCD));
+            acc += t.get_f32(1) as f64;
+        }
+        let mean = acc / n as f64;
+        assert!(
+            (mean - xs[1] as f64).abs() < 0.25 * xs[1] as f64 + 2e-5,
+            "mean={mean}"
+        );
+        // Nearest rounding would annihilate it entirely:
+        let t = quantize(&xs, 7, RoundMode::Nearest);
+        assert_eq!(t.get_f32(1), 0.0);
+    }
+
+    #[test]
+    fn lower_bitwidths_coarser_grid() {
+        // Table 5 machinery: same value, decreasing pbits ⇒ coarser ulp.
+        let xs = [0.77f32, 1.5];
+        let mut last_ulp = 0.0;
+        for pbits in (3..=7).rev() {
+            let t = quantize(&xs, pbits, RoundMode::Nearest);
+            assert!(t.scale() > last_ulp);
+            last_ulp = t.scale();
+            let err = (t.get_f32(0) - 0.77).abs();
+            assert!(err <= t.scale());
+        }
+    }
+
+    #[test]
+    fn quantize16_high_fidelity() {
+        let mut rng = Rng::new(4);
+        let xs: Vec<f32> = (0..500).map(|_| rng.next_gaussian()).collect();
+        let t = quantize16(&xs, 15, RoundMode::Nearest);
+        for (&x, y) in xs.iter().zip(t.to_f32()) {
+            assert!((x - y).abs() <= t.scale());
+        }
+        // int16 ulp is 256× finer than int8 for the same e_max.
+        let t8 = quantize(&xs, 7, RoundMode::Nearest);
+        assert!((t.scale() * 256.0 - t8.scale()).abs() < f32::EPSILON * t8.scale());
+    }
+
+    #[test]
+    fn stochastic_reproducible_by_seed() {
+        let xs: Vec<f32> = (0..100).map(|i| (i as f32 * 0.173).sin()).collect();
+        let a = quantize(&xs, 7, RoundMode::Stochastic(99));
+        let b = quantize(&xs, 7, RoundMode::Stochastic(99));
+        assert_eq!(a.payload, b.payload);
+        let c = quantize(&xs, 7, RoundMode::Stochastic(100));
+        assert_ne!(a.payload, c.payload);
+    }
+
+    #[test]
+    fn shared_emax_alignment() {
+        // Two tensors mapped under a common exponent share a grid: their
+        // payload-domain sum equals the quantized sum (residual-add law).
+        let a = [0.5f32, 0.25];
+        let b = [0.125f32, 0.75];
+        let e = shared_exponent(&a).max(shared_exponent(&b));
+        let qa = quantize_with_emax(&a, e, 7, RoundMode::Nearest);
+        let qb = quantize_with_emax(&b, e, 7, RoundMode::Nearest);
+        for i in 0..2 {
+            let s = (qa.payload[i] as i32 + qb.payload[i] as i32) as f32 * qa.scale();
+            assert_eq!(s, a[i] + b[i]);
+        }
+    }
+}

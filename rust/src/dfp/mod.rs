@@ -1,0 +1,29 @@
+//! Dynamic fixed-point substrate — the paper's numeric format (§3).
+//!
+//! * [`bits`] — IEEE-754 unpack/pack primitives.
+//! * [`rng`] — counter-based random bits for stochastic rounding.
+//! * [`round`] — stochastic / nearest rounding (Appendix A.1).
+//! * [`tensor`] — [`tensor::DfpTensor`] (int8-class payloads + shared
+//!   exponent) and [`tensor::Dfp16Tensor`] (int16 SGD state).
+//! * [`map`] — the linear fixed-point mapping (§3.1).
+//! * [`inverse`] — the non-linear inverse mapping (§3.2).
+//! * [`gemm`] — int8 GEMM with int32 accumulation (§3.3).
+//! * [`conv`] — integer conv2d via im2col.
+//! * [`ops`] — integer residual add, reductions, ReLU, renormalization.
+
+pub mod bits;
+pub mod conv;
+pub mod fixed;
+pub mod gemm;
+pub mod inverse;
+pub mod map;
+pub mod ops;
+pub mod rng;
+pub mod round;
+pub mod tensor;
+
+pub use conv::{iconv2d, ConvShape};
+pub use gemm::{igemm, igemm_a_bt, igemm_at_b, IgemmOut};
+pub use inverse::{inverse_i32, inverse_i64};
+pub use map::{quantize, quantize16, quantize_with_emax, shared_exponent};
+pub use tensor::{Dfp16Tensor, DfpTensor, RoundMode};

@@ -1,0 +1,237 @@
+//! Integer element-wise and reduction operations.
+//!
+//! Residual adds (§3.4 Eq. 2), batch statistics (Eq. 4–5) and the other
+//! non-GEMM pieces of an integer layer: everything here is computed on
+//! payloads + shared exponents, with widths chosen so no accumulator can
+//! overflow (int8 payload, int64 sums).
+
+use super::map::{quantize_with_emax, shared_exponent};
+use super::tensor::{DfpTensor, RoundMode};
+
+/// Integer residual add: `C = A + B` with both operands re-aligned to a
+/// common shared exponent so their payload grids coincide (Eq. 2).
+///
+/// Returns int32 accumulators (sum can exceed the payload range by one bit)
+/// plus the common scale exponent.
+pub fn iadd(a_f: &[f32], b_f: &[f32], pbits: u32, mode: RoundMode) -> (Vec<i32>, i32) {
+    assert_eq!(a_f.len(), b_f.len());
+    let e = shared_exponent(a_f).max(shared_exponent(b_f));
+    let qa = quantize_with_emax(a_f, e, pbits, mode);
+    let mode_b = match mode {
+        RoundMode::Stochastic(s) => RoundMode::Stochastic(s ^ 0x9E37_79B9_7F4A_7C15),
+        RoundMode::Nearest => RoundMode::Nearest,
+    };
+    let qb = quantize_with_emax(b_f, e, pbits, mode_b);
+    let acc: Vec<i32> = qa
+        .payload
+        .iter()
+        .zip(&qb.payload)
+        .map(|(&x, &y)| x as i32 + y as i32)
+        .collect();
+    (acc, qa.scale_exp())
+}
+
+/// Integer sum of payloads (int64; safe for > 2^39 int8 elements).
+pub fn isum(t: &DfpTensor) -> i64 {
+    t.payload.iter().map(|&p| p as i64).sum()
+}
+
+/// Integer sum of squared payloads.
+pub fn isum_sq(t: &DfpTensor) -> i64 {
+    t.payload.iter().map(|&p| (p as i64) * (p as i64)).sum()
+}
+
+/// Integer mean of a payload slice: returns `(numerator, count)` so the
+/// caller controls when/how the division is realized. The paper's Eq. 4:
+/// `μ̂ = Σ q_i / N` — the division by the (power-of-two-padded) batch size
+/// is a shift in hardware; here we keep the exact rational.
+pub fn imean_parts(payload: &[i8]) -> (i64, usize) {
+    (payload.iter().map(|&p| p as i64).sum(), payload.len())
+}
+
+/// Channel-sliced statistics for batch-norm over NCHW: for channel `c`,
+/// sums payloads and squared payloads across batch and spatial dims.
+/// Returns `(sum, sum_sq, count)` per channel, all integer.
+pub fn channel_stats(
+    payload: &[i8],
+    n: usize,
+    ch: usize,
+    spatial: usize,
+) -> Vec<(i64, i64, usize)> {
+    debug_assert_eq!(payload.len(), n * ch * spatial);
+    let mut out = vec![(0i64, 0i64, n * spatial); ch];
+    for b in 0..n {
+        for c in 0..ch {
+            let base = (b * ch + c) * spatial;
+            let (mut s, mut s2) = (0i64, 0i64);
+            for &p in &payload[base..base + spatial] {
+                let v = p as i64;
+                s += v;
+                s2 += v * v;
+            }
+            out[c].0 += s;
+            out[c].1 += s2;
+        }
+    }
+    out
+}
+
+/// Integer ReLU on payloads (sign test only — format-independent).
+pub fn irelu(t: &DfpTensor) -> DfpTensor {
+    DfpTensor {
+        payload: t.payload.iter().map(|&p| p.max(0)).collect(),
+        e_max: t.e_max,
+        pbits: t.pbits,
+    }
+}
+
+/// Saturating narrow of an int32 accumulator tensor back to `pbits`-wide
+/// payloads under a new shared exponent chosen from the accumulator range:
+/// the integer-domain equivalent of inverse-map + re-map, used when a
+/// result must stay resident in integer (e.g. chained residual blocks).
+pub fn renorm_acc(acc: &[i32], scale_exp: i32, pbits: u32, mode: RoundMode) -> DfpTensor {
+    // Find the highest set bit across accumulators.
+    let amax = acc.iter().map(|&a| (a as i64).unsigned_abs()).max().unwrap_or(0);
+    if amax == 0 {
+        return DfpTensor { payload: vec![0; acc.len()], e_max: 1, pbits };
+    }
+    let msb = 63 - amax.leading_zeros(); // position of leading 1
+    let drop = (msb + 1).saturating_sub(pbits); // bits to discard
+    let maxp = (1i32 << pbits) - 1;
+    let payload: Vec<i8> = match mode {
+        RoundMode::Stochastic(seed) => acc
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| {
+                let mag = (a as i64).unsigned_abs();
+                let r = super::rng::hash2(seed, i as u64);
+                let q = super::round::stochastic_round_u64(mag, drop, r).min(maxp as u64) as i8;
+                if a < 0 {
+                    -q
+                } else {
+                    q
+                }
+            })
+            .collect(),
+        RoundMode::Nearest => acc
+            .iter()
+            .map(|&a| {
+                let mag = (a as i64).unsigned_abs();
+                let q = if drop == 0 {
+                    mag
+                } else {
+                    (mag >> drop) + ((mag >> (drop - 1)) & 1)
+                }
+                .min(maxp as u64) as i8;
+                if a < 0 {
+                    -q
+                } else {
+                    q
+                }
+            })
+            .collect(),
+    };
+    // New value = q·2^(scale_exp + drop) ⇒ e_max' = scale_exp + drop + 126 + pbits.
+    DfpTensor { payload, e_max: scale_exp + drop as i32 + 126 + pbits as i32, pbits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfp::inverse::{inverse_i32, inverse_one_i64};
+    use crate::dfp::map::quantize;
+    use crate::dfp::rng::Rng;
+
+    #[test]
+    fn iadd_exact_on_grid() {
+        let a = [0.5f32, -0.25, 1.0];
+        let b = [0.25f32, 0.25, -1.0];
+        let (acc, k) = iadd(&a, &b, 7, RoundMode::Nearest);
+        let c = inverse_i32(&acc, k);
+        assert_eq!(c, vec![0.75, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn iadd_unbiased() {
+        let a = [0.333f32, 0.111];
+        let b = [0.127f32, -0.297];
+        let n = 30_000u64;
+        let mut acc0 = 0f64;
+        for s in 0..n {
+            let (acc, k) = iadd(&a, &b, 7, RoundMode::Stochastic(s));
+            acc0 += inverse_i32(&acc, k)[0] as f64;
+        }
+        let mean = acc0 / n as f64;
+        assert!((mean - (a[0] + b[0]) as f64).abs() < 1e-3, "mean={mean}");
+    }
+
+    #[test]
+    fn channel_stats_match_float() {
+        let mut rng = Rng::new(17);
+        let (n, ch, sp) = (4, 3, 25);
+        let xs: Vec<f32> = (0..n * ch * sp).map(|_| rng.next_gaussian()).collect();
+        let q = quantize(&xs, 7, RoundMode::Nearest);
+        let stats = channel_stats(&q.payload, n, ch, sp);
+        let s = q.scale() as f64;
+        for c in 0..ch {
+            let (isum, isq, cnt) = stats[c];
+            assert_eq!(cnt, n * sp);
+            // Float mean/var over the dequantized values:
+            let mut fs = 0f64;
+            let mut fs2 = 0f64;
+            for b in 0..n {
+                for i in 0..sp {
+                    let v = q.get_f32((b * ch + c) * sp + i) as f64;
+                    fs += v;
+                    fs2 += v * v;
+                }
+            }
+            assert!((isum as f64 * s - fs).abs() < 1e-6);
+            assert!((isq as f64 * s * s - fs2).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn irelu_zeroes_negatives_only() {
+        let q = quantize(&[1.0f32, -1.0, 0.5, -0.125], 7, RoundMode::Nearest);
+        let r = irelu(&q);
+        assert_eq!(r.to_f32(), vec![1.0, 0.0, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn isum_matches_mean_parts() {
+        let q = quantize(&[0.5f32, 0.25, -0.75], 7, RoundMode::Nearest);
+        let (num, n) = imean_parts(&q.payload);
+        assert_eq!(num, isum(&q));
+        assert_eq!(n, 3);
+        let mean = inverse_one_i64(num, q.scale_exp()) / n as f32;
+        assert!((mean - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn renorm_acc_roundtrip() {
+        // Accumulators representing exact values must renormalize exactly
+        // when they fit in the payload.
+        let acc = [64i32, -32, 16, 0];
+        let t = renorm_acc(&acc, -6, 7, RoundMode::Nearest);
+        let want = inverse_i32(&acc, -6);
+        assert_eq!(t.to_f32(), want);
+    }
+
+    #[test]
+    fn renorm_acc_large_values_bounded_error() {
+        let mut rng = Rng::new(23);
+        let acc: Vec<i32> = (0..256).map(|_| rng.next_u32() as i32 / 1024).collect();
+        let t = renorm_acc(&acc, -20, 7, RoundMode::Nearest);
+        let want = inverse_i32(&acc, -20);
+        for (g, w) in t.to_f32().iter().zip(&want) {
+            assert!((g - w).abs() <= t.scale(), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn renorm_acc_zero() {
+        let t = renorm_acc(&[0, 0], 5, 7, RoundMode::Nearest);
+        assert_eq!(t.to_f32(), vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,186 @@
+//! Counter-based pseudo-random bits for stochastic rounding.
+//!
+//! The paper (Appendix A.1, Figure 4) rounds a mantissa stochastically by
+//! comparing its discarded low bits against a random number generated
+//! on-the-fly. We use a splittable, counter-based generator (SplitMix64 /
+//! PCG-style output permutation) so that:
+//!
+//! * the same `(seed, counter)` pair always produces the same bits — runs
+//!   are exactly reproducible, and the Python oracle can mirror them;
+//! * independent tensors / iterations draw from disjoint streams without
+//!   shared mutable state, so the quantizer parallelizes trivially.
+
+/// SplitMix64 finalizer: a high-quality 64-bit mix.
+#[inline(always)]
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Stateless hash of `(seed, index)` → 64 random bits.
+#[inline(always)]
+pub fn hash2(seed: u64, index: u64) -> u64 {
+    splitmix64(seed ^ splitmix64(index.wrapping_add(0xA076_1D64_78BD_642F)))
+}
+
+/// A small sequential PRNG (xoshiro-style via repeated splitmix) used where
+/// a stateful stream is more convenient than a counter (data generation,
+/// weight init, Gaussian perturbations).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a generator from a seed. Distinct seeds give independent
+    /// streams for all practical purposes.
+    pub fn new(seed: u64) -> Self {
+        Rng { state: splitmix64(seed ^ 0x5851_F42D_4C95_7F2D) }
+    }
+
+    /// Derive an independent child stream (for per-tensor / per-worker use).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+
+    /// Next 64 uniform random bits.
+    #[inline(always)]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        splitmix64(self.state)
+    }
+
+    /// Next 32 uniform random bits.
+    #[inline(always)]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline(always)]
+    pub fn next_f32(&mut self) -> f32 {
+        // 24 top bits → exactly representable uniform grid.
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in `[0, 1)` with f64 resolution.
+    #[inline(always)]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)`.
+    #[inline(always)]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Multiply-shift; bias is negligible for the n used here (≪ 2^32).
+        ((self.next_u64() >> 32).wrapping_mul(n as u64) >> 32) as usize
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple and
+    /// sufficient for init/perturbation workloads).
+    pub fn next_gaussian(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+        }
+    }
+
+    /// Fisher–Yates shuffle of an index slice.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn hash2_is_stateless_and_seed_sensitive() {
+        assert_eq!(hash2(3, 9), hash2(3, 9));
+        assert_ne!(hash2(3, 9), hash2(4, 9));
+        assert_ne!(hash2(3, 9), hash2(3, 10));
+    }
+
+    #[test]
+    fn hash2_cross_language_golden() {
+        // Golden vectors shared with python/compile/kernels/ref.py — the
+        // two implementations must produce identical SR streams so that
+        // quantization results transfer bit-exactly across languages.
+        assert_eq!(hash2(3, 9), 0xf93cfa476d846c32);
+        assert_eq!(hash2(0, 0), 0xb1a6d212199b7394);
+        assert_eq!(hash2(12345, 678910), 0x0eab021472799aa3);
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut r = Rng::new(42);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.next_f32() as f64).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_gaussian() as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(5);
+        for _ in 0..1000 {
+            assert!(r.below(10) < 10);
+        }
+        // All residues visited.
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            seen[r.below(10)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>());
+    }
+}

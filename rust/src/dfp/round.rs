@@ -1,0 +1,159 @@
+//! Rounding primitives (Appendix A.1, Eq. 13 / Figure 4).
+//!
+//! Stochastic rounding of a non-negative integer mantissa: discard `k` low
+//! bits, then add 1 with probability `low_bits / 2^k`. Implemented exactly
+//! as the paper's Figure 4: draw `k` random bits and increment when they are
+//! `< low_bits` — `P(inc) = low/2^k`, so `E{round_k(m)} · 2^k = m` and the
+//! rounding error is zero-mean (the unbiasedness that Remark 1 relies on).
+
+use super::rng::hash2;
+
+/// Stochastically round `m` by discarding its `k` low bits.
+///
+/// `rand` must be (at least) `k` uniform random bits; only the low `k` bits
+/// are consumed. Returns `m >> k` or `(m >> k) + 1`.
+#[inline(always)]
+pub fn stochastic_round_u32(m: u32, k: u32, rand: u32) -> u32 {
+    if k == 0 {
+        return m;
+    }
+    debug_assert!(k < 32);
+    let mask = (1u32 << k) - 1;
+    let low = m & mask;
+    let hi = m >> k;
+    hi + ((rand & mask) < low) as u32
+}
+
+/// Stochastically round a 64-bit integer magnitude by `k` low bits.
+#[inline(always)]
+pub fn stochastic_round_u64(m: u64, k: u32, rand: u64) -> u64 {
+    if k == 0 {
+        return m;
+    }
+    debug_assert!(k < 64);
+    let mask = (1u64 << k) - 1;
+    let low = m & mask;
+    let hi = m >> k;
+    hi + ((rand & mask) < low) as u64
+}
+
+/// Round-to-nearest (ties away from zero) of `m` by `k` low bits — the
+/// deterministic alternative used for forward-only paths and as an ablation
+/// arm (the paper's method requires the stochastic variant in backprop).
+#[inline(always)]
+pub fn nearest_round_u32(m: u32, k: u32) -> u32 {
+    if k == 0 {
+        return m;
+    }
+    (m >> k) + ((m >> (k - 1)) & 1)
+}
+
+/// Stochastic rounding of a real value to an integer grid point,
+/// `x → floor(x)` or `ceil(x)` with probabilities per Eq. 13.
+/// Used by the integer SGD update where the scaled increment is fractional.
+#[inline(always)]
+pub fn stochastic_round_f64(x: f64, u: f64) -> i64 {
+    let f = x.floor();
+    let frac = x - f;
+    f as i64 + (u < frac) as i64
+}
+
+/// Counter-based stochastic rounding helper: derives the random bits from
+/// `(seed, index)` so element `i` of a tensor always sees the same draw for
+/// a given seed (reproducibility + parallel safety).
+#[inline(always)]
+pub fn sr_u32_at(m: u32, k: u32, seed: u64, index: u64) -> u32 {
+    stochastic_round_u32(m, k, hash2(seed, index) as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfp::rng::Rng;
+
+    #[test]
+    fn sr_exact_when_no_low_bits() {
+        // Multiples of 2^k never round up.
+        for k in 1..8u32 {
+            let m = 7u32 << k;
+            for r in 0..16u32 {
+                assert_eq!(stochastic_round_u32(m, k, r), 7);
+            }
+        }
+    }
+
+    #[test]
+    fn sr_k_zero_identity() {
+        assert_eq!(stochastic_round_u32(123, 0, 0xFFFF_FFFF), 123);
+        assert_eq!(stochastic_round_u64(u64::MAX, 0, 1), u64::MAX);
+    }
+
+    #[test]
+    fn sr_probability_matches_fraction() {
+        // m = hi*2^k + low must round up exactly with prob low/2^k when the
+        // random bits sweep all residues (exhaustive check = exact law).
+        let k = 5u32;
+        let m = (3 << k) | 11; // low = 11
+        let ups: u32 = (0..(1u32 << k))
+            .map(|r| (stochastic_round_u32(m, k, r) == 4) as u32)
+            .sum();
+        assert_eq!(ups, 11);
+    }
+
+    #[test]
+    fn sr_unbiased_statistically() {
+        // E{ round(m) * 2^k } == m for random mantissas (Eq. 14).
+        let mut rng = Rng::new(1234);
+        let k = 17u32; // the paper's 24→7 case
+        for &m in &[0x12_3456u32, 0x7F_FFFF, 0x40_0001, 0x00_0001] {
+            let n = 200_000;
+            let mut acc: u64 = 0;
+            for _ in 0..n {
+                acc += (stochastic_round_u32(m, k, rng.next_u32()) as u64) << k;
+            }
+            let mean = acc as f64 / n as f64;
+            let tol = 3.0 * (1u64 << k) as f64 / (n as f64).sqrt() * 0.5;
+            assert!(
+                (mean - m as f64).abs() < tol.max(1.0) * 4.0,
+                "m={m} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn nearest_round_halfway_up() {
+        assert_eq!(nearest_round_u32(0b101_1000, 4), 0b110); // .5 → up
+        assert_eq!(nearest_round_u32(0b101_0111, 4), 0b101); // <.5 → down
+        assert_eq!(nearest_round_u32(0b101_1001, 4), 0b110); // >.5 → up
+    }
+
+    #[test]
+    fn sr_f64_unbiased() {
+        let mut rng = Rng::new(77);
+        let x = 2.37f64;
+        let n = 100_000;
+        let mean: f64 = (0..n)
+            .map(|_| stochastic_round_f64(x, rng.next_f64()) as f64)
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - x).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn sr_counter_based_deterministic() {
+        assert_eq!(sr_u32_at(0x55_5555, 17, 9, 42), sr_u32_at(0x55_5555, 17, 9, 42));
+    }
+
+    #[test]
+    fn sr_u64_matches_u32_on_small_values() {
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let m = rng.next_u32() & 0xFF_FFFF;
+            let r = rng.next_u32();
+            assert_eq!(
+                stochastic_round_u32(m, 17, r) as u64,
+                stochastic_round_u64(m as u64, 17, r as u64)
+            );
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Dynamic fixed-point tensors: one shared exponent + integer payloads.
+//!
+//! A [`DfpTensor`] is the paper's per-tensor block-floating-point object
+//! (§3): `value_i = sign_i · q_i · 2^(e_max − 126 − pbits)` where `q_i` is a
+//! `pbits`-bit unsigned mantissa stored with its sign in an `i8` (int8 when
+//! `pbits = 7`; the int7…int4 ablation of Table 5 uses smaller `pbits` in
+//! the same container). [`Dfp16Tensor`] is the int16 variant used by the
+//! integer SGD state (Remark 5).
+
+use super::bits::payload_scale;
+
+/// Rounding mode used when mapping floats to payloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundMode {
+    /// Stochastic rounding (Appendix A.1) with a counter-based stream
+    /// derived from this seed — the paper's method for all training paths.
+    Stochastic(u64),
+    /// Round-to-nearest — deterministic alternative for ablations.
+    Nearest,
+}
+
+/// Per-tensor dynamic fixed-point tensor with `i8` payloads.
+#[derive(Clone, Debug)]
+pub struct DfpTensor {
+    /// Signed payloads, each in `[−(2^pbits − 1), 2^pbits − 1]`.
+    pub payload: Vec<i8>,
+    /// Shared biased exponent `e_max` (max IEEE-754 exponent of the source).
+    pub e_max: i32,
+    /// Payload mantissa width (7 for int8 training, 6 for int7, …).
+    pub pbits: u32,
+}
+
+impl DfpTensor {
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.payload.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.payload.is_empty()
+    }
+
+    /// The tensor's shared scale `2^(e_max − 126 − pbits)`.
+    pub fn scale(&self) -> f32 {
+        payload_scale(self.e_max, self.pbits)
+    }
+
+    /// Exponent of the scale as an integer power of two
+    /// (`value = payload × 2^scale_exp()`).
+    pub fn scale_exp(&self) -> i32 {
+        self.e_max - 126 - self.pbits as i32
+    }
+
+    /// Largest representable payload magnitude.
+    pub fn max_payload(&self) -> i32 {
+        (1i32 << self.pbits) - 1
+    }
+
+    /// Dequantize to f32 (the non-linear inverse mapping for a bare tensor:
+    /// the int→float conversion performs the mantissa re-normalization that
+    /// the paper's LZA alignment unit does in hardware).
+    pub fn to_f32(&self) -> Vec<f32> {
+        let s = self.scale();
+        self.payload.iter().map(|&q| q as f32 * s).collect()
+    }
+
+    /// Dequantize a single element.
+    pub fn get_f32(&self, i: usize) -> f32 {
+        self.payload[i] as f32 * self.scale()
+    }
+}
+
+/// Per-tensor dynamic fixed-point tensor with `i16` payloads (int16 SGD).
+#[derive(Clone, Debug)]
+pub struct Dfp16Tensor {
+    /// Signed payloads in `[−(2^pbits − 1), 2^pbits − 1]`, `pbits ≤ 15`.
+    pub payload: Vec<i16>,
+    /// Shared biased exponent.
+    pub e_max: i32,
+    /// Payload mantissa width (15 for int16).
+    pub pbits: u32,
+}
+
+impl Dfp16Tensor {
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.payload.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.payload.is_empty()
+    }
+
+    /// The tensor's shared scale.
+    pub fn scale(&self) -> f32 {
+        payload_scale(self.e_max, self.pbits)
+    }
+
+    /// Exponent of the scale as an integer power of two.
+    pub fn scale_exp(&self) -> i32 {
+        self.e_max - 126 - self.pbits as i32
+    }
+
+    /// Largest representable payload magnitude.
+    pub fn max_payload(&self) -> i32 {
+        (1i32 << self.pbits) - 1
+    }
+
+    /// Dequantize to f32.
+    pub fn to_f32(&self) -> Vec<f32> {
+        let s = self.scale();
+        self.payload.iter().map(|&q| q as f32 * s).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_int8_unit() {
+        let t = DfpTensor { payload: vec![64], e_max: 127, pbits: 7 };
+        assert_eq!(t.to_f32(), vec![1.0]);
+        assert_eq!(t.max_payload(), 127);
+    }
+
+    #[test]
+    fn scale_exp_consistent_with_scale() {
+        let t = DfpTensor { payload: vec![1], e_max: 100, pbits: 7 };
+        assert_eq!(t.scale(), crate::dfp::bits::exp2i(t.scale_exp()));
+    }
+
+    #[test]
+    fn int16_scale() {
+        let t = Dfp16Tensor { payload: vec![1 << 14], e_max: 127, pbits: 15 };
+        assert_eq!(t.to_f32(), vec![1.0]);
+        assert_eq!(t.max_payload(), 32767);
+    }
+}

@@ -1,0 +1,21 @@
+//! `intrain` — fully-integer deep-learning training.
+//!
+//! Reproduction of *"Is Integer Arithmetic Enough for Deep Learning
+//! Training?"* (NeurIPS 2022): per-tensor dynamic fixed-point
+//! representation mapping with stochastic rounding, integer forward and
+//! backward passes for linear / conv / batch-norm / layer-norm layers,
+//! and an int16 integer SGD — plus the float and uniform-quantization
+//! baselines, synthetic workloads, and the benches that regenerate every
+//! table and figure of the paper's evaluation.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod dfp;
+pub mod nn;
+pub mod data;
+pub mod metrics;
+pub mod models;
+pub mod optim;
+pub mod runtime;
+pub mod train;
+pub mod util;

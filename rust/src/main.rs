@@ -1,0 +1,16 @@
+//! `intrain` CLI — see `coordinator::driver::HELP`.
+
+use intrain::coordinator::driver;
+use intrain::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    if args.flag("help") {
+        println!("{}", driver::HELP);
+        return;
+    }
+    if let Err(e) = driver::dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

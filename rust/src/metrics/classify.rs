@@ -1,0 +1,42 @@
+//! Classification accuracy.
+
+/// Top-1 accuracy over row-major logits `[rows × classes]`.
+pub fn top1(logits: &[f32], classes: usize, targets: &[usize]) -> f32 {
+    topk(logits, classes, targets, 1)
+}
+
+/// Top-k accuracy.
+pub fn topk(logits: &[f32], classes: usize, targets: &[usize], k: usize) -> f32 {
+    let rows = targets.len();
+    debug_assert_eq!(logits.len(), rows * classes);
+    let mut hits = 0usize;
+    for r in 0..rows {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let t = targets[r];
+        let tv = row[t];
+        // Rank of the target = number of strictly-greater entries.
+        let better = row.iter().filter(|&&v| v > tv).count();
+        if better < k {
+            hits += 1;
+        }
+    }
+    hits as f32 / rows.max(1) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top1_and_top5() {
+        // 2 rows × 6 classes.
+        let logits = [
+            0.1, 0.9, 0.2, 0.0, 0.0, 0.0, // argmax 1
+            0.5, 0.4, 0.3, 0.2, 0.1, 0.0, // argmax 0
+        ];
+        assert_eq!(top1(&logits, 6, &[1, 0]), 1.0);
+        assert_eq!(top1(&logits, 6, &[1, 1]), 0.5);
+        assert_eq!(topk(&logits, 6, &[2, 4], 5), 1.0);
+        assert_eq!(topk(&logits, 6, &[5, 5], 5), 0.5); // row0 class5 ranks 6th
+    }
+}

@@ -1,0 +1,122 @@
+//! Average precision at IoU 0.5 for the detection experiments (Table 3).
+
+use crate::data::boxes_det::GtBox;
+
+/// One detection: box + confidence score, tagged with its image id.
+#[derive(Clone, Debug)]
+pub struct Detection {
+    /// Image index.
+    pub img: usize,
+    /// Predicted box.
+    pub bbox: GtBox,
+    /// Confidence.
+    pub score: f32,
+}
+
+/// AP@`iou_thr` over a set of images: `gts[i]` are image `i`'s ground-truth
+/// boxes. Uses all-point interpolation (COCO-style 101-point is within
+/// noise at this scale). Returns AP in [0, 1].
+pub fn average_precision(dets: &[Detection], gts: &[Vec<GtBox>], iou_thr: f32) -> f64 {
+    let total_gt: usize = gts.iter().map(|g| g.len()).sum();
+    if total_gt == 0 {
+        return 0.0;
+    }
+    let mut order: Vec<usize> = (0..dets.len()).collect();
+    order.sort_by(|&a, &b| dets[b].score.partial_cmp(&dets[a].score).unwrap());
+    let mut used: Vec<Vec<bool>> = gts.iter().map(|g| vec![false; g.len()]).collect();
+    let mut tp = vec![0u32; dets.len()];
+    let mut fp = vec![0u32; dets.len()];
+    for (rank, &di) in order.iter().enumerate() {
+        let d = &dets[di];
+        let g = &gts[d.img];
+        let mut best = -1f32;
+        let mut best_j = usize::MAX;
+        for (j, gt) in g.iter().enumerate() {
+            let iou = d.bbox.iou(gt);
+            if iou > best {
+                best = iou;
+                best_j = j;
+            }
+        }
+        if best >= iou_thr && best_j != usize::MAX && !used[d.img][best_j] {
+            used[d.img][best_j] = true;
+            tp[rank] = 1;
+        } else {
+            fp[rank] = 1;
+        }
+    }
+    // Precision–recall sweep.
+    let mut ctp = 0u32;
+    let mut cfp = 0u32;
+    let mut prec = Vec::with_capacity(dets.len());
+    let mut rec = Vec::with_capacity(dets.len());
+    for r in 0..dets.len() {
+        ctp += tp[r];
+        cfp += fp[r];
+        prec.push(ctp as f64 / (ctp + cfp) as f64);
+        rec.push(ctp as f64 / total_gt as f64);
+    }
+    // Monotone precision envelope, integrate over recall.
+    for i in (0..prec.len().saturating_sub(1)).rev() {
+        if prec[i] < prec[i + 1] {
+            prec[i] = prec[i + 1];
+        }
+    }
+    let mut ap = 0f64;
+    let mut prev_r = 0f64;
+    for i in 0..prec.len() {
+        ap += (rec[i] - prev_r) * prec[i];
+        prev_r = rec[i];
+    }
+    ap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bx(x0: f32, y0: f32, x1: f32, y1: f32) -> GtBox {
+        GtBox { x0, y0, x1, y1 }
+    }
+
+    #[test]
+    fn perfect_detections_ap_one() {
+        let gts = vec![vec![bx(0.0, 0.0, 10.0, 10.0)], vec![bx(5.0, 5.0, 15.0, 15.0)]];
+        let dets = vec![
+            Detection { img: 0, bbox: bx(0.0, 0.0, 10.0, 10.0), score: 0.9 },
+            Detection { img: 1, bbox: bx(5.0, 5.0, 15.0, 15.0), score: 0.8 },
+        ];
+        assert!((average_precision(&dets, &gts, 0.5) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn misses_reduce_ap() {
+        let gts = vec![vec![bx(0.0, 0.0, 10.0, 10.0), bx(20.0, 20.0, 30.0, 30.0)]];
+        let dets = vec![Detection { img: 0, bbox: bx(0.0, 0.0, 10.0, 10.0), score: 0.9 }];
+        // Recall caps at 0.5 with perfect precision → AP 0.5.
+        assert!((average_precision(&dets, &gts, 0.5) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duplicates_count_as_fp() {
+        let gts = vec![vec![bx(0.0, 0.0, 10.0, 10.0)]];
+        let dets = vec![
+            Detection { img: 0, bbox: bx(0.0, 0.0, 10.0, 10.0), score: 0.9 },
+            Detection { img: 0, bbox: bx(0.5, 0.5, 10.0, 10.0), score: 0.8 },
+        ];
+        let ap = average_precision(&dets, &gts, 0.5);
+        assert!((ap - 1.0).abs() < 1e-9, "duplicate after hit doesn't reduce AP, got {ap}");
+        // But a duplicate BEFORE the true hit does.
+        let dets2 = vec![
+            Detection { img: 0, bbox: bx(3.0, 3.0, 13.0, 13.0), score: 0.9 }, // IoU < 0.5
+            Detection { img: 0, bbox: bx(0.0, 0.0, 10.0, 10.0), score: 0.8 },
+        ];
+        let ap2 = average_precision(&dets2, &gts, 0.5);
+        assert!(ap2 < 1.0);
+    }
+
+    #[test]
+    fn empty_gt_zero() {
+        assert_eq!(average_precision(&[], &[], 0.5), 0.0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Mean intersection-over-union for semantic segmentation (Table 2).
+
+/// Streaming confusion-matrix accumulator.
+pub struct MiouAccum {
+    classes: usize,
+    // confusion[t * classes + p]
+    confusion: Vec<u64>,
+}
+
+impl MiouAccum {
+    /// New accumulator over `classes` classes.
+    pub fn new(classes: usize) -> Self {
+        MiouAccum { classes, confusion: vec![0; classes * classes] }
+    }
+
+    /// Add a batch of predictions vs targets (255 = ignore).
+    pub fn add(&mut self, pred: &[usize], target: &[usize]) {
+        debug_assert_eq!(pred.len(), target.len());
+        for (&p, &t) in pred.iter().zip(target) {
+            if t == 255 {
+                continue;
+            }
+            self.confusion[t * self.classes + p] += 1;
+        }
+    }
+
+    /// Per-class IoU; `None` for classes absent from both pred and target.
+    pub fn per_class_iou(&self) -> Vec<Option<f64>> {
+        (0..self.classes)
+            .map(|c| {
+                let tp = self.confusion[c * self.classes + c];
+                let fp: u64 = (0..self.classes)
+                    .filter(|&t| t != c)
+                    .map(|t| self.confusion[t * self.classes + c])
+                    .sum();
+                let fn_: u64 = (0..self.classes)
+                    .filter(|&p| p != c)
+                    .map(|p| self.confusion[c * self.classes + p])
+                    .sum();
+                let denom = tp + fp + fn_;
+                if denom == 0 {
+                    None
+                } else {
+                    Some(tp as f64 / denom as f64)
+                }
+            })
+            .collect()
+    }
+
+    /// Mean IoU over present classes (×100, as the paper reports).
+    pub fn miou(&self) -> f64 {
+        let ious: Vec<f64> = self.per_class_iou().into_iter().flatten().collect();
+        if ious.is_empty() {
+            0.0
+        } else {
+            100.0 * ious.iter().sum::<f64>() / ious.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_prediction() {
+        let mut m = MiouAccum::new(3);
+        m.add(&[0, 1, 2, 1], &[0, 1, 2, 1]);
+        assert_eq!(m.miou(), 100.0);
+    }
+
+    #[test]
+    fn half_overlap() {
+        let mut m = MiouAccum::new(2);
+        // Class 1: tp=1, fp=1, fn=1 → IoU 1/3. Class 0: tp=1, fp=1, fn=1 → 1/3.
+        m.add(&[1, 1, 0, 0], &[1, 0, 1, 0]);
+        assert!((m.miou() - 100.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ignore_label_skipped() {
+        let mut m = MiouAccum::new(2);
+        m.add(&[0, 1], &[0, 255]);
+        assert_eq!(m.miou(), 100.0); // only class 0 counted, perfect
+    }
+
+    #[test]
+    fn absent_classes_excluded() {
+        let mut m = MiouAccum::new(5);
+        m.add(&[0], &[0]);
+        let per = m.per_class_iou();
+        assert!(per[0].is_some());
+        assert!(per[4].is_none());
+    }
+}

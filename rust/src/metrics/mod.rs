@@ -1,0 +1,10 @@
+//! Evaluation metrics matching the paper's tables: top-1/top-5 accuracy
+//! (Table 1), mean IoU (Table 2), mAP@0.5 (Table 3).
+
+pub mod classify;
+pub mod map;
+pub mod miou;
+
+pub use classify::{top1, topk};
+pub use map::average_precision;
+pub use miou::MiouAccum;

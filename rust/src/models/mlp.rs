@@ -1,0 +1,36 @@
+//! Multi-layer perceptron — the smallest classification workload.
+
+use crate::dfp::rng::Rng;
+use crate::nn::activations::ReLU;
+use crate::nn::linear::Linear;
+use crate::nn::{Arith, Sequential};
+
+/// `dims = [in, h1, …, out]` MLP with ReLU between layers.
+pub fn mlp(dims: &[usize], arith: Arith, seed: u64) -> Sequential {
+    assert!(dims.len() >= 2);
+    let mut rng = Rng::new(seed);
+    let mut net = Sequential::new();
+    for i in 0..dims.len() - 1 {
+        net.push_boxed(Box::new(Linear::new(dims[i], dims[i + 1], arith, &mut rng)));
+        if i + 2 < dims.len() {
+            net.push_boxed(Box::new(ReLU::new()));
+        }
+    }
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Ctx, Layer, Tensor};
+
+    #[test]
+    fn shapes_and_params() {
+        let mut net = mlp(&[8, 16, 4], Arith::Float, 0);
+        let x = Tensor::new(vec![0.1; 16], vec![2, 8]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = net.forward(&x, &mut ctx);
+        assert_eq!(y.shape, vec![2, 4]);
+        assert_eq!(net.param_count(), 8 * 16 + 16 + 16 * 4 + 4);
+    }
+}

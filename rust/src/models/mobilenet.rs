@@ -1,0 +1,179 @@
+//! MobileNetV2-style inverted-residual network (Table 1's second
+//! conventional vision model), scaled down. Depthwise convolutions are
+//! expressed as grouped 3×3 convs implemented channel-by-channel (each
+//! channel is its own 1-channel integer conv — same inner-product math).
+
+use crate::dfp::rng::Rng;
+use crate::nn::batchnorm::batchnorm;
+use crate::nn::blocks::{Residual, Sequential};
+use crate::nn::conv2d::Conv2d;
+use crate::nn::linear::Linear;
+use crate::nn::pool::GlobalAvgPool;
+use crate::nn::{activations::ReLU, Arith, Ctx, Layer, Param, Tensor};
+
+/// Depthwise 3×3 conv: one independent spatial filter per channel.
+pub struct DepthwiseConv {
+    convs: Vec<Conv2d>,
+    ch: usize,
+}
+
+impl DepthwiseConv {
+    /// New depthwise conv over `ch` channels.
+    pub fn new(ch: usize, stride: usize, h: usize, w: usize, arith: Arith, rng: &mut Rng) -> Self {
+        let convs =
+            (0..ch).map(|_| Conv2d::new(1, 1, 3, stride, 1, h, w, arith, rng)).collect();
+        DepthwiseConv { convs, ch }
+    }
+}
+
+impl Layer for DepthwiseConv {
+    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        assert_eq!(c, self.ch);
+        let mut out: Option<Vec<f32>> = None;
+        let mut oshape = Vec::new();
+        for ci in 0..c {
+            // Slice channel ci across the batch.
+            let mut xi = vec![0f32; n * h * w];
+            for b in 0..n {
+                xi[b * h * w..(b + 1) * h * w]
+                    .copy_from_slice(&x.data[(b * c + ci) * h * w..(b * c + ci + 1) * h * w]);
+            }
+            let y = self.convs[ci].forward(&Tensor::new(xi, vec![n, 1, h, w]), ctx);
+            let (ho, wo) = (y.shape[2], y.shape[3]);
+            let o = out.get_or_insert_with(|| vec![0f32; n * c * ho * wo]);
+            oshape = vec![n, c, ho, wo];
+            for b in 0..n {
+                o[(b * c + ci) * ho * wo..(b * c + ci + 1) * ho * wo]
+                    .copy_from_slice(&y.data[b * ho * wo..(b + 1) * ho * wo]);
+            }
+        }
+        Tensor::new(out.unwrap_or_default(), oshape)
+    }
+
+    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let (n, c, ho, wo) = (gy.shape[0], gy.shape[1], gy.shape[2], gy.shape[3]);
+        let mut out: Option<Vec<f32>> = None;
+        let mut oshape = Vec::new();
+        for ci in 0..c {
+            let mut gi = vec![0f32; n * ho * wo];
+            for b in 0..n {
+                gi[b * ho * wo..(b + 1) * ho * wo]
+                    .copy_from_slice(&gy.data[(b * c + ci) * ho * wo..(b * c + ci + 1) * ho * wo]);
+            }
+            let gx = self.convs[ci].backward(&Tensor::new(gi, vec![n, 1, ho, wo]), ctx);
+            let (h, w) = (gx.shape[2], gx.shape[3]);
+            let o = out.get_or_insert_with(|| vec![0f32; n * c * h * w]);
+            oshape = vec![n, c, h, w];
+            for b in 0..n {
+                o[(b * c + ci) * h * w..(b * c + ci + 1) * h * w]
+                    .copy_from_slice(&gx.data[b * h * w..(b + 1) * h * w]);
+            }
+        }
+        Tensor::new(out.unwrap_or_default(), oshape)
+    }
+
+    fn params(&mut self) -> Vec<&mut Param> {
+        self.convs.iter_mut().flat_map(|c| c.params()).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "dwconv"
+    }
+}
+
+/// Inverted-residual block: 1×1 expand → depthwise 3×3 → 1×1 project,
+/// with an integer residual join when shapes allow.
+#[allow(clippy::too_many_arguments)]
+fn inverted_residual(
+    c_in: usize,
+    c_out: usize,
+    expand: usize,
+    stride: usize,
+    h: usize,
+    w: usize,
+    arith: Arith,
+    rng: &mut Rng,
+) -> Box<dyn Layer> {
+    let hidden = c_in * expand;
+    let main = Sequential::new()
+        .push(Conv2d::new(c_in, hidden, 1, 1, 0, h, w, arith, rng))
+        .push(batchnorm(hidden, arith))
+        .push(ReLU::new())
+        .push(DepthwiseConv::new(hidden, stride, h, w, arith, rng))
+        .push(batchnorm(hidden, arith))
+        .push(ReLU::new())
+        .push(Conv2d::new(hidden, c_out, 1, 1, 0, h / stride, w / stride, arith, rng))
+        .push(batchnorm(c_out, arith));
+    if stride == 1 && c_in == c_out {
+        let mut r = Residual::new(main, Sequential::new(), arith);
+        r.post_relu = false; // MobileNetV2: linear bottleneck, no post-ReLU
+        Box::new(r)
+    } else {
+        Box::new(main)
+    }
+}
+
+/// Tiny MobileNetV2-style classifier.
+pub fn mobilenet_tiny(
+    classes: usize,
+    ch_in: usize,
+    hw: usize,
+    arith: Arith,
+    seed: u64,
+) -> Sequential {
+    let mut rng = Rng::new(seed);
+    let mut net = Sequential::new()
+        .push(Conv2d::new(ch_in, 8, 3, 1, 1, hw, hw, arith, &mut rng))
+        .push(batchnorm(8, arith))
+        .push(ReLU::new());
+    net.push_boxed(inverted_residual(8, 8, 2, 1, hw, hw, arith, &mut rng));
+    net.push_boxed(inverted_residual(8, 16, 2, 2, hw, hw, arith, &mut rng));
+    net.push_boxed(inverted_residual(16, 16, 2, 1, hw / 2, hw / 2, arith, &mut rng));
+    net.push_boxed(inverted_residual(16, 32, 2, 2, hw / 2, hw / 2, arith, &mut rng));
+    net.push_boxed(Box::new(GlobalAvgPool::new()));
+    net.push_boxed(Box::new(Linear::new(32, classes, arith, &mut rng)));
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_backward_shapes() {
+        let mut net = mobilenet_tiny(10, 3, 16, Arith::Float, 1);
+        let x = Tensor::new(vec![0.1; 3 * 16 * 16], vec![1, 3, 16, 16]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = net.forward(&x, &mut ctx);
+        assert_eq!(y.shape, vec![1, 10]);
+        let g = net.backward(&y, &mut ctx);
+        assert_eq!(g.shape, vec![1, 3, 16, 16]);
+    }
+
+    #[test]
+    fn depthwise_channels_independent() {
+        let mut rng = Rng::new(2);
+        let mut dw = DepthwiseConv::new(2, 1, 4, 4, Arith::Float, &mut rng);
+        let mut x = Tensor::new(vec![0.0; 2 * 16], vec![1, 2, 4, 4]);
+        x.data[0] = 1.0; // channel 0 only
+        let mut ctx = Ctx::eval(0);
+        let y = dw.forward(&x, &mut ctx);
+        // Channel 1 output unaffected by channel 0 input (minus bias).
+        let mut x2 = Tensor::new(vec![0.0; 2 * 16], vec![1, 2, 4, 4]);
+        x2.data[0] = 5.0;
+        let y2 = dw.forward(&x2, &mut ctx);
+        for i in 16..32 {
+            assert_eq!(y.data[i], y2.data[i]);
+        }
+    }
+
+    #[test]
+    fn int_mode_runs() {
+        let mut net = mobilenet_tiny(4, 3, 8, Arith::int8(), 3);
+        let x = Tensor::new(vec![0.3; 3 * 64], vec![1, 3, 8, 8]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = net.forward(&x, &mut ctx);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,17 @@
+//! Model zoo — the architectures of the paper's experiments, scaled to a
+//! CPU-simulation budget (DESIGN.md §Substitutions), all built from the
+//! arithmetic-parametric layers of [`crate::nn`].
+
+pub mod mlp;
+pub mod mobilenet;
+pub mod resnet;
+pub mod ssd;
+pub mod unet;
+pub mod vit;
+
+pub use mlp::mlp;
+pub use mobilenet::mobilenet_tiny;
+pub use resnet::{resnet_cifar, resnet_tiny};
+pub use ssd::SsdLite;
+pub use unet::fcn_seg;
+pub use vit::VitTiny;

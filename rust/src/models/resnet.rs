@@ -1,0 +1,111 @@
+//! ResNet-CIFAR — the ResNet18 stand-in (same layer types: 3×3 convs,
+//! batch-norm with integer fwd+bwd, residual joins, global pool, linear).
+//!
+//! Structure follows the CIFAR ResNet family: a 3×3 stem then three stages
+//! of `n` basic blocks at widths `[w, 2w, 4w]`, stride-2 at stage entry.
+
+use crate::dfp::rng::Rng;
+use crate::nn::batchnorm::batchnorm;
+use crate::nn::blocks::{Residual, Sequential};
+use crate::nn::conv2d::Conv2d;
+use crate::nn::linear::Linear;
+use crate::nn::pool::GlobalAvgPool;
+use crate::nn::{activations::ReLU, Arith};
+
+/// A basic residual block: conv-BN-ReLU-conv-BN (+1×1-conv-BN shortcut on
+/// shape change), integer join + post-ReLU.
+#[allow(clippy::too_many_arguments)]
+fn basic_block(
+    c_in: usize,
+    c_out: usize,
+    stride: usize,
+    h: usize,
+    w: usize,
+    arith: Arith,
+    rng: &mut Rng,
+) -> Residual {
+    let main = Sequential::new()
+        .push(Conv2d::new(c_in, c_out, 3, stride, 1, h, w, arith, rng))
+        .push(batchnorm(c_out, arith))
+        .push(ReLU::new())
+        .push(Conv2d::new(c_out, c_out, 3, 1, 1, h / stride, w / stride, arith, rng))
+        .push(batchnorm(c_out, arith));
+    let shortcut = if stride != 1 || c_in != c_out {
+        Sequential::new()
+            .push(Conv2d::new(c_in, c_out, 1, stride, 0, h, w, arith, rng))
+            .push(batchnorm(c_out, arith))
+    } else {
+        Sequential::new()
+    };
+    Residual::new(main, shortcut, arith)
+}
+
+/// CIFAR-style ResNet with `n` blocks per stage and stem width `w0`
+/// (n=1, w0=8 ⇒ "resnet-tiny"; n=3, w0=16 ⇒ ResNet-20).
+pub fn resnet_cifar(
+    n: usize,
+    w0: usize,
+    classes: usize,
+    ch_in: usize,
+    hw: usize,
+    arith: Arith,
+    seed: u64,
+) -> Sequential {
+    let mut rng = Rng::new(seed);
+    let mut net = Sequential::new()
+        .push(Conv2d::new(ch_in, w0, 3, 1, 1, hw, hw, arith, &mut rng))
+        .push(batchnorm(w0, arith))
+        .push(ReLU::new());
+    let mut c = w0;
+    let mut res = hw;
+    for (stage, width) in [w0, 2 * w0, 4 * w0].into_iter().enumerate() {
+        for b in 0..n {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            net.push_boxed(Box::new(basic_block(c, width, stride, res, res, arith, &mut rng)));
+            c = width;
+            res /= stride;
+        }
+    }
+    net.push_boxed(Box::new(GlobalAvgPool::new()));
+    net.push_boxed(Box::new(Linear::new(c, classes, arith, &mut rng)));
+    net
+}
+
+/// The small fast variant used by most experiments.
+pub fn resnet_tiny(classes: usize, ch_in: usize, hw: usize, arith: Arith, seed: u64) -> Sequential {
+    resnet_cifar(1, 8, classes, ch_in, hw, arith, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Ctx, Layer, Tensor};
+
+    #[test]
+    fn forward_backward_shapes() {
+        let mut net = resnet_tiny(10, 3, 16, Arith::Float, 1);
+        let x = Tensor::new(vec![0.1; 2 * 3 * 16 * 16], vec![2, 3, 16, 16]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = net.forward(&x, &mut ctx);
+        assert_eq!(y.shape, vec![2, 10]);
+        let g = net.backward(&y, &mut ctx);
+        assert_eq!(g.shape, vec![2, 3, 16, 16]);
+    }
+
+    #[test]
+    fn int_mode_runs() {
+        let mut net = resnet_tiny(4, 3, 16, Arith::int8(), 2);
+        let x = Tensor::new(vec![0.2; 3 * 16 * 16], vec![1, 3, 16, 16]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = net.forward(&x, &mut ctx);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        let g = net.backward(&y, &mut ctx);
+        assert!(g.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn deeper_variant_builds() {
+        let mut net = resnet_cifar(2, 8, 10, 3, 32, Arith::Float, 3);
+        assert!(net.param_count() > 20_000, "got {}", net.param_count());
+    }
+}

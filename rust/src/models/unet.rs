@@ -1,0 +1,84 @@
+//! Fully-convolutional segmentation network — the DeepLab stand-in
+//! (Table 2): encoder with stride-2 downsampling, decoder with ×2
+//! nearest upsampling, per-pixel class logits. Batch-norms can be frozen
+//! as in the paper's segmentation protocol.
+
+use crate::dfp::rng::Rng;
+use crate::nn::batchnorm::{batchnorm, BnWithCache};
+use crate::nn::blocks::Sequential;
+use crate::nn::conv2d::Conv2d;
+use crate::nn::pool::Upsample2;
+use crate::nn::{activations::ReLU, Arith};
+
+/// Encoder–decoder FCN producing `[N, classes, H, W]` logits.
+///
+/// `frozen_bn` freezes batch-norm statistics and affine parameters
+/// (the paper's segmentation/detection setting).
+pub fn fcn_seg(
+    classes: usize,
+    ch_in: usize,
+    hw: usize,
+    width: usize,
+    frozen_bn: bool,
+    arith: Arith,
+    seed: u64,
+) -> Sequential {
+    let mut rng = Rng::new(seed);
+    let bn = |ch: usize, rng_frozen: bool| -> BnWithCache {
+        let mut b = batchnorm(ch, arith);
+        b.bn().frozen = rng_frozen;
+        b
+    };
+    let w2 = width * 2;
+    Sequential::new()
+        // Encoder.
+        .push(Conv2d::new(ch_in, width, 3, 1, 1, hw, hw, arith, &mut rng))
+        .push(bn(width, frozen_bn))
+        .push(ReLU::new())
+        .push(Conv2d::new(width, width, 3, 2, 1, hw, hw, arith, &mut rng)) // ↓2
+        .push(bn(width, frozen_bn))
+        .push(ReLU::new())
+        .push(Conv2d::new(width, w2, 3, 2, 1, hw / 2, hw / 2, arith, &mut rng)) // ↓4
+        .push(bn(w2, frozen_bn))
+        .push(ReLU::new())
+        // Bottleneck.
+        .push(Conv2d::new(w2, w2, 3, 1, 1, hw / 4, hw / 4, arith, &mut rng))
+        .push(bn(w2, frozen_bn))
+        .push(ReLU::new())
+        // Decoder.
+        .push(Upsample2::new()) // ↑2
+        .push(Conv2d::new(w2, width, 3, 1, 1, hw / 2, hw / 2, arith, &mut rng))
+        .push(bn(width, frozen_bn))
+        .push(ReLU::new())
+        .push(Upsample2::new()) // ↑1
+        .push(Conv2d::new(width, width, 3, 1, 1, hw, hw, arith, &mut rng))
+        .push(bn(width, frozen_bn))
+        .push(ReLU::new())
+        .push(Conv2d::new(width, classes, 1, 1, 0, hw, hw, arith, &mut rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Ctx, Layer, Tensor};
+
+    #[test]
+    fn output_is_per_pixel_logits() {
+        let mut net = fcn_seg(6, 3, 16, 8, true, Arith::Float, 1);
+        let x = Tensor::new(vec![0.1; 3 * 256], vec![1, 3, 16, 16]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = net.forward(&x, &mut ctx);
+        assert_eq!(y.shape, vec![1, 6, 16, 16]);
+        let g = net.backward(&y, &mut ctx);
+        assert_eq!(g.shape, vec![1, 3, 16, 16]);
+    }
+
+    #[test]
+    fn int_mode_finite() {
+        let mut net = fcn_seg(4, 3, 16, 4, true, Arith::int8(), 2);
+        let x = Tensor::new(vec![0.2; 3 * 256], vec![1, 3, 16, 16]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = net.forward(&x, &mut ctx);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+}

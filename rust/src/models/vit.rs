@@ -1,0 +1,301 @@
+//! ViT-tiny — the vision-transformer experiment (Table 1, §5): patch
+//! embedding, pre-norm transformer blocks with int8 linear / matmul /
+//! layer-norm, float softmax (exactly the paper's quantization boundary),
+//! mean-pooled classification head.
+
+use crate::dfp::rng::Rng;
+use crate::nn::activations::Gelu;
+use crate::nn::attention::MultiHeadAttention;
+use crate::nn::blocks::residual_add;
+use crate::nn::layernorm::LayerNorm;
+use crate::nn::linear::Linear;
+use crate::nn::{Arith, Ctx, Layer, Param, Tensor};
+
+/// One pre-norm transformer block: `x += MHA(LN(x)); x += MLP(LN(x))`,
+/// residual joins in integer.
+pub struct TransformerBlock {
+    ln1: LayerNorm,
+    attn: MultiHeadAttention,
+    ln2: LayerNorm,
+    fc1: Linear,
+    act: Gelu,
+    fc2: Linear,
+    arith: Arith,
+}
+
+impl TransformerBlock {
+    /// New block with MLP ratio 2.
+    pub fn new(dim: usize, heads: usize, causal: bool, arith: Arith, rng: &mut Rng) -> Self {
+        TransformerBlock {
+            ln1: LayerNorm::new(dim, arith),
+            attn: MultiHeadAttention::new(dim, heads, causal, arith, rng),
+            ln2: LayerNorm::new(dim, arith),
+            fc1: Linear::new(dim, 2 * dim, arith, rng),
+            act: Gelu::new(),
+            fc2: Linear::new(2 * dim, dim, arith, rng),
+            arith,
+        }
+    }
+}
+
+impl Layer for TransformerBlock {
+    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let h = self.ln1.forward(x, ctx);
+        let a = self.attn.forward(&h, ctx);
+        let x1 = residual_add(x, &a, &self.arith, ctx, false);
+        let h2 = self.ln2.forward(&x1, ctx);
+        let m = self.fc1.forward(&h2, ctx);
+        let m = self.act.forward(&m, ctx);
+        let m = self.fc2.forward(&m, ctx);
+        residual_add(&x1, &m, &self.arith, ctx, false)
+    }
+
+    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+        // Backward of x2 = x1 + MLP(LN2(x1)).
+        let gm = self.fc2.backward(gy, ctx);
+        let gm = self.act.backward(&gm, ctx);
+        let gm = self.fc1.backward(&gm, ctx);
+        let gln2 = self.ln2.backward(&gm, ctx);
+        let gx1 = residual_add(gy, &gln2, &self.arith, ctx, true);
+        // Backward of x1 = x + MHA(LN1(x)).
+        let ga = self.attn.backward(&gx1, ctx);
+        let gln1 = self.ln1.backward(&ga, ctx);
+        residual_add(&gx1, &gln1, &self.arith, ctx, true)
+    }
+
+    fn params(&mut self) -> Vec<&mut Param> {
+        let mut p = self.ln1.params();
+        p.extend(self.attn.params());
+        p.extend(self.ln2.params());
+        p.extend(self.fc1.params());
+        p.extend(self.fc2.params());
+        p
+    }
+
+    fn name(&self) -> &'static str {
+        "transformer_block"
+    }
+}
+
+/// ViT-tiny image classifier.
+pub struct VitTiny {
+    patch_proj: Linear,
+    pos: Param,
+    blocks: Vec<TransformerBlock>,
+    head: Linear,
+    /// Patch side.
+    pub patch: usize,
+    /// Input side.
+    pub hw: usize,
+    /// Channels.
+    pub ch: usize,
+    /// Embedding dim.
+    pub dim: usize,
+    saved_bt: (usize, usize),
+}
+
+impl VitTiny {
+    /// New ViT-tiny: `depth` blocks of width `dim`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        classes: usize,
+        ch: usize,
+        hw: usize,
+        patch: usize,
+        dim: usize,
+        depth: usize,
+        heads: usize,
+        arith: Arith,
+        seed: u64,
+    ) -> Self {
+        assert_eq!(hw % patch, 0);
+        let mut rng = Rng::new(seed);
+        let t = (hw / patch) * (hw / patch);
+        let pos: Vec<f32> = (0..t * dim).map(|_| rng.next_gaussian() * 0.02).collect();
+        VitTiny {
+            patch_proj: Linear::new(ch * patch * patch, dim, arith, &mut rng),
+            pos: Param::new(pos, vec![t, dim]),
+            blocks: (0..depth)
+                .map(|_| TransformerBlock::new(dim, heads, false, arith, &mut rng))
+                .collect(),
+            head: Linear::new(dim, classes, arith, &mut rng),
+            patch,
+            hw,
+            ch,
+            dim,
+            saved_bt: (0, 0),
+        }
+    }
+
+    /// Extract non-overlapping patches: `[B, T, ch·p·p]`.
+    fn patchify(&self, x: &Tensor) -> Tensor {
+        let (b, c, hw, p) = (x.shape[0], self.ch, self.hw, self.patch);
+        let g = hw / p;
+        let t = g * g;
+        let plen = c * p * p;
+        let mut out = vec![0f32; b * t * plen];
+        for bi in 0..b {
+            for gy in 0..g {
+                for gx in 0..g {
+                    let tok = gy * g + gx;
+                    for ci in 0..c {
+                        for py in 0..p {
+                            for px in 0..p {
+                                out[(bi * t + tok) * plen + ci * p * p + py * p + px] = x.data
+                                    [((bi * c + ci) * hw + gy * p + py) * hw + gx * p + px];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Tensor::new(out, vec![b, t, plen])
+    }
+}
+
+impl Layer for VitTiny {
+    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let b = x.shape[0];
+        let patches = self.patchify(x);
+        let t = patches.shape[1];
+        let mut h = self.patch_proj.forward(&patches, ctx);
+        // Learned position embeddings (plain add — a parameter, exact).
+        for bi in 0..b {
+            for i in 0..t * self.dim {
+                h.data[bi * t * self.dim + i] += self.pos.data[i];
+            }
+        }
+        let mut h = Tensor::new(h.data, vec![b, t, self.dim]);
+        for blk in self.blocks.iter_mut() {
+            h = blk.forward(&h, ctx);
+        }
+        // Mean pool over tokens.
+        let mut pooled = vec![0f32; b * self.dim];
+        for bi in 0..b {
+            for tok in 0..t {
+                for d in 0..self.dim {
+                    pooled[bi * self.dim + d] += h.data[(bi * t + tok) * self.dim + d];
+                }
+            }
+        }
+        for v in pooled.iter_mut() {
+            *v /= t as f32;
+        }
+        self.saved_bt = (b, t);
+        self.head.forward(&Tensor::new(pooled, vec![b, self.dim]), ctx)
+    }
+
+    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let (b, t) = self.saved_bt;
+        let gp = self.head.backward(gy, ctx); // [B, dim]
+        // Un-pool: broadcast /t.
+        let mut gh = vec![0f32; b * t * self.dim];
+        for bi in 0..b {
+            for tok in 0..t {
+                for d in 0..self.dim {
+                    gh[(bi * t + tok) * self.dim + d] = gp.data[bi * self.dim + d] / t as f32;
+                }
+            }
+        }
+        let mut gh = Tensor::new(gh, vec![b, t, self.dim]);
+        for blk in self.blocks.iter_mut().rev() {
+            gh = blk.backward(&gh, ctx);
+        }
+        // Position-embedding gradient.
+        for bi in 0..b {
+            for i in 0..t * self.dim {
+                self.pos.grad[i] += gh.data[bi * t * self.dim + i];
+            }
+        }
+        let gpatches = self.patch_proj.backward(&gh, ctx);
+        // Un-patchify to image shape.
+        let (c, hw, p) = (self.ch, self.hw, self.patch);
+        let g = hw / p;
+        let plen = c * p * p;
+        let mut gx = vec![0f32; b * c * hw * hw];
+        for bi in 0..b {
+            for gy2 in 0..g {
+                for gx2 in 0..g {
+                    let tok = gy2 * g + gx2;
+                    for ci in 0..c {
+                        for py in 0..p {
+                            for px in 0..p {
+                                gx[((bi * c + ci) * hw + gy2 * p + py) * hw + gx2 * p + px] =
+                                    gpatches.data[(bi * g * g + tok) * plen + ci * p * p + py * p + px];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Tensor::new(gx, vec![b, c, hw, hw])
+    }
+
+    fn params(&mut self) -> Vec<&mut Param> {
+        let mut ps = self.patch_proj.params();
+        ps.push(&mut self.pos);
+        for blk in self.blocks.iter_mut() {
+            ps.extend(blk.params());
+        }
+        ps.extend(self.head.params());
+        ps
+    }
+
+    fn name(&self) -> &'static str {
+        "vit_tiny"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_backward_shapes() {
+        let mut vit = VitTiny::new(10, 3, 16, 4, 32, 2, 4, Arith::Float, 1);
+        let x = Tensor::new(vec![0.1; 2 * 3 * 256], vec![2, 3, 16, 16]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = vit.forward(&x, &mut ctx);
+        assert_eq!(y.shape, vec![2, 10]);
+        let g = vit.backward(&y, &mut ctx);
+        assert_eq!(g.shape, vec![2, 3, 16, 16]);
+    }
+
+    #[test]
+    fn int_mode_finite() {
+        let mut vit = VitTiny::new(4, 3, 8, 4, 16, 1, 2, Arith::int8(), 2);
+        let x = Tensor::new(vec![0.2; 3 * 64], vec![1, 3, 8, 8]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = vit.forward(&x, &mut ctx);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        let g = vit.backward(&y, &mut ctx);
+        assert!(g.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn transformer_block_gradcheck_float() {
+        let mut rng = Rng::new(3);
+        let mut blk = TransformerBlock::new(8, 2, false, Arith::Float, &mut rng);
+        let x = Tensor::new((0..24).map(|i| ((i as f32) * 0.31).sin() * 0.5).collect(), vec![1, 3, 8]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = blk.forward(&x, &mut ctx);
+        let gx = blk.backward(&y, &mut ctx);
+        let eps = 1e-2;
+        for i in [0usize, 11, 23] {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let mut c1 = Ctx::train(0, 0);
+            let mut c2 = Ctx::train(0, 0);
+            let lp: f32 = blk.forward(&xp, &mut c1).data.iter().map(|v| 0.5 * v * v).sum();
+            let lm: f32 = blk.forward(&xm, &mut c2).data.iter().map(|v| 0.5 * v * v).sum();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - gx.data[i]).abs() < 8e-2 * fd.abs().max(0.5),
+                "i={i} fd={fd} got={}",
+                gx.data[i]
+            );
+        }
+    }
+}

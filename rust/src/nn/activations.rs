@@ -1,0 +1,154 @@
+//! Activation layers.
+//!
+//! ReLU is a pure sign test, so its "integer" variant is exact — the
+//! forward masks negative payloads, the backward masks the gradient by the
+//! saved sign mask; no representation mapping is involved. GELU (used by
+//! transformer blocks) stays in float, matching the paper's treatment of
+//! softmax ("the computation of softmax in attention mechanism is in
+//! floating point").
+
+use super::{Ctx, Layer, Tensor};
+
+/// Rectified linear unit.
+pub struct ReLU {
+    mask: Vec<bool>,
+}
+
+impl ReLU {
+    /// New ReLU.
+    pub fn new() -> Self {
+        ReLU { mask: Vec::new() }
+    }
+}
+
+impl Default for ReLU {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for ReLU {
+    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let y: Vec<f32> = x.data.iter().map(|&v| v.max(0.0)).collect();
+        if ctx.train {
+            self.mask = x.data.iter().map(|&v| v > 0.0).collect();
+        }
+        Tensor::new(y, x.shape.clone())
+    }
+
+    fn backward(&mut self, gy: &Tensor, _ctx: &mut Ctx) -> Tensor {
+        let g: Vec<f32> =
+            gy.data.iter().zip(&self.mask).map(|(&g, &m)| if m { g } else { 0.0 }).collect();
+        Tensor::new(g, gy.shape.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "relu"
+    }
+}
+
+/// Gaussian error linear unit (tanh approximation), float — the
+/// transformer's pointwise nonlinearity, kept in fp like softmax.
+pub struct Gelu {
+    saved_x: Vec<f32>,
+}
+
+impl Gelu {
+    /// New GELU.
+    pub fn new() -> Self {
+        Gelu { saved_x: Vec::new() }
+    }
+
+    #[inline]
+    fn phi(x: f32) -> f32 {
+        // tanh approximation of the Gaussian CDF.
+        const C: f32 = 0.7978845608; // sqrt(2/π)
+        0.5 * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+    }
+}
+
+impl Default for Gelu {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for Gelu {
+    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+        if ctx.train {
+            self.saved_x = x.data.clone();
+        }
+        let y: Vec<f32> = x.data.iter().map(|&v| v * Self::phi(v)).collect();
+        Tensor::new(y, x.shape.clone())
+    }
+
+    fn backward(&mut self, gy: &Tensor, _ctx: &mut Ctx) -> Tensor {
+        let eps = 1e-3;
+        let g: Vec<f32> = gy
+            .data
+            .iter()
+            .zip(&self.saved_x)
+            .map(|(&g, &x)| {
+                // Analytic derivative via central difference of x·Φ(x) is
+                // accurate enough and keeps the code tiny; the nonlinearity
+                // is off the integer path by design.
+                let d = ((x + eps) * Self::phi(x + eps) - (x - eps) * Self::phi(x - eps))
+                    / (2.0 * eps);
+                g * d
+            })
+            .collect();
+        Tensor::new(g, gy.shape.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "gelu"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_forward_backward() {
+        let mut r = ReLU::new();
+        let x = Tensor::new(vec![-1.0, 0.0, 2.0, -0.5], vec![4]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = r.forward(&x, &mut ctx);
+        assert_eq!(y.data, vec![0.0, 0.0, 2.0, 0.0]);
+        let g = r.backward(&Tensor::new(vec![1.0; 4], vec![4]), &mut ctx);
+        assert_eq!(g.data, vec![0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn gelu_matches_known_values() {
+        let mut g = Gelu::new();
+        let x = Tensor::new(vec![0.0, 1.0, -1.0], vec![3]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = g.forward(&x, &mut ctx);
+        assert!((y.data[0] - 0.0).abs() < 1e-6);
+        assert!((y.data[1] - 0.8412).abs() < 1e-3);
+        assert!((y.data[2] + 0.1588).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_gradcheck() {
+        let mut g = Gelu::new();
+        let x = Tensor::new(vec![0.3, -0.7, 1.5], vec![3]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = g.forward(&x, &mut ctx);
+        let gx = g.backward(&y, &mut ctx);
+        let eps = 1e-3;
+        for i in 0..3 {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let mut c = Ctx::train(0, 0);
+            let lp: f32 = g.forward(&xp, &mut c).data.iter().map(|v| 0.5 * v * v).sum();
+            let lm: f32 = g.forward(&xm, &mut c).data.iter().map(|v| 0.5 * v * v).sum();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - gx.data[i]).abs() < 1e-2 * fd.abs().max(1.0));
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Multi-head self-attention with int8 matrix multiplies.
+//!
+//! Matches the paper's ViT configuration (§5): the QKV/output projections
+//! and both attention matmuls (`Q·Kᵀ`, `P·V`) run in integer; **softmax
+//! stays in floating point** ("the computation of softmax in attention
+//! mechanism is in floating point").
+
+use super::linear::Linear;
+use super::qmat::{qgemm, MatKind};
+use super::softmax_ce::softmax_rows;
+use super::{Arith, Ctx, Layer, Param, Tensor};
+
+/// Multi-head self-attention over `[B, T, D]` inputs.
+pub struct MultiHeadAttention {
+    qkv: Linear,
+    proj: Linear,
+    /// Model dim.
+    pub dim: usize,
+    /// Head count (must divide dim).
+    pub heads: usize,
+    /// Causal masking (LM mode) vs bidirectional (ViT mode).
+    pub causal: bool,
+    arith: Arith,
+    // saved per forward: flattened per (batch·head) tensors
+    saved_q: Vec<f32>,
+    saved_k: Vec<f32>,
+    saved_v: Vec<f32>,
+    saved_p: Vec<f32>,
+    saved_bt: (usize, usize),
+}
+
+impl MultiHeadAttention {
+    /// New MHA layer.
+    pub fn new(dim: usize, heads: usize, causal: bool, arith: Arith, rng: &mut crate::dfp::rng::Rng) -> Self {
+        assert_eq!(dim % heads, 0);
+        MultiHeadAttention {
+            qkv: Linear::new(dim, 3 * dim, arith, rng),
+            proj: Linear::new(dim, dim, arith, rng),
+            dim,
+            heads,
+            causal,
+            arith,
+            saved_q: Vec::new(),
+            saved_k: Vec::new(),
+            saved_v: Vec::new(),
+            saved_p: Vec::new(),
+            saved_bt: (0, 0),
+        }
+    }
+
+    fn dh(&self) -> usize {
+        self.dim / self.heads
+    }
+}
+
+impl Layer for MultiHeadAttention {
+    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let (b, t, d) = (x.shape[0], x.shape[1], x.shape[2]);
+        assert_eq!(d, self.dim);
+        let dh = self.dh();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let qkv = self.qkv.forward(x, ctx); // [B,T,3D]
+        // Split into per-(batch,head) q/k/v panels [T × dh].
+        let nbh = b * self.heads;
+        let mut q = vec![0f32; nbh * t * dh];
+        let mut k = vec![0f32; nbh * t * dh];
+        let mut v = vec![0f32; nbh * t * dh];
+        for bb in 0..b {
+            for tt in 0..t {
+                let base = (bb * t + tt) * 3 * d;
+                for h in 0..self.heads {
+                    let dst = ((bb * self.heads + h) * t + tt) * dh;
+                    for c in 0..dh {
+                        q[dst + c] = qkv.data[base + h * dh + c] * scale;
+                        k[dst + c] = qkv.data[base + d + h * dh + c];
+                        v[dst + c] = qkv.data[base + 2 * d + h * dh + c];
+                    }
+                }
+            }
+        }
+        // Attention per (batch, head).
+        let mut p_all = vec![0f32; nbh * t * t];
+        let mut o = vec![0f32; b * t * d];
+        for bh in 0..nbh {
+            let qs = &q[bh * t * dh..(bh + 1) * t * dh];
+            let ks = &k[bh * t * dh..(bh + 1) * t * dh];
+            let vs = &v[bh * t * dh..(bh + 1) * t * dh];
+            // scores = Q·Kᵀ (integer matmul in Int mode).
+            let mut s = qgemm(&self.arith, MatKind::ABT, qs, ks, (t, dh, t), ctx, false);
+            if self.causal {
+                for i in 0..t {
+                    for j in (i + 1)..t {
+                        s[i * t + j] = -1e30;
+                    }
+                }
+            }
+            let p = softmax_rows(&s, t, t); // float softmax (paper)
+            // context = P·V (integer matmul).
+            let oc = qgemm(&self.arith, MatKind::AB, &p, vs, (t, t, dh), ctx, false);
+            p_all[bh * t * t..(bh + 1) * t * t].copy_from_slice(&p);
+            let bb = bh / self.heads;
+            let h = bh % self.heads;
+            for tt in 0..t {
+                for c in 0..dh {
+                    o[(bb * t + tt) * d + h * dh + c] = oc[tt * dh + c];
+                }
+            }
+        }
+        if ctx.train {
+            self.saved_q = q;
+            self.saved_k = k;
+            self.saved_v = v;
+            self.saved_p = p_all;
+            self.saved_bt = (b, t);
+        }
+        self.proj.forward(&Tensor::new(o, vec![b, t, d]), ctx)
+    }
+
+    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let (b, t) = self.saved_bt;
+        let d = self.dim;
+        let dh = self.dh();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let go_all = self.proj.backward(gy, ctx); // [B,T,D]
+        let nbh = b * self.heads;
+        let mut gqkv = vec![0f32; b * t * 3 * d];
+        for bh in 0..nbh {
+            let bb = bh / self.heads;
+            let h = bh % self.heads;
+            // Gather this head's output gradient [T × dh].
+            let mut go = vec![0f32; t * dh];
+            for tt in 0..t {
+                for c in 0..dh {
+                    go[tt * dh + c] = go_all.data[(bb * t + tt) * d + h * dh + c];
+                }
+            }
+            let p = &self.saved_p[bh * t * t..(bh + 1) * t * t];
+            let vs = &self.saved_v[bh * t * dh..(bh + 1) * t * dh];
+            let qs = &self.saved_q[bh * t * dh..(bh + 1) * t * dh];
+            let ks = &self.saved_k[bh * t * dh..(bh + 1) * t * dh];
+            // gP = gO·Vᵀ ; gV = Pᵀ·gO (integer matmuls).
+            let gp = qgemm(&self.arith, MatKind::ABT, &go, vs, (t, dh, t), ctx, true);
+            let gv = qgemm(&self.arith, MatKind::ATB, p, &go, (t, t, dh), ctx, true);
+            // Softmax backward (float): gS_ij = P_ij (gP_ij − Σ_k gP_ik P_ik).
+            let mut gs = vec![0f32; t * t];
+            for i in 0..t {
+                let mut dot = 0f32;
+                for j in 0..t {
+                    dot += gp[i * t + j] * p[i * t + j];
+                }
+                for j in 0..t {
+                    gs[i * t + j] = p[i * t + j] * (gp[i * t + j] - dot);
+                }
+            }
+            // gQ = gS·K (×scale folded into saved q already → apply to gq);
+            // gK = gSᵀ·Q.
+            let gq = qgemm(&self.arith, MatKind::AB, &gs, ks, (t, t, dh), ctx, true);
+            let gk = qgemm(&self.arith, MatKind::ATB, &gs, qs, (t, t, dh), ctx, true);
+            for tt in 0..t {
+                let base = (bb * t + tt) * 3 * d;
+                for c in 0..dh {
+                    // q was pre-scaled by `scale`; chain rule multiplies the
+                    // raw-q gradient by scale (and k's gradient already
+                    // includes the scaled q).
+                    gqkv[base + h * dh + c] += gq[tt * dh + c] * scale;
+                    gqkv[base + d + h * dh + c] += gk[tt * dh + c];
+                    gqkv[base + 2 * d + h * dh + c] += gv[tt * dh + c];
+                }
+            }
+        }
+        self.qkv.backward(&Tensor::new(gqkv, vec![b, t, 3 * d]), ctx)
+    }
+
+    fn params(&mut self) -> Vec<&mut Param> {
+        let mut p = self.qkv.params();
+        p.extend(self.proj.params());
+        p
+    }
+
+    fn name(&self) -> &'static str {
+        "mha"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfp::rng::Rng;
+
+    fn input(b: usize, t: usize, d: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::new((0..b * t * d).map(|_| rng.next_gaussian() * 0.5).collect(), vec![b, t, d])
+    }
+
+    #[test]
+    fn shapes_roundtrip() {
+        let mut m = MultiHeadAttention::new(16, 4, false, Arith::Float, &mut Rng::new(1));
+        let x = input(2, 5, 16, 2);
+        let mut ctx = Ctx::train(0, 0);
+        let y = m.forward(&x, &mut ctx);
+        assert_eq!(y.shape, vec![2, 5, 16]);
+        let g = m.backward(&y, &mut ctx);
+        assert_eq!(g.shape, vec![2, 5, 16]);
+    }
+
+    #[test]
+    fn causal_mask_blocks_future() {
+        let mut m = MultiHeadAttention::new(8, 2, true, Arith::Float, &mut Rng::new(3));
+        let x1 = input(1, 4, 8, 4);
+        // Changing a future token must not change earlier outputs.
+        let mut x2 = x1.clone();
+        for c in 0..8 {
+            x2.data[3 * 8 + c] += 1.0; // perturb last token
+        }
+        let mut c1 = Ctx::eval(0);
+        let mut c2 = Ctx::eval(0);
+        let y1 = m.forward(&x1, &mut c1);
+        let y2 = m.forward(&x2, &mut c2);
+        for ttok in 0..3 {
+            for c in 0..8 {
+                assert!(
+                    (y1.data[ttok * 8 + c] - y2.data[ttok * 8 + c]).abs() < 1e-6,
+                    "token {ttok} leaked future info"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn float_gradcheck() {
+        let mut m = MultiHeadAttention::new(8, 2, false, Arith::Float, &mut Rng::new(5));
+        let x = input(1, 3, 8, 6);
+        let mut ctx = Ctx::train(0, 0);
+        let y = m.forward(&x, &mut ctx);
+        let gx = m.backward(&y, &mut ctx);
+        let eps = 1e-2;
+        for i in [0usize, 7, 13, 23] {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let mut c1 = Ctx::train(0, 0);
+            let mut c2 = Ctx::train(0, 0);
+            let lp: f32 = m.forward(&xp, &mut c1).data.iter().map(|v| 0.5 * v * v).sum();
+            let lm: f32 = m.forward(&xm, &mut c2).data.iter().map(|v| 0.5 * v * v).sum();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - gx.data[i]).abs() < 5e-2 * fd.abs().max(0.5),
+                "i={i} fd={fd} got={}",
+                gx.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn int_close_to_float() {
+        let mut rng = Rng::new(7);
+        let mut mf = MultiHeadAttention::new(16, 4, false, Arith::Float, &mut rng);
+        let mut mi = MultiHeadAttention::new(16, 4, false, Arith::int8(), &mut Rng::new(99));
+        mi.qkv.w.data = mf.qkv.w.data.clone();
+        mi.qkv.b.data = mf.qkv.b.data.clone();
+        mi.proj.w.data = mf.proj.w.data.clone();
+        mi.proj.b.data = mf.proj.b.data.clone();
+        let x = input(1, 6, 16, 8);
+        let mut c1 = Ctx::train(0, 0);
+        let mut c2 = Ctx::train(0, 0);
+        let yf = mf.forward(&x, &mut c1);
+        let yi = mi.forward(&x, &mut c2);
+        let ymax = yf.data.iter().fold(0f32, |m, v| m.max(v.abs()));
+        for (a, b) in yi.data.iter().zip(&yf.data) {
+            assert!((a - b).abs() < 0.2 * ymax.max(0.1), "{a} vs {b}");
+        }
+    }
+}

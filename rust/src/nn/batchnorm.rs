@@ -1,0 +1,634 @@
+//! Batch normalization with integer forward **and** backward (§3.4 Eq. 3–5).
+//!
+//! The paper's distinguishing claim: prior int8-training work kept
+//! batch-norm's backward in float because naive quantization diverges; here
+//! both passes run on integer payloads.
+//!
+//! Integer pipeline (training forward, per channel c):
+//! 1. map `x` to int8 payloads `q_i` with shared exponent (scale `2^kx`);
+//! 2. `Σq`, `Σq²` in int64 (Eq. 4–5 — both unbiased under SR);
+//! 3. `μ, σ²` via the fixed-point reciprocal of `N` ([`fx_recip_int`]) —
+//!    integer multiply + shift, no float division;
+//! 4. `r = 1/√(σ² + ε)` via integer Newton–Raphson ([`fx_rsqrt`]);
+//! 5. `y = γ·(q − μ)·r + β` combined on integer payloads with explicit
+//!    exponent bookkeeping; a single inverse mapping emits f32.
+//!
+//! Backward (also integer):
+//! `∂L/∂x = (γ·r/N)·(N·ĝ − Σĝ − x̂·Σ(ĝ·x̂))`, `∂L/∂γ = Σĝ·x̂`, `∂L/∂β = Σĝ`,
+//! with `ĝ` the SR-mapped upstream gradient and `x̂ = (q − μ)·r` the cached
+//! integer normalized activations.
+
+use super::qmat::int_mode;
+use super::{Arith, Ctx, Layer, Param, Tensor};
+use crate::dfp::bits::{exp2i64, unpack};
+use crate::dfp::fixed::{fx_recip_int, fx_rsqrt, Fx};
+use crate::dfp::quantize;
+
+/// Shift a payload between power-of-two grids (floor semantics — the
+/// magnitudes here keep the dropped bits far below the noise floor).
+#[inline(always)]
+fn align_i64(p: i64, from_exp: i32, to_exp: i32) -> i64 {
+    let d = from_exp - to_exp;
+    if d >= 0 {
+        if d >= 62 { 0 } else { p << d }
+    } else {
+        let d = (-d).min(63);
+        p >> d
+    }
+}
+
+/// Renormalize an i128 payload to ≤15 significant bits (hardware keeps
+/// per-channel scalars in 16-bit registers); returns (payload, exponent).
+fn to_p15(p: i128, exp: i32) -> (i64, i32) {
+    if p == 0 {
+        return (0, exp);
+    }
+    let neg = p < 0;
+    let mut mag = p.unsigned_abs();
+    let mut e = exp;
+    while mag >= (1 << 15) {
+        mag >>= 1;
+        e += 1;
+    }
+    let v = mag as i64;
+    (if neg { -v } else { v }, e)
+}
+
+/// Convert a positive f32 into the fixed-point [`Fx`] form by unpacking its
+/// bits (an integer operation — no arithmetic on the float value).
+fn f32_to_fx(x: f32) -> Fx {
+    debug_assert!(x > 0.0);
+    let u = unpack(x);
+    Fx::new(u.mant as i64, u.exp - 150)
+}
+
+/// Batch-norm layer over NCHW activations.
+pub struct BatchNorm2d {
+    /// Per-channel scale γ.
+    pub gamma: Param,
+    /// Per-channel shift β.
+    pub beta: Param,
+    /// Arithmetic mode.
+    pub arith: Arith,
+    /// Channels.
+    pub ch: usize,
+    /// Numerical-stability epsilon (absorbs the mapping noise σ²_δ, Eq. 5).
+    pub eps: f32,
+    /// Running-stat momentum.
+    pub momentum: f32,
+    /// Running mean (inverse-mapped f32 view).
+    pub running_mean: Vec<f32>,
+    /// Running variance.
+    pub running_var: Vec<f32>,
+    /// Frozen mode (used by the segmentation/detection experiments, §5):
+    /// eval statistics, no γ/β updates.
+    pub frozen: bool,
+    // --- saved for backward (integer caches) ---
+    saved_diff: Vec<i32>, // (q_i − μ_c) payloads at exponent kx
+    saved_kx: i32,
+    saved_r: Vec<Fx>, // per-channel 1/√(σ²+ε)
+    saved_dims: (usize, usize), // (n, spatial)
+}
+
+impl BatchNorm2d {
+    /// Unit-γ zero-β batch-norm.
+    pub fn new(ch: usize, arith: Arith) -> Self {
+        BatchNorm2d {
+            gamma: Param::new(vec![1.0; ch], vec![ch]),
+            beta: Param::new(vec![0.0; ch], vec![ch]),
+            arith,
+            ch,
+            eps: 1e-5,
+            momentum: 0.1,
+            running_mean: vec![0.0; ch],
+            running_var: vec![1.0; ch],
+            frozen: false,
+            saved_diff: Vec::new(),
+            saved_kx: 0,
+            saved_r: Vec::new(),
+            saved_dims: (0, 0),
+        }
+    }
+
+    fn dims(&self, x: &Tensor) -> (usize, usize) {
+        let n = x.shape[0];
+        let ch = x.shape[1];
+        assert_eq!(ch, self.ch, "channel mismatch");
+        let spatial: usize = x.shape[2..].iter().product::<usize>().max(1);
+        (n, spatial)
+    }
+
+    /// Float reference path (baseline arms).
+    fn forward_float(&mut self, x: &Tensor, train: bool, momentum: f32) -> Tensor {
+        let (n, sp) = self.dims(x);
+        let cnt = (n * sp) as f32;
+        let mut y = vec![0f32; x.len()];
+        for c in 0..self.ch {
+            let (mean, var) = if train && !self.frozen {
+                let mut s = 0f64;
+                let mut s2 = 0f64;
+                for b in 0..n {
+                    for i in 0..sp {
+                        let v = x.data[(b * self.ch + c) * sp + i] as f64;
+                        s += v;
+                        s2 += v * v;
+                    }
+                }
+                let mean = (s / cnt as f64) as f32;
+                let var = (s2 / cnt as f64 - (s / cnt as f64) * (s / cnt as f64)) as f32;
+                self.running_mean[c] =
+                    (1.0 - momentum) * self.running_mean[c] + momentum * mean;
+                self.running_var[c] =
+                    (1.0 - momentum) * self.running_var[c] + momentum * var;
+                (mean, var)
+            } else {
+                (self.running_mean[c], self.running_var[c])
+            };
+            let r = 1.0 / (var + self.eps).sqrt();
+            let g = self.gamma.data[c];
+            let bta = self.beta.data[c];
+            for b in 0..n {
+                for i in 0..sp {
+                    let idx = (b * self.ch + c) * sp + i;
+                    y[idx] = g * (x.data[idx] - mean) * r + bta;
+                }
+            }
+            if train && !self.frozen {
+                // cache float path equivalents for backward
+            }
+        }
+        // For the float path we cache diff/r in the same integer containers
+        // is unnecessary; backward_float recomputes from saved tensors.
+        self.saved_dims = (n, sp);
+        Tensor::new(y, x.shape.clone())
+    }
+
+    /// Integer forward (the paper's method).
+    fn forward_int(&mut self, x: &Tensor, cfg: &super::IntCfg, ctx: &mut Ctx) -> Tensor {
+        let momentum = ctx.bn_momentum.unwrap_or(self.momentum);
+        let (n, sp) = self.dims(x);
+        let cnt = n * sp;
+        let qx = quantize(&x.data, cfg.pbits, int_mode(cfg, ctx, false));
+        let kx = qx.scale_exp();
+        let inv_n = fx_recip_int(cnt);
+        let train_stats = ctx.train && !self.frozen;
+
+        let mut diff = vec![0i32; x.len()];
+        let mut rs = vec![Fx::new(1, 0); self.ch];
+        let mut y = vec![0f32; x.len()];
+
+        for c in 0..self.ch {
+            // --- integer statistics -------------------------------------
+            let (mu_payload, r) = if train_stats {
+                let mut s = 0i64;
+                let mut s2 = 0i64;
+                for b in 0..n {
+                    let base = (b * self.ch + c) * sp;
+                    for &p in &qx.payload[base..base + sp] {
+                        let v = p as i64;
+                        s += v;
+                        s2 += v * v;
+                    }
+                }
+                // μ payload on the x grid: (Σq)/N via the integer
+                // reciprocal, rounded to nearest (a floor here would bias
+                // the variance below by O(μ·ulp)).
+                let sh = (-inv_n.k).clamp(0, 126) as u32;
+                let mu = (((s as i128 * inv_n.p as i128) + (1i128 << (sh - 1))) >> sh) as i64;
+                // σ² in payload² units via the exact rational form
+                // (N·Σq² − (Σq)²)/N² — no mean-truncation error (Eq. 5).
+                let vnum = (s2 as i128) * (cnt as i128) - (s as i128) * (s as i128);
+                let v1 = (vnum.max(0) * inv_n.p as i128) >> sh;
+                let var_p = ((v1 * inv_n.p as i128) >> sh) as i64;
+                // ε on the payload² grid (align the f32 eps to exponent 2kx),
+                // at least 1 payload² ulp so rsqrt input stays positive.
+                let eps_fx = f32_to_fx(self.eps);
+                let eps_p = align_i64(eps_fx.p, eps_fx.k, 2 * kx).max(1);
+                let r = fx_rsqrt(Fx::new(var_p + eps_p, 2 * kx));
+                // Update running stats through the inverse mapping.
+                let mean_f = (mu as f64 * exp2i64(kx)) as f32;
+                let var_f = (var_p as f64 * exp2i64(2 * kx)) as f32;
+                self.running_mean[c] =
+                    (1.0 - momentum) * self.running_mean[c] + momentum * mean_f;
+                self.running_var[c] =
+                    (1.0 - momentum) * self.running_var[c] + momentum * var_f;
+                (mu, r)
+            } else {
+                // Eval: quantize the running stats onto the x grid.
+                if std::env::var_os("INTRAIN_BN_DEBUG").is_some() && c == 0 {
+                    // Diagnostic: compare running stats against this
+                    // batch's actual statistics.
+                    let mut s = 0i64;
+                    let mut s2 = 0i64;
+                    for b in 0..n {
+                        let base = (b * self.ch + c) * sp;
+                        for &p in &qx.payload[base..base + sp] {
+                            s += p as i64;
+                            s2 += (p as i64) * (p as i64);
+                        }
+                    }
+                    let cntf = cnt as f64;
+                    let bm = s as f64 / cntf * exp2i64(kx);
+                    let bv = (s2 as f64 / cntf - (s as f64 / cntf) * (s as f64 / cntf))
+                        * exp2i64(2 * kx);
+                    eprintln!(
+                        "BN[ch{}] eval: running=({:.4},{:.4}) batch=({:.4},{:.4})",
+                        self.ch, self.running_mean[c], self.running_var[c], bm, bv
+                    );
+                }
+                let mfx = self.running_mean[c];
+                let mu = if mfx == 0.0 {
+                    0
+                } else {
+                    let u = unpack(mfx);
+                    let p = align_i64(u.mant as i64, u.exp - 150, kx);
+                    if u.sign { -p } else { p }
+                };
+                let v = self.running_var[c].max(0.0) + self.eps;
+                let r = fx_rsqrt(f32_to_fx(v));
+                (mu, r)
+            };
+            rs[c] = r;
+            // Keep r in 15 bits so per-element products stay in i64.
+            let (r15, kr) = to_p15(r.p as i128, r.k);
+            // γ, β as integer scalars from their f32 bits (nearest 15-bit).
+            let (gq, kg) = {
+                let g = self.gamma.data[c];
+                if g == 0.0 {
+                    (0i64, 0i32)
+                } else {
+                    let u = unpack(g);
+                    let (p, k) = to_p15(u.mant as i128, u.exp - 150);
+                    (if u.sign { -p } else { p }, k)
+                }
+            };
+            let out_exp = kx + kr + kg; // grid of γ·diff·r
+            let (bq_aligned, have_beta) = {
+                let b = self.beta.data[c];
+                if b == 0.0 {
+                    (0i64, false)
+                } else {
+                    let u = unpack(b);
+                    (
+                        {
+                            let p = align_i64(u.mant as i64, u.exp - 150, out_exp);
+                            if u.sign { -p } else { p }
+                        },
+                        true,
+                    )
+                }
+            };
+            let scale = exp2i64(out_exp);
+            for b in 0..n {
+                let base = (b * self.ch + c) * sp;
+                for i in 0..sp {
+                    let d = qx.payload[base + i] as i64 - mu_payload;
+                    diff[base + i] = d as i32;
+                    // γ·d·r — ≤ 2^15·2^9·2^15 = 2^39, comfortably i64.
+                    let mut v = gq * d * r15;
+                    if have_beta {
+                        v += bq_aligned;
+                    }
+                    y[base + i] = (v as f64 * scale) as f32;
+                }
+            }
+        }
+        if ctx.train {
+            self.saved_diff = diff;
+            self.saved_kx = kx;
+            self.saved_r = rs;
+            self.saved_dims = (n, sp);
+        }
+        Tensor::new(y, x.shape.clone())
+    }
+
+    /// Integer backward.
+    fn backward_int(&mut self, gy: &Tensor, cfg: &super::IntCfg, ctx: &mut Ctx) -> Tensor {
+        let (n, sp) = self.saved_dims;
+        let cnt = n * sp;
+        let qg = quantize(&gy.data, cfg.pbits, int_mode(cfg, ctx, true));
+        let kg = qg.scale_exp();
+        let kx = self.saved_kx;
+        let inv_n = fx_recip_int(cnt);
+        let mut gx = vec![0f32; gy.len()];
+        let train_stats = !self.frozen;
+
+        for c in 0..self.ch {
+            let r = self.saved_r[c];
+            let (r15, kr) = to_p15(r.p as i128, r.k);
+            // Channel sums: Σĝ (exp kg) and Σĝ·x̂ (exp kg + kx + kr).
+            let mut sg = 0i64;
+            let mut sgx = 0i64;
+            for b in 0..n {
+                let base = (b * self.ch + c) * sp;
+                for i in 0..sp {
+                    let g = qg.payload[base + i] as i64;
+                    sg += g;
+                    // x̂ payload = diff·r15 ≤ 2^9·2^15 = 2^24; g·x̂ ≤ 2^31.
+                    sgx += g * (self.saved_diff[base + i] as i64 * r15);
+                }
+            }
+            // Parameter gradients (integer sums → single inverse mapping).
+            if train_stats {
+                self.gamma.grad[c] += (sgx as f64 * exp2i64(kg + kx + kr)) as f32;
+                self.beta.grad[c] += (sg as f64 * exp2i64(kg)) as f32;
+            }
+            // m1 = mean(ĝ) at exp kg; m2 = mean(ĝ·x̂) at exp kg+kx+kr.
+            let m1 = ((sg as i128 * inv_n.p as i128) >> (-inv_n.k).clamp(0, 127)) as i64;
+            let (m2, km2) = to_p15(
+                (sgx as i128 * inv_n.p as i128) >> (-inv_n.k).clamp(0, 127),
+                kg + kx + kr,
+            );
+            // γ·r as a 15-bit payload (exp kgr).
+            let g = self.gamma.data[c];
+            let (grq, kgr) = if g == 0.0 {
+                (0i64, 0i32)
+            } else {
+                let u = unpack(g);
+                let (gp, gk) = to_p15(u.mant as i128, u.exp - 150);
+                let gp = if u.sign { -gp } else { gp };
+                to_p15(gp as i128 * r15 as i128, gk + kr)
+            };
+            // Common working grid for (ĝ − m1 − x̂·m2): e0 = kg − 20 gives
+            // 20 fractional guard bits.
+            let e0 = kg - 20;
+            let out_scale = exp2i64(e0 + kgr);
+            for b in 0..n {
+                let base = (b * self.ch + c) * sp;
+                for i in 0..sp {
+                    let gq_i = qg.payload[base + i] as i64;
+                    let u = align_i64(gq_i - m1, kg, e0); // ≤ 2^8·2^20 = 2^28
+                    // x̂·m2: payload (diff·r15 ≤ 2^24)·(m2 ≤ 2^15) = 2^39,
+                    // exp kx+kr+km2 → align to e0.
+                    let xh = self.saved_diff[base + i] as i64 * r15;
+                    let v = align_i64(xh * m2, kx + kr + km2, e0);
+                    let s = u - v;
+                    // γ·r·s ≤ 2^15·2^29 = 2^44 ✓
+                    gx[base + i] = ((grq * s) as f64 * out_scale) as f32;
+                }
+            }
+        }
+        Tensor::new(gx, gy.shape.clone())
+    }
+
+    /// Float backward (baseline arms; recomputes what it needs from the
+    /// running caches used by the float forward).
+    fn backward_float(&mut self, gy: &Tensor, saved_x: &Tensor) -> Tensor {
+        let (n, sp) = self.saved_dims;
+        let cnt = (n * sp) as f32;
+        let mut gx = vec![0f32; gy.len()];
+        for c in 0..self.ch {
+            // Recompute batch stats from the saved input.
+            let mut s = 0f64;
+            let mut s2 = 0f64;
+            for b in 0..n {
+                for i in 0..sp {
+                    let v = saved_x.data[(b * self.ch + c) * sp + i] as f64;
+                    s += v;
+                    s2 += v * v;
+                }
+            }
+            let mean = (s / cnt as f64) as f32;
+            let var = (s2 / cnt as f64) as f32 - mean * mean;
+            let r = 1.0 / (var + self.eps).sqrt();
+            let g = self.gamma.data[c];
+            let mut sg = 0f32;
+            let mut sgx = 0f32;
+            for b in 0..n {
+                for i in 0..sp {
+                    let idx = (b * self.ch + c) * sp + i;
+                    let xh = (saved_x.data[idx] - mean) * r;
+                    sg += gy.data[idx];
+                    sgx += gy.data[idx] * xh;
+                }
+            }
+            if !self.frozen {
+                self.gamma.grad[c] += sgx;
+                self.beta.grad[c] += sg;
+            }
+            let m1 = sg / cnt;
+            let m2 = sgx / cnt;
+            for b in 0..n {
+                for i in 0..sp {
+                    let idx = (b * self.ch + c) * sp + i;
+                    let xh = (saved_x.data[idx] - mean) * r;
+                    gx[idx] = g * r * (gy.data[idx] - m1 - xh * m2);
+                }
+            }
+        }
+        Tensor::new(gx, gy.shape.clone())
+    }
+}
+
+/// Saved input for the float backward path.
+pub struct BnWithCache {
+    inner: BatchNorm2d,
+    saved_x: Tensor,
+}
+
+impl BnWithCache {
+    /// Wrap a batch-norm (needed only for float-path gradients).
+    pub fn new(inner: BatchNorm2d) -> Self {
+        BnWithCache { inner, saved_x: Tensor::default() }
+    }
+
+    /// Access the wrapped layer.
+    pub fn bn(&mut self) -> &mut BatchNorm2d {
+        &mut self.inner
+    }
+}
+
+impl Layer for BnWithCache {
+    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+        if ctx.train {
+            if let Arith::Int(_) = self.inner.arith {
+            } else {
+                self.saved_x = x.clone();
+            }
+        }
+        match self.inner.arith {
+            Arith::Int(cfg) => {
+                if ctx.train {
+                    self.inner.forward_int(x, &cfg, ctx)
+                } else {
+                    self.inner.forward_int(x, &cfg, &mut Ctx { train: false, ..ctx.clone() })
+                }
+            }
+            _ => {
+                let m = ctx.bn_momentum.unwrap_or(self.inner.momentum);
+                self.inner.forward_float(x, ctx.train, m)
+            }
+        }
+    }
+
+    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+        match self.inner.arith {
+            Arith::Int(cfg) => self.inner.backward_int(gy, &cfg, ctx),
+            _ => {
+                let saved = std::mem::take(&mut self.saved_x);
+                let g = self.inner.backward_float(gy, &saved);
+                self.saved_x = saved;
+                g
+            }
+        }
+    }
+
+    fn params(&mut self) -> Vec<&mut Param> {
+        if self.inner.frozen {
+            return Vec::new();
+        }
+        vec![&mut self.inner.gamma, &mut self.inner.beta]
+    }
+
+    fn name(&self) -> &'static str {
+        "batchnorm2d"
+    }
+}
+
+/// Convenience constructor used by the model builders.
+pub fn batchnorm(ch: usize, arith: Arith) -> BnWithCache {
+    BnWithCache::new(BatchNorm2d::new(ch, arith))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfp::rng::Rng;
+
+    fn input(n: usize, c: usize, sp: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::new(
+            (0..n * c * sp).map(|_| rng.next_gaussian() * 1.5 + 0.3).collect(),
+            vec![n, c, sp, 1],
+        )
+    }
+
+    #[test]
+    fn int_forward_normalizes() {
+        let mut bn = batchnorm(3, Arith::int8());
+        let x = input(8, 3, 16, 1);
+        let mut ctx = Ctx::train(0, 0);
+        let y = bn.forward(&x, &mut ctx);
+        // Per-channel mean ≈ 0, var ≈ 1 (within int8 noise).
+        let (n, sp) = (8usize, 16usize);
+        for c in 0..3 {
+            let mut s = 0f64;
+            let mut s2 = 0f64;
+            for b in 0..n {
+                for i in 0..sp {
+                    let v = y.data[(b * 3 + c) * sp + i] as f64;
+                    s += v;
+                    s2 += v * v;
+                }
+            }
+            let cnt = (n * sp) as f64;
+            let mean = s / cnt;
+            let var = s2 / cnt - mean * mean;
+            assert!(mean.abs() < 0.05, "c={c} mean={mean}");
+            assert!((var - 1.0).abs() < 0.1, "c={c} var={var}");
+        }
+    }
+
+    #[test]
+    fn int_matches_float_forward() {
+        let x = input(16, 2, 32, 2);
+        let mut bf = batchnorm(2, Arith::Float);
+        let mut bi = batchnorm(2, Arith::int8());
+        bi.bn().gamma.data = vec![1.3, 0.7];
+        bi.bn().beta.data = vec![0.2, -0.4];
+        bf.bn().gamma.data = vec![1.3, 0.7];
+        bf.bn().beta.data = vec![0.2, -0.4];
+        let mut c1 = Ctx::train(0, 0);
+        let mut c2 = Ctx::train(0, 0);
+        let yf = bf.forward(&x, &mut c1);
+        let yi = bi.forward(&x, &mut c2);
+        for (a, b) in yi.data.iter().zip(&yf.data) {
+            assert!((a - b).abs() < 0.12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn int_backward_close_to_float() {
+        let x = input(16, 2, 32, 3);
+        let gy = input(16, 2, 32, 4);
+        let mut bf = batchnorm(2, Arith::Float);
+        let mut bi = batchnorm(2, Arith::int8());
+        let mut c1 = Ctx::train(0, 0);
+        let mut c2 = Ctx::train(0, 0);
+        bf.forward(&x, &mut c1);
+        bi.forward(&x, &mut c2);
+        let gf = bf.backward(&gy, &mut c1);
+        let gi = bi.backward(&gy, &mut c2);
+        let gmax = gf.data.iter().fold(0f32, |m, v| m.max(v.abs()));
+        // Cosine similarity is the right metric for gradient direction.
+        let dot: f32 = gf.data.iter().zip(&gi.data).map(|(a, b)| a * b).sum();
+        let n1: f32 = gf.data.iter().map(|a| a * a).sum::<f32>().sqrt();
+        let n2: f32 = gi.data.iter().map(|a| a * a).sum::<f32>().sqrt();
+        assert!(dot / (n1 * n2) > 0.97, "cos={}", dot / (n1 * n2));
+        for (a, b) in gi.data.iter().zip(&gf.data) {
+            assert!((a - b).abs() < 0.3 * gmax.max(1e-3), "{a} vs {b}");
+        }
+        // γ/β grads close too.
+        for c in 0..2 {
+            assert!(
+                (bf.bn().gamma.grad[c] - bi.bn().gamma.grad[c]).abs()
+                    < 0.08 * bf.bn().gamma.grad[c].abs().max(1.0),
+                "gamma c={c}"
+            );
+            assert!(
+                (bf.bn().beta.grad[c] - bi.bn().beta.grad[c]).abs()
+                    < 0.08 * bf.bn().beta.grad[c].abs().max(1.0),
+                "beta c={c}"
+            );
+        }
+    }
+
+    #[test]
+    fn running_stats_track_batches() {
+        let mut bn = batchnorm(1, Arith::int8());
+        let mut ctx = Ctx::train(0, 0);
+        for step in 0..30 {
+            let x = input(8, 1, 32, 100 + step);
+            ctx = Ctx::train(0, step);
+            bn.forward(&x, &mut ctx);
+        }
+        // Inputs ~ N(0.3, 1.5²): running stats must approach that.
+        assert!((bn.bn().running_mean[0] - 0.3).abs() < 0.2);
+        assert!((bn.bn().running_var[0] - 2.25).abs() < 0.5);
+        // Eval path uses running stats: a constant input normalizes to a
+        // finite value (no division blowup).
+        let x = Tensor::new(vec![0.3; 8 * 32], vec![8, 1, 32, 1]);
+        let mut ectx = Ctx::eval(0);
+        let y = bn.forward(&x, &mut ectx);
+        assert!(y.data.iter().all(|v| v.abs() < 1.0));
+    }
+
+    #[test]
+    fn frozen_bn_has_no_params() {
+        let mut bn = batchnorm(4, Arith::int8());
+        bn.bn().frozen = true;
+        assert!(bn.params().is_empty());
+    }
+
+    #[test]
+    fn float_backward_gradcheck() {
+        let mut bn = batchnorm(1, Arith::Float);
+        let x = input(4, 1, 8, 9);
+        let mut ctx = Ctx::train(0, 0);
+        let y = bn.forward(&x, &mut ctx);
+        let gx = bn.backward(&y, &mut ctx); // L = 0.5Σy²
+        let eps = 1e-2;
+        for i in [0usize, 13, 31] {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let mut c1 = Ctx::train(0, 0);
+            let mut c2 = Ctx::train(0, 0);
+            let lp: f32 = bn.forward(&xp, &mut c1).data.iter().map(|v| 0.5 * v * v).sum();
+            let lm: f32 = bn.forward(&xm, &mut c2).data.iter().map(|v| 0.5 * v * v).sum();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - gx.data[i]).abs() < 5e-2 * fd.abs().max(1.0), "i={i} fd={fd} got={}", gx.data[i]);
+        }
+    }
+}

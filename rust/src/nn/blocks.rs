@@ -1,0 +1,246 @@
+//! Composite layers: sequential containers and residual blocks.
+//!
+//! The residual join is an element-wise add performed in integer (Eq. 2):
+//! both branch outputs are mapped onto a *common* shared exponent so their
+//! payload grids coincide, added as integers, and inverse-mapped once.
+
+use super::qmat::int_mode;
+use super::{Arith, Ctx, Layer, Param, Tensor};
+use crate::dfp::bits::exp2i64;
+use crate::dfp::map::{quantize_with_emax, shared_exponent};
+
+/// A straight-line chain of layers.
+pub struct Sequential {
+    layers: Vec<Box<dyn Layer>>,
+}
+
+impl Sequential {
+    /// Empty container.
+    pub fn new() -> Self {
+        Sequential { layers: Vec::new() }
+    }
+
+    /// Append a layer (builder style).
+    pub fn push(mut self, l: impl Layer + 'static) -> Self {
+        self.layers.push(Box::new(l));
+        self
+    }
+
+    /// Append a boxed layer.
+    pub fn push_boxed(&mut self, l: Box<dyn Layer>) {
+        self.layers.push(l);
+    }
+
+    /// Number of layers.
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+}
+
+impl Default for Sequential {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for Sequential {
+    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let mut h = x.clone();
+        for l in self.layers.iter_mut() {
+            h = l.forward(&h, ctx);
+        }
+        h
+    }
+
+    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let mut g = gy.clone();
+        for l in self.layers.iter_mut().rev() {
+            g = l.backward(&g, ctx);
+        }
+        g
+    }
+
+    fn params(&mut self) -> Vec<&mut Param> {
+        self.layers.iter_mut().flat_map(|l| l.params()).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+}
+
+/// Integer element-wise add of two f32 tensors (Eq. 2): common shared
+/// exponent, payload add, single inverse mapping. Falls back to float add
+/// outside Int mode.
+pub fn residual_add(a: &Tensor, b: &Tensor, arith: &Arith, ctx: &mut Ctx, bwd: bool) -> Tensor {
+    debug_assert_eq!(a.len(), b.len());
+    match arith {
+        Arith::Int(cfg) => {
+            let e = shared_exponent(&a.data).max(shared_exponent(&b.data));
+            let qa = quantize_with_emax(&a.data, e, cfg.pbits, int_mode(cfg, ctx, bwd));
+            let qb = quantize_with_emax(&b.data, e, cfg.pbits, int_mode(cfg, ctx, bwd));
+            let s = exp2i64(qa.scale_exp());
+            let y: Vec<f32> = qa
+                .payload
+                .iter()
+                .zip(&qb.payload)
+                .map(|(&x, &z)| ((x as i32 + z as i32) as f64 * s) as f32)
+                .collect();
+            Tensor::new(y, a.shape.clone())
+        }
+        _ => Tensor::new(
+            a.data.iter().zip(&b.data).map(|(&x, &y)| x + y).collect(),
+            a.shape.clone(),
+        ),
+    }
+}
+
+/// Residual block: `y = relu(main(x) + shortcut(x))` with the join in
+/// integer. The shortcut defaults to identity; pass a projection
+/// (1×1 conv + BN) when shapes change.
+pub struct Residual {
+    /// Main branch.
+    pub main: Sequential,
+    /// Shortcut branch (empty ⇒ identity).
+    pub shortcut: Sequential,
+    /// Arithmetic for the join.
+    pub arith: Arith,
+    /// Apply ReLU after the join.
+    pub post_relu: bool,
+    mask: Vec<bool>,
+}
+
+impl Residual {
+    /// New residual block.
+    pub fn new(main: Sequential, shortcut: Sequential, arith: Arith) -> Self {
+        Residual { main, shortcut, arith, post_relu: true, mask: Vec::new() }
+    }
+}
+
+impl Layer for Residual {
+    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let m = self.main.forward(x, ctx);
+        let s = if self.shortcut.is_empty() { x.clone() } else { self.shortcut.forward(x, ctx) };
+        let mut y = residual_add(&m, &s, &self.arith, ctx, false);
+        if self.post_relu {
+            if ctx.train {
+                self.mask = y.data.iter().map(|&v| v > 0.0).collect();
+            }
+            for v in y.data.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+        y
+    }
+
+    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let g = if self.post_relu {
+            Tensor::new(
+                gy.data
+                    .iter()
+                    .zip(&self.mask)
+                    .map(|(&g, &m)| if m { g } else { 0.0 })
+                    .collect(),
+                gy.shape.clone(),
+            )
+        } else {
+            gy.clone()
+        };
+        let gm = self.main.backward(&g, ctx);
+        let gs = if self.shortcut.is_empty() { g } else { self.shortcut.backward(&g, ctx) };
+        // Sum of branch input-gradients — again an integer add.
+        residual_add(&gm, &gs, &self.arith, ctx, true)
+    }
+
+    fn params(&mut self) -> Vec<&mut Param> {
+        let mut p = self.main.params();
+        p.extend(self.shortcut.params());
+        p
+    }
+
+    fn name(&self) -> &'static str {
+        "residual"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfp::rng::Rng;
+    use crate::nn::activations::ReLU;
+    use crate::nn::linear::Linear;
+
+    #[test]
+    fn sequential_chains() {
+        let mut rng = Rng::new(1);
+        let mut net = Sequential::new()
+            .push(Linear::new(4, 8, Arith::Float, &mut rng))
+            .push(ReLU::new())
+            .push(Linear::new(8, 2, Arith::Float, &mut rng));
+        let x = Tensor::new(vec![0.1, -0.2, 0.3, 0.4], vec![1, 4]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = net.forward(&x, &mut ctx);
+        assert_eq!(y.shape, vec![1, 2]);
+        let g = net.backward(&y, &mut ctx);
+        assert_eq!(g.shape, vec![1, 4]);
+        assert_eq!(net.params().len(), 4);
+    }
+
+    #[test]
+    fn residual_identity_add_exact_float() {
+        let main = Sequential::new(); // empty main = identity
+        let mut r = Residual::new(main, Sequential::new(), Arith::Float);
+        r.post_relu = false;
+        let x = Tensor::new(vec![1.0, -2.0], vec![1, 2]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = r.forward(&x, &mut ctx);
+        assert_eq!(y.data, vec![2.0, -4.0]);
+    }
+
+    #[test]
+    fn residual_add_int_unbiased() {
+        let a = Tensor::new(vec![0.33, -0.21], vec![2]);
+        let b = Tensor::new(vec![0.11, 0.47], vec![2]);
+        let n = 20_000u64;
+        let mut acc = [0f64; 2];
+        for s in 0..n {
+            let mut ctx = Ctx::train(s, s);
+            let y = residual_add(&a, &b, &Arith::int8(), &mut ctx, false);
+            acc[0] += y.data[0] as f64;
+            acc[1] += y.data[1] as f64;
+        }
+        assert!((acc[0] / n as f64 - 0.44).abs() < 2e-3);
+        assert!((acc[1] / n as f64 - 0.26).abs() < 2e-3);
+    }
+
+    #[test]
+    fn residual_block_gradcheck_float() {
+        let mut rng = Rng::new(3);
+        let main = Sequential::new()
+            .push(Linear::new(4, 4, Arith::Float, &mut rng));
+        let mut r = Residual::new(main, Sequential::new(), Arith::Float);
+        r.post_relu = true;
+        let x = Tensor::new(vec![0.5, -0.3, 0.8, 0.1], vec![1, 4]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = r.forward(&x, &mut ctx);
+        let gx = r.backward(&y, &mut ctx);
+        let eps = 1e-3;
+        for i in 0..4 {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let mut c1 = Ctx::train(0, 0);
+            let mut c2 = Ctx::train(0, 0);
+            let lp: f32 = r.forward(&xp, &mut c1).data.iter().map(|v| 0.5 * v * v).sum();
+            let lm: f32 = r.forward(&xm, &mut c2).data.iter().map(|v| 0.5 * v * v).sum();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - gx.data[i]).abs() < 2e-2 * fd.abs().max(1.0), "i={i}");
+        }
+    }
+}

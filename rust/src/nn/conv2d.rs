@@ -1,0 +1,429 @@
+//! 2-D convolution — integer forward and backward via im2col.
+//!
+//! Forward lowers to the integer GEMM of [`crate::dfp::conv`]; backward
+//! computes `∂L/∂W = Ĝ·colᵀ` and `∂L/∂x = col2im(Ŵᵀ·Ĝ)` on int8 payloads
+//! with int32/int64 accumulation. The unbiasedness argument (§3.4 Eq. 1)
+//! applies per output pixel.
+
+use super::qmat::{int_mode, MatKind};
+use super::{Arith, Ctx, Layer, Param, Tensor};
+use crate::baselines::uniform::{clip_grad, uniform_dequant_scale, uniform_quantize};
+use crate::dfp::conv::{col2im_i32, im2col_i8, ConvShape};
+use crate::dfp::{bits::exp2i64, quantize, DfpTensor};
+
+/// Convolution layer (NCHW).
+pub struct Conv2d {
+    /// `[c_out × (c_in·kh·kw)]` weights.
+    pub w: Param,
+    /// `[c_out]` bias.
+    pub b: Param,
+    /// Arithmetic mode.
+    pub arith: Arith,
+    /// Static geometry (batch `n` is updated from the input each call).
+    pub geom: ConvShape,
+    saved_x: Vec<f32>,
+}
+
+impl Conv2d {
+    /// He-initialized conv layer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        c_in: usize,
+        c_out: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        h: usize,
+        w: usize,
+        arith: Arith,
+        rng: &mut crate::dfp::rng::Rng,
+    ) -> Self {
+        let fan_in = c_in * k * k;
+        let std = (2.0 / fan_in as f32).sqrt();
+        let wts: Vec<f32> = (0..c_out * fan_in).map(|_| rng.next_gaussian() * std).collect();
+        Conv2d {
+            w: Param::new(wts, vec![c_out, c_in, k, k]),
+            b: Param::new(vec![0.0; c_out], vec![c_out]),
+            arith,
+            geom: ConvShape { n: 1, c_in, h, w, c_out, kh: k, kw: k, stride, pad },
+            saved_x: Vec::new(),
+        }
+    }
+
+    fn shape_for(&self, x: &Tensor) -> ConvShape {
+        let mut s = self.geom;
+        s.n = x.shape[0];
+        debug_assert_eq!(x.len(), s.n * s.in_img(), "conv input shape mismatch");
+        s
+    }
+
+    /// Float im2col (baseline path).
+    fn im2col_f32(img: &[f32], s: &ConvShape, col: &mut [f32]) {
+        let (ho, wo) = (s.h_out(), s.w_out());
+        let mut r = 0usize;
+        for c in 0..s.c_in {
+            let plane = &img[c * s.h * s.w..(c + 1) * s.h * s.w];
+            for ky in 0..s.kh {
+                for kx in 0..s.kw {
+                    let dst = &mut col[r * ho * wo..(r + 1) * ho * wo];
+                    let mut d = 0usize;
+                    for oy in 0..ho {
+                        let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                        for ox in 0..wo {
+                            let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+                            dst[d] = if iy < 0
+                                || iy >= s.h as isize
+                                || ix < 0
+                                || ix >= s.w as isize
+                            {
+                                0.0
+                            } else {
+                                plane[iy as usize * s.w + ix as usize]
+                            };
+                            d += 1;
+                        }
+                    }
+                    r += 1;
+                }
+            }
+        }
+    }
+
+    /// Integer forward for one arithmetic payload pair; shared by Int and
+    /// Uniform modes (they differ only in how payloads/scales were made).
+    fn forward_payload(
+        &self,
+        qx: &DfpTensor,
+        qw: &DfpTensor,
+        s: &ConvShape,
+        scale: f64,
+        bias_int: Option<(&DfpTensor, i32)>,
+    ) -> Vec<f32> {
+        let (ho, wo) = (s.h_out(), s.w_out());
+        let pix = ho * wo;
+        let mut y = vec![0f32; s.n * s.out_img()];
+        let mut col = vec![0i8; s.patch() * pix];
+        let mut acc = vec![0i32; s.c_out * pix];
+        for b in 0..s.n {
+            let img = &qx.payload[b * s.in_img()..(b + 1) * s.in_img()];
+            im2col_i8(img, s, &mut col);
+            crate::dfp::gemm::igemm_into(&qw.payload, &col, s.c_out, s.patch(), pix, &mut acc);
+            let out = &mut y[b * s.out_img()..(b + 1) * s.out_img()];
+            match bias_int {
+                Some((qb, k)) => {
+                    // Accumulator-domain integer bias add (same grid
+                    // alignment as the linear layer).
+                    let shift = qb.scale_exp() - k;
+                    for c in 0..s.c_out {
+                        let bv = qb.payload[c] as i64;
+                        let bal = if shift >= 0 {
+                            if shift < 62 { bv << shift } else { 0 }
+                        } else {
+                            bv >> (-shift).min(62)
+                        };
+                        for p in 0..pix {
+                            let a = acc[c * pix + p] as i64 + bal;
+                            out[c * pix + p] = (a as f64 * scale) as f32;
+                        }
+                    }
+                }
+                None => {
+                    for (o, &a) in out.iter_mut().zip(acc.iter()) {
+                        *o = (a as f64 * scale) as f32;
+                    }
+                }
+            }
+        }
+        y
+    }
+}
+
+impl Layer for Conv2d {
+    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let s = self.shape_for(x);
+        if ctx.train {
+            self.saved_x = x.data.clone();
+        }
+        let (ho, wo) = (s.h_out(), s.w_out());
+        let y = match &self.arith {
+            Arith::Int(cfg) => {
+                let cfg = *cfg;
+                let qx = quantize(&x.data, cfg.pbits, int_mode(&cfg, ctx, false));
+                let qw = quantize(&self.w.data, cfg.pbits, int_mode(&cfg, ctx, false));
+                let qb = quantize(&self.b.data, cfg.pbits, int_mode(&cfg, ctx, false));
+                let k = qx.scale_exp() + qw.scale_exp();
+                self.forward_payload(&qx, &qw, &s, exp2i64(k), Some((&qb, k)))
+            }
+            Arith::Float => {
+                let pix = ho * wo;
+                let mut y = vec![0f32; s.n * s.out_img()];
+                let mut col = vec![0f32; s.patch() * pix];
+                for b in 0..s.n {
+                    let img = &x.data[b * s.in_img()..(b + 1) * s.in_img()];
+                    Self::im2col_f32(img, &s, &mut col);
+                    let out = super::qmat::fgemm(
+                        MatKind::AB,
+                        &self.w.data,
+                        &col,
+                        (s.c_out, s.patch(), pix),
+                    );
+                    let dst = &mut y[b * s.out_img()..(b + 1) * s.out_img()];
+                    for c in 0..s.c_out {
+                        for p in 0..pix {
+                            dst[c * pix + p] = out[c * pix + p] + self.b.data[c];
+                        }
+                    }
+                }
+                y
+            }
+            Arith::Uniform(cfg) => {
+                let (px, sx) = uniform_quantize(&x.data, cfg, 0.0);
+                let (pw, sw) = uniform_quantize(&self.w.data, cfg, 0.0);
+                let qx = DfpTensor { payload: px, e_max: 127, pbits: cfg.bits - 1 };
+                let qw = DfpTensor { payload: pw, e_max: 127, pbits: cfg.bits - 1 };
+                let sc = uniform_dequant_scale(sx, cfg) as f64 * uniform_dequant_scale(sw, cfg) as f64;
+                let mut y = self.forward_payload(&qx, &qw, &s, sc, None);
+                let pix = ho * wo;
+                for b in 0..s.n {
+                    for c in 0..s.c_out {
+                        for p in 0..pix {
+                            y[b * s.out_img() + c * pix + p] += self.b.data[c];
+                        }
+                    }
+                }
+                y
+            }
+        };
+        Tensor::new(y, vec![s.n, s.c_out, ho, wo])
+    }
+
+    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let mut s = self.geom;
+        s.n = gy.shape[0];
+        let (ho, wo) = (s.h_out(), s.w_out());
+        let pix = ho * wo;
+        debug_assert_eq!(gy.len(), s.n * s.c_out * pix);
+
+        // Quantize the three operands according to mode; then the payload
+        // algebra is identical for Int and Uniform.
+        let (qg, qx, qw, sg, sx, sw) = match &self.arith {
+            Arith::Int(cfg) => {
+                let cfg = *cfg;
+                let qg = quantize(&gy.data, cfg.pbits, int_mode(&cfg, ctx, true));
+                let qx = quantize(&self.saved_x, cfg.pbits, int_mode(&cfg, ctx, true));
+                let qw = quantize(&self.w.data, cfg.pbits, int_mode(&cfg, ctx, true));
+                let (sg, sx, sw) =
+                    (exp2i64(qg.scale_exp()), exp2i64(qx.scale_exp()), exp2i64(qw.scale_exp()));
+                (qg, qx, qw, sg, sx, sw)
+            }
+            Arith::Uniform(cfg) => {
+                let cfg = *cfg;
+                let mut g = gy.data.clone();
+                clip_grad(&mut g, cfg.grad_clip);
+                let (pg, ssg) = uniform_quantize(&g, &cfg, 0.0);
+                let (px, ssx) = uniform_quantize(&self.saved_x, &cfg, 0.0);
+                let (pw, ssw) = uniform_quantize(&self.w.data, &cfg, 0.0);
+                let pb = cfg.bits - 1;
+                (
+                    DfpTensor { payload: pg, e_max: 127, pbits: pb },
+                    DfpTensor { payload: px, e_max: 127, pbits: pb },
+                    DfpTensor { payload: pw, e_max: 127, pbits: pb },
+                    uniform_dequant_scale(ssg, &cfg) as f64,
+                    uniform_dequant_scale(ssx, &cfg) as f64,
+                    uniform_dequant_scale(ssw, &cfg) as f64,
+                )
+            }
+            Arith::Float => {
+                // Float path handled separately below.
+                return self.backward_float(gy, &s);
+            }
+        };
+
+        let mut gw_acc = vec![0i64; s.c_out * s.patch()];
+        let mut gb_acc = vec![0i64; s.c_out];
+        let mut gx = vec![0f32; s.n * s.in_img()];
+        let mut col = vec![0i8; s.patch() * pix];
+        let mut dcol = vec![0i32; s.patch() * pix];
+        let mut gimg = vec![0i32; s.in_img()];
+        for b in 0..s.n {
+            let gslice = DfpTensor {
+                payload: qg.payload[b * s.c_out * pix..(b + 1) * s.c_out * pix].to_vec(),
+                e_max: qg.e_max,
+                pbits: qg.pbits,
+            };
+            // ∂L/∂W += Ĝ_b · col_bᵀ   ([c_out×pix]·[pix×patch])
+            let img = &qx.payload[b * s.in_img()..(b + 1) * s.in_img()];
+            im2col_i8(img, &s, &mut col);
+            let qcol = DfpTensor { payload: col.clone(), e_max: qx.e_max, pbits: qx.pbits };
+            let ow = crate::dfp::igemm_a_bt(&gslice, &qcol, s.c_out, pix, s.patch());
+            for (a, &v) in gw_acc.iter_mut().zip(&ow.acc) {
+                *a += v as i64;
+            }
+            // ∂L/∂x_b = col2im(Ŵᵀ·Ĝ_b)   ([patch×c_out]·[c_out×pix])
+            let od = crate::dfp::igemm_at_b(&qw, &gslice, s.c_out, s.patch(), pix);
+            dcol.copy_from_slice(&od.acc);
+            gimg.iter_mut().for_each(|v| *v = 0);
+            col2im_i32(&dcol, &s, &mut gimg);
+            let sxg = sw * sg;
+            let dst = &mut gx[b * s.in_img()..(b + 1) * s.in_img()];
+            for (o, &a) in dst.iter_mut().zip(&gimg) {
+                *o = (a as f64 * sxg) as f32;
+            }
+            // ∂L/∂b += channel sums of Ĝ_b (integer).
+            for c in 0..s.c_out {
+                let base = b * s.c_out * pix + c * pix;
+                let mut acc = 0i64;
+                for p in 0..pix {
+                    acc += qg.payload[base + p] as i64;
+                }
+                gb_acc[c] += acc;
+            }
+        }
+        let swg = sg * sx;
+        for (acc, &a) in self.w.grad.iter_mut().zip(&gw_acc) {
+            *acc += (a as f64 * swg) as f32;
+        }
+        for (acc, &a) in self.b.grad.iter_mut().zip(&gb_acc) {
+            *acc += (a as f64 * sg) as f32;
+        }
+        Tensor::new(gx, vec![s.n, s.c_in, s.h, s.w])
+    }
+
+    fn params(&mut self) -> Vec<&mut Param> {
+        vec![&mut self.w, &mut self.b]
+    }
+
+    fn name(&self) -> &'static str {
+        "conv2d"
+    }
+}
+
+impl Conv2d {
+    fn backward_float(&mut self, gy: &Tensor, s: &ConvShape) -> Tensor {
+        let (ho, wo) = (s.h_out(), s.w_out());
+        let pix = ho * wo;
+        let mut gx = vec![0f32; s.n * s.in_img()];
+        let mut col = vec![0f32; s.patch() * pix];
+        for b in 0..s.n {
+            let gslice = &gy.data[b * s.c_out * pix..(b + 1) * s.c_out * pix];
+            let img = &self.saved_x[b * s.in_img()..(b + 1) * s.in_img()];
+            Self::im2col_f32(img, s, &mut col);
+            // ∂L/∂W += G·colᵀ
+            let gw = super::qmat::fgemm(MatKind::ABT, gslice, &col, (s.c_out, pix, s.patch()));
+            for (a, g) in self.w.grad.iter_mut().zip(&gw) {
+                *a += g;
+            }
+            // dcol = Wᵀ·G; gx = col2im(dcol)
+            let dcol =
+                super::qmat::fgemm(MatKind::ATB, &self.w.data, gslice, (s.c_out, s.patch(), pix));
+            // col2im in f32:
+            let dst = &mut gx[b * s.in_img()..(b + 1) * s.in_img()];
+            let mut r = 0usize;
+            for c in 0..s.c_in {
+                for ky in 0..s.kh {
+                    for kx in 0..s.kw {
+                        let src = &dcol[r * pix..(r + 1) * pix];
+                        let mut d = 0usize;
+                        for oy in 0..ho {
+                            let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                            if iy < 0 || iy >= s.h as isize {
+                                d += wo;
+                                continue;
+                            }
+                            let rowbase = c * s.h * s.w + iy as usize * s.w;
+                            for ox in 0..wo {
+                                let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+                                if ix >= 0 && ix < s.w as isize {
+                                    dst[rowbase + ix as usize] += src[d];
+                                }
+                                d += 1;
+                            }
+                        }
+                        r += 1;
+                    }
+                }
+            }
+            for c in 0..s.c_out {
+                let mut acc = 0f32;
+                for p in 0..pix {
+                    acc += gslice[c * pix + p];
+                }
+                self.b.grad[c] += acc;
+            }
+        }
+        Tensor::new(gx, vec![s.n, s.c_in, s.h, s.w])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfp::rng::Rng;
+
+    fn mk(arith: Arith, seed: u64) -> Conv2d {
+        Conv2d::new(2, 3, 3, 1, 1, 6, 6, arith, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn float_gradcheck_input() {
+        let mut l = mk(Arith::Float, 1);
+        let mut rng = Rng::new(2);
+        let x = Tensor::new((0..72).map(|_| rng.next_gaussian()).collect(), vec![1, 2, 6, 6]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = l.forward(&x, &mut ctx);
+        let gx = l.backward(&y, &mut ctx); // L = 0.5Σy²
+        let eps = 1e-2;
+        for i in [0usize, 17, 35, 71] {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let mut c1 = Ctx::train(0, 0);
+            let mut c2 = Ctx::train(0, 0);
+            let lp: f32 = l.forward(&xp, &mut c1).data.iter().map(|v| 0.5 * v * v).sum();
+            let lm: f32 = l.forward(&xm, &mut c2).data.iter().map(|v| 0.5 * v * v).sum();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - gx.data[i]).abs() < 3e-2 * fd.abs().max(1.0), "i={i} fd={fd} got={}", gx.data[i]);
+        }
+    }
+
+    #[test]
+    fn int_close_to_float_forward_backward() {
+        let mut lf = mk(Arith::Float, 3);
+        let mut li = mk(Arith::int8(), 4);
+        li.w.data = lf.w.data.clone();
+        li.b.data = lf.b.data.clone();
+        let mut rng = Rng::new(5);
+        let x = Tensor::new((0..72).map(|_| rng.next_gaussian()).collect(), vec![1, 2, 6, 6]);
+        let mut c1 = Ctx::train(0, 0);
+        let mut c2 = Ctx::train(0, 0);
+        let yf = lf.forward(&x, &mut c1);
+        let yi = li.forward(&x, &mut c2);
+        let ymax = yf.data.iter().fold(0f32, |m, v| m.max(v.abs()));
+        for (a, b) in yi.data.iter().zip(&yf.data) {
+            assert!((a - b).abs() < 0.15 * ymax, "{a} vs {b}");
+        }
+        let gy = yf.clone();
+        let gf = lf.backward(&gy, &mut c1);
+        let gi = li.backward(&gy, &mut c2);
+        let gmax = gf.data.iter().fold(0f32, |m, v| m.max(v.abs()));
+        for (a, b) in gi.data.iter().zip(&gf.data) {
+            assert!((a - b).abs() < 0.25 * gmax, "{a} vs {b}");
+        }
+        // Weight grads correlate strongly.
+        let dot: f32 = lf.w.grad.iter().zip(&li.w.grad).map(|(a, b)| a * b).sum();
+        let n1: f32 = lf.w.grad.iter().map(|a| a * a).sum::<f32>().sqrt();
+        let n2: f32 = li.w.grad.iter().map(|a| a * a).sum::<f32>().sqrt();
+        assert!(dot / (n1 * n2) > 0.95, "cos={}", dot / (n1 * n2));
+    }
+
+    #[test]
+    fn uniform_mode_runs() {
+        let mut l = mk(Arith::Uniform(crate::baselines::uniform::UniformCfg::int8()), 6);
+        let x = Tensor::new(vec![0.3; 72], vec![1, 2, 6, 6]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = l.forward(&x, &mut ctx);
+        let g = l.backward(&y, &mut ctx);
+        assert_eq!(g.shape, vec![1, 2, 6, 6]);
+    }
+}

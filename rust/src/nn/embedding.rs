@@ -1,0 +1,138 @@
+//! Token embedding (lookup table) for the transformer models.
+//!
+//! A gather has no arithmetic, so it is format-exact; the gradient is a
+//! scatter-add, accumulated in integer when the arithmetic mode is Int
+//! (payload sums per row, one inverse mapping).
+
+use super::qmat::int_mode;
+use super::{Arith, Ctx, Layer, Param, Tensor};
+use crate::dfp::bits::exp2i64;
+use crate::dfp::quantize;
+
+/// Embedding table `[vocab × dim]`.
+pub struct Embedding {
+    /// Table weights.
+    pub w: Param,
+    /// Arithmetic mode (affects only the gradient scatter).
+    pub arith: Arith,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Embedding dimension.
+    pub dim: usize,
+    saved_ids: Vec<usize>,
+}
+
+impl Embedding {
+    /// Gaussian(0, 0.02)-initialized table.
+    pub fn new(vocab: usize, dim: usize, arith: Arith, rng: &mut crate::dfp::rng::Rng) -> Self {
+        let w: Vec<f32> = (0..vocab * dim).map(|_| rng.next_gaussian() * 0.02).collect();
+        Embedding {
+            w: Param::new(w, vec![vocab, dim]),
+            arith,
+            vocab,
+            dim,
+            saved_ids: Vec::new(),
+        }
+    }
+
+    /// Forward from explicit token ids (the `Tensor` API packs ids as f32;
+    /// this is the preferred typed entry point).
+    pub fn forward_ids(&mut self, ids: &[usize], train: bool) -> Tensor {
+        let mut y = vec![0f32; ids.len() * self.dim];
+        for (r, &id) in ids.iter().enumerate() {
+            debug_assert!(id < self.vocab);
+            y[r * self.dim..(r + 1) * self.dim]
+                .copy_from_slice(&self.w.data[id * self.dim..(id + 1) * self.dim]);
+        }
+        if train {
+            self.saved_ids = ids.to_vec();
+        }
+        Tensor::new(y, vec![ids.len(), self.dim])
+    }
+}
+
+impl Layer for Embedding {
+    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let ids: Vec<usize> = x.data.iter().map(|&v| v as usize).collect();
+        self.forward_ids(&ids, ctx.train)
+    }
+
+    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+        match self.arith {
+            Arith::Int(cfg) => {
+                // Integer scatter-add: quantize the upstream gradient once,
+                // accumulate payloads per table row in i64, inverse-map.
+                let qg = quantize(&gy.data, cfg.pbits, int_mode(&cfg, ctx, true));
+                let mut acc = vec![0i64; self.w.data.len()];
+                for (r, &id) in self.saved_ids.iter().enumerate() {
+                    for c in 0..self.dim {
+                        acc[id * self.dim + c] += qg.payload[r * self.dim + c] as i64;
+                    }
+                }
+                let s = exp2i64(qg.scale_exp());
+                for (g, &a) in self.w.grad.iter_mut().zip(&acc) {
+                    if a != 0 {
+                        *g += (a as f64 * s) as f32;
+                    }
+                }
+            }
+            _ => {
+                for (r, &id) in self.saved_ids.iter().enumerate() {
+                    for c in 0..self.dim {
+                        self.w.grad[id * self.dim + c] += gy.data[r * self.dim + c];
+                    }
+                }
+            }
+        }
+        // No meaningful input gradient for ids.
+        Tensor::zeros(&[self.saved_ids.len()])
+    }
+
+    fn params(&mut self) -> Vec<&mut Param> {
+        vec![&mut self.w]
+    }
+
+    fn name(&self) -> &'static str {
+        "embedding"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfp::rng::Rng;
+
+    #[test]
+    fn gather_and_scatter() {
+        let mut e = Embedding::new(10, 4, Arith::Float, &mut Rng::new(1));
+        let y = e.forward_ids(&[3, 3, 7], true);
+        assert_eq!(y.shape, vec![3, 4]);
+        assert_eq!(&y.data[0..4], &y.data[4..8]);
+        let gy = Tensor::new(vec![1.0; 12], vec![3, 4]);
+        let mut ctx = Ctx::train(0, 0);
+        e.backward(&gy, &mut ctx);
+        // Row 3 received two updates, row 7 one, others none.
+        assert_eq!(e.w.grad[3 * 4], 2.0);
+        assert_eq!(e.w.grad[7 * 4], 1.0);
+        assert_eq!(e.w.grad[0], 0.0);
+    }
+
+    #[test]
+    fn int_scatter_close_to_float() {
+        let mut rng = Rng::new(2);
+        let gy_vals: Vec<f32> = (0..12).map(|_| rng.next_gaussian()).collect();
+        let mut ef = Embedding::new(10, 4, Arith::Float, &mut Rng::new(1));
+        let mut ei = Embedding::new(10, 4, Arith::int8(), &mut Rng::new(1));
+        ef.forward_ids(&[1, 2, 1], true);
+        ei.forward_ids(&[1, 2, 1], true);
+        let gy = Tensor::new(gy_vals, vec![3, 4]);
+        let mut c1 = Ctx::train(0, 0);
+        let mut c2 = Ctx::train(0, 0);
+        ef.backward(&gy, &mut c1);
+        ei.backward(&gy, &mut c2);
+        let gmax = ef.w.grad.iter().fold(0f32, |m, v| m.max(v.abs()));
+        for (a, b) in ei.w.grad.iter().zip(&ef.w.grad) {
+            assert!((a - b).abs() < 0.1 * gmax.max(1.0));
+        }
+    }
+}

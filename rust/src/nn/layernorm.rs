@@ -1,0 +1,358 @@
+//! Layer normalization with integer forward and backward (used by the
+//! vision-transformer experiments, §5 "Vision transformer").
+//!
+//! Same fixed-point machinery as [`super::batchnorm`] but with statistics
+//! per row (token) instead of per channel, and the affine parameters
+//! indexed by feature.
+
+use super::qmat::int_mode;
+use super::{Arith, Ctx, Layer, Param, Tensor};
+use crate::dfp::bits::{exp2i64, unpack};
+use crate::dfp::fixed::{fx_recip_int, fx_rsqrt, Fx};
+use crate::dfp::quantize;
+
+#[inline(always)]
+fn align_i64(p: i64, from_exp: i32, to_exp: i32) -> i64 {
+    let d = from_exp - to_exp;
+    if d >= 0 {
+        if d >= 62 { 0 } else { p << d }
+    } else {
+        p >> (-d).min(63)
+    }
+}
+
+fn to_p15(p: i128, exp: i32) -> (i64, i32) {
+    if p == 0 {
+        return (0, exp);
+    }
+    let neg = p < 0;
+    let mut mag = p.unsigned_abs();
+    let mut e = exp;
+    while mag >= (1 << 15) {
+        mag >>= 1;
+        e += 1;
+    }
+    let v = mag as i64;
+    (if neg { -v } else { v }, e)
+}
+
+fn scalar15(x: f32) -> (i64, i32) {
+    if x == 0.0 {
+        return (0, 0);
+    }
+    let u = unpack(x);
+    let (p, k) = to_p15(u.mant as i128, u.exp - 150);
+    (if u.sign { -p } else { p }, k)
+}
+
+/// Layer-norm over the last dimension.
+pub struct LayerNorm {
+    /// Per-feature scale γ.
+    pub gamma: Param,
+    /// Per-feature shift β.
+    pub beta: Param,
+    /// Arithmetic mode.
+    pub arith: Arith,
+    /// Normalized dimension.
+    pub dim: usize,
+    /// Stability epsilon.
+    pub eps: f32,
+    saved_diff: Vec<i32>,
+    saved_kx: i32,
+    saved_r: Vec<Fx>,
+    saved_rows: usize,
+    saved_x: Vec<f32>, // float path
+}
+
+impl LayerNorm {
+    /// Unit-γ zero-β layer-norm over `dim` features.
+    pub fn new(dim: usize, arith: Arith) -> Self {
+        LayerNorm {
+            gamma: Param::new(vec![1.0; dim], vec![dim]),
+            beta: Param::new(vec![0.0; dim], vec![dim]),
+            arith,
+            dim,
+            eps: 1e-5,
+            saved_diff: Vec::new(),
+            saved_kx: 0,
+            saved_r: Vec::new(),
+            saved_rows: 0,
+            saved_x: Vec::new(),
+        }
+    }
+
+    fn forward_int(&mut self, x: &Tensor, cfg: &super::IntCfg, ctx: &mut Ctx) -> Tensor {
+        let rows = x.len() / self.dim;
+        let qx = quantize(&x.data, cfg.pbits, int_mode(cfg, ctx, false));
+        let kx = qx.scale_exp();
+        let inv_n = fx_recip_int(self.dim);
+        let mut diff = vec![0i32; x.len()];
+        let mut rs = vec![Fx::new(1, 0); rows];
+        let mut y = vec![0f32; x.len()];
+        // Precompute γ/β payloads once (shared across rows).
+        let gqs: Vec<(i64, i32)> = self.gamma.data.iter().map(|&g| scalar15(g)).collect();
+        let eps_fx = {
+            let u = unpack(self.eps);
+            Fx::new(u.mant as i64, u.exp - 150)
+        };
+        for r0 in 0..rows {
+            let base = r0 * self.dim;
+            let mut s = 0i64;
+            let mut s2 = 0i64;
+            for &p in &qx.payload[base..base + self.dim] {
+                let v = p as i64;
+                s += v;
+                s2 += v * v;
+            }
+            // Nearest-rounded integer mean + exact rational variance
+            // (N·Σq² − (Σq)²)/N² — avoids mean-truncation bias (Eq. 5).
+            let sh = (-inv_n.k).clamp(0, 126) as u32;
+            let mu = (((s as i128 * inv_n.p as i128) + (1i128 << (sh - 1))) >> sh) as i64;
+            let vnum = (s2 as i128) * (self.dim as i128) - (s as i128) * (s as i128);
+            let v1 = (vnum.max(0) * inv_n.p as i128) >> sh;
+            let var_p = ((v1 * inv_n.p as i128) >> sh) as i64;
+            let eps_p = align_i64(eps_fx.p, eps_fx.k, 2 * kx).max(1);
+            let r = fx_rsqrt(Fx::new(var_p + eps_p, 2 * kx));
+            rs[r0] = r;
+            let (r15, kr) = to_p15(r.p as i128, r.k);
+            for i in 0..self.dim {
+                let d = qx.payload[base + i] as i64 - mu;
+                diff[base + i] = d as i32;
+                let (gq, kg) = gqs[i];
+                let out_exp = kx + kr + kg;
+                let mut v = gq * d * r15;
+                let b = self.beta.data[i];
+                if b != 0.0 {
+                    let u = unpack(b);
+                    let bp = align_i64(u.mant as i64, u.exp - 150, out_exp);
+                    v += if u.sign { -bp } else { bp };
+                }
+                y[base + i] = (v as f64 * exp2i64(out_exp)) as f32;
+            }
+        }
+        if ctx.train {
+            self.saved_diff = diff;
+            self.saved_kx = kx;
+            self.saved_r = rs;
+            self.saved_rows = rows;
+        }
+        Tensor::new(y, x.shape.clone())
+    }
+
+    fn backward_int(&mut self, gy: &Tensor, cfg: &super::IntCfg, ctx: &mut Ctx) -> Tensor {
+        let rows = self.saved_rows;
+        let d = self.dim;
+        let qg = quantize(&gy.data, cfg.pbits, int_mode(cfg, ctx, true));
+        let kg = qg.scale_exp();
+        let kx = self.saved_kx;
+        let inv_n = fx_recip_int(d);
+        let gqs: Vec<(i64, i32)> = self.gamma.data.iter().map(|&g| scalar15(g)).collect();
+        let mut gx = vec![0f32; gy.len()];
+        for r0 in 0..rows {
+            let base = r0 * d;
+            let r = self.saved_r[r0];
+            let (r15, kr) = to_p15(r.p as i128, r.k);
+            // gg_i = γ_i·ĝ_i (payload exp kg + kγ_i varies per feature) —
+            // to keep one row grid, fold γ at a common exponent kgam:
+            // find max kγ and align.
+            let kgam = gqs.iter().map(|&(_, k)| k).max().unwrap_or(0);
+            let mut sg = 0i64; // Σ γĝ at exp kg + kgam
+            let mut sgx = 0i64; // Σ γĝ·x̂ at exp kg + kgam + kx + kr
+            let mut ggrow = vec![0i64; d];
+            // r (and hence kr) varies per row, so the per-feature parameter
+            // gradients cross the inverse mapping once per row — the same
+            // boundary every integer op uses.
+            let sp_gamma = exp2i64(kg + kx + kr);
+            let sp_beta = exp2i64(kg);
+            for i in 0..d {
+                let (gq, kgi) = gqs[i];
+                let gval = qg.payload[base + i] as i64;
+                let gg = align_i64(gq * gval, kg + kgi, kg + kgam);
+                ggrow[i] = gg;
+                sg += gg;
+                let xh = self.saved_diff[base + i] as i64 * r15; // exp kx+kr ≤ 2^24
+                sgx += (gg * xh) >> 15; // keep in i64: drop 15 bits, exp += 15
+                // param grads: ĝ·x̂ and ĝ (integer, inverse-mapped per row).
+                self.gamma.grad[i] += ((gval * xh) as f64 * sp_gamma) as f32;
+                self.beta.grad[i] += (gval as f64 * sp_beta) as f32;
+            }
+            let m1 = ((sg as i128 * inv_n.p as i128) >> (-inv_n.k).clamp(0, 127)) as i64;
+            let (m2, km2) = to_p15(
+                ((sgx as i128) << 15).wrapping_mul(inv_n.p as i128) >> (-inv_n.k).clamp(0, 127),
+                kg + kgam + kx + kr,
+            );
+            let e0 = kg + kgam - 20;
+            let out_scale = exp2i64(e0 + kr);
+            for i in 0..d {
+                let u = align_i64(ggrow[i] - m1, kg + kgam, e0);
+                let xh = self.saved_diff[base + i] as i64 * r15;
+                let v = align_i64((xh * m2) >> 15, kx + kr + km2 + 15, e0);
+                // r·(γĝ − m1 − x̂·m2): r15(≤2^15)·s(≤2^29) fits i64.
+                let s = u - v;
+                gx[base + i] = ((r15 * s) as f64 * out_scale) as f32;
+            }
+        }
+        Tensor::new(gx, gy.shape.clone())
+    }
+
+    fn forward_float(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let rows = x.len() / self.dim;
+        let mut y = vec![0f32; x.len()];
+        for r0 in 0..rows {
+            let base = r0 * self.dim;
+            let row = &x.data[base..base + self.dim];
+            let mean = row.iter().sum::<f32>() / self.dim as f32;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / self.dim as f32;
+            let r = 1.0 / (var + self.eps).sqrt();
+            for i in 0..self.dim {
+                y[base + i] = self.gamma.data[i] * (row[i] - mean) * r + self.beta.data[i];
+            }
+        }
+        if train {
+            self.saved_x = x.data.clone();
+            self.saved_rows = rows;
+        }
+        Tensor::new(y, x.shape.clone())
+    }
+
+    fn backward_float(&mut self, gy: &Tensor) -> Tensor {
+        let rows = self.saved_rows;
+        let d = self.dim;
+        let mut gx = vec![0f32; gy.len()];
+        for r0 in 0..rows {
+            let base = r0 * d;
+            let row = &self.saved_x[base..base + d];
+            let mean = row.iter().sum::<f32>() / d as f32;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            let r = 1.0 / (var + self.eps).sqrt();
+            let mut m1 = 0f32;
+            let mut m2 = 0f32;
+            for i in 0..d {
+                let xh = (row[i] - mean) * r;
+                let gg = self.gamma.data[i] * gy.data[base + i];
+                m1 += gg;
+                m2 += gg * xh;
+                self.gamma.grad[i] += gy.data[base + i] * xh;
+                self.beta.grad[i] += gy.data[base + i];
+            }
+            m1 /= d as f32;
+            m2 /= d as f32;
+            for i in 0..d {
+                let xh = (row[i] - mean) * r;
+                let gg = self.gamma.data[i] * gy.data[base + i];
+                gx[base + i] = r * (gg - m1 - xh * m2);
+            }
+        }
+        Tensor::new(gx, gy.shape.clone())
+    }
+}
+
+impl Layer for LayerNorm {
+    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+        match self.arith {
+            Arith::Int(cfg) => self.forward_int(x, &cfg, ctx),
+            _ => self.forward_float(x, ctx.train),
+        }
+    }
+
+    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+        match self.arith {
+            Arith::Int(cfg) => self.backward_int(gy, &cfg, ctx),
+            _ => self.backward_float(gy),
+        }
+    }
+
+    fn params(&mut self) -> Vec<&mut Param> {
+        vec![&mut self.gamma, &mut self.beta]
+    }
+
+    fn name(&self) -> &'static str {
+        "layernorm"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfp::rng::Rng;
+
+    fn input(rows: usize, d: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::new((0..rows * d).map(|_| rng.next_gaussian() * 0.8 + 0.1).collect(), vec![rows, d])
+    }
+
+    #[test]
+    fn int_forward_normalizes_rows() {
+        let mut ln = LayerNorm::new(64, Arith::int8());
+        let x = input(8, 64, 1);
+        let mut ctx = Ctx::train(0, 0);
+        let y = ln.forward(&x, &mut ctx);
+        for r in 0..8 {
+            let row = &y.data[r * 64..(r + 1) * 64];
+            let mean = row.iter().sum::<f32>() / 64.0;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 64.0;
+            assert!(mean.abs() < 0.05, "r={r} mean={mean}");
+            assert!((var - 1.0).abs() < 0.12, "r={r} var={var}");
+        }
+    }
+
+    #[test]
+    fn int_matches_float_forward() {
+        let x = input(4, 32, 2);
+        let mut lf = LayerNorm::new(32, Arith::Float);
+        let mut li = LayerNorm::new(32, Arith::int8());
+        for i in 0..32 {
+            lf.gamma.data[i] = 1.0 + 0.01 * i as f32;
+            li.gamma.data[i] = lf.gamma.data[i];
+            lf.beta.data[i] = 0.05 * i as f32 - 0.3;
+            li.beta.data[i] = lf.beta.data[i];
+        }
+        let mut c1 = Ctx::train(0, 0);
+        let mut c2 = Ctx::train(0, 0);
+        let yf = lf.forward(&x, &mut c1);
+        let yi = li.forward(&x, &mut c2);
+        for (a, b) in yi.data.iter().zip(&yf.data) {
+            assert!((a - b).abs() < 0.15, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn int_backward_direction_matches_float() {
+        let x = input(6, 48, 3);
+        let gy = input(6, 48, 4);
+        let mut lf = LayerNorm::new(48, Arith::Float);
+        let mut li = LayerNorm::new(48, Arith::int8());
+        let mut c1 = Ctx::train(0, 0);
+        let mut c2 = Ctx::train(0, 0);
+        lf.forward(&x, &mut c1);
+        li.forward(&x, &mut c2);
+        let gf = lf.backward(&gy, &mut c1);
+        let gi = li.backward(&gy, &mut c2);
+        let dot: f32 = gf.data.iter().zip(&gi.data).map(|(a, b)| a * b).sum();
+        let n1: f32 = gf.data.iter().map(|a| a * a).sum::<f32>().sqrt();
+        let n2: f32 = gi.data.iter().map(|a| a * a).sum::<f32>().sqrt();
+        assert!(dot / (n1 * n2) > 0.9, "cos={}", dot / (n1 * n2));
+    }
+
+    #[test]
+    fn float_gradcheck() {
+        let mut ln = LayerNorm::new(8, Arith::Float);
+        let x = input(2, 8, 5);
+        let mut ctx = Ctx::train(0, 0);
+        let y = ln.forward(&x, &mut ctx);
+        let gx = ln.backward(&y, &mut ctx);
+        let eps = 1e-2;
+        for i in [0usize, 7, 12] {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let mut c1 = Ctx::train(0, 0);
+            let mut c2 = Ctx::train(0, 0);
+            let lp: f32 = ln.forward(&xp, &mut c1).data.iter().map(|v| 0.5 * v * v).sum();
+            let lm: f32 = ln.forward(&xm, &mut c2).data.iter().map(|v| 0.5 * v * v).sum();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - gx.data[i]).abs() < 6e-2 * fd.abs().max(1.0), "i={i} fd={fd} got={}", gx.data[i]);
+        }
+    }
+}

@@ -1,0 +1,327 @@
+//! Fully-connected layer — integer forward and backward (Figure 2, Eq. 15).
+//!
+//! Weight layout `[out × in]` row-major; forward is `y = x·Wᵀ + b`. In
+//! [`Arith::Int`] mode the GEMM runs on int8 payloads with int32
+//! accumulation, the bias joins *in the accumulator domain* (payload
+//! shifted to the product grid — an integer add, no float round-trip), and
+//! only the final inverse mapping returns to f32. The backward pass maps
+//! the upstream gradient to int8 with stochastic rounding and computes both
+//! `∂L/∂W = Ĝᵀ·X̂` and `∂L/∂x = Ĝ·Ŵ` as integer GEMMs.
+
+use super::qmat::{fgemm, igemm_kind, int_mode, MatKind};
+use super::{Arith, Ctx, Layer, Param, Tensor};
+use crate::baselines::uniform::{clip_grad, uniform_dequant_scale, uniform_quantize};
+use crate::dfp::{bits::exp2i64, quantize, DfpTensor};
+
+/// Fully-connected layer.
+pub struct Linear {
+    /// `[out × in]` weights.
+    pub w: Param,
+    /// `[out]` bias (empty = no bias).
+    pub b: Param,
+    /// Arithmetic mode.
+    pub arith: Arith,
+    in_dim: usize,
+    out_dim: usize,
+    saved_x: Vec<f32>,
+    saved_rows: usize,
+}
+
+impl Linear {
+    /// He-uniform initialized layer.
+    pub fn new(in_dim: usize, out_dim: usize, arith: Arith, rng: &mut crate::dfp::rng::Rng) -> Self {
+        let bound = (6.0 / in_dim as f32).sqrt();
+        let w: Vec<f32> =
+            (0..in_dim * out_dim).map(|_| (rng.next_f32() * 2.0 - 1.0) * bound).collect();
+        Linear {
+            w: Param::new(w, vec![out_dim, in_dim]),
+            b: Param::new(vec![0.0; out_dim], vec![out_dim]),
+            arith,
+            in_dim,
+            out_dim,
+            saved_x: Vec::new(),
+            saved_rows: 0,
+        }
+    }
+
+    /// Integer forward: GEMM + accumulator-domain bias add + inverse map.
+    fn forward_int(&self, x: &[f32], rows: usize, cfg: &super::IntCfg, ctx: &mut Ctx) -> Vec<f32> {
+        let qx = quantize(x, cfg.pbits, int_mode(cfg, ctx, false));
+        let qw = quantize(&self.w.data, cfg.pbits, int_mode(cfg, ctx, false));
+        let out = igemm_kind(MatKind::ABT, &qx, &qw, (rows, self.in_dim, self.out_dim));
+        let k = out.scale_exp;
+        let qb = quantize(&self.b.data, cfg.pbits, int_mode(cfg, ctx, false));
+        let kb = qb.scale_exp();
+        let shift = kb - k; // bias grid is coarser than the product grid
+        let s = exp2i64(k);
+        let mut y = vec![0f32; rows * self.out_dim];
+        if self.b.data.is_empty() || qb.payload.iter().all(|&p| p == 0) {
+            for (o, &a) in y.iter_mut().zip(&out.acc) {
+                *o = (a as f64 * s) as f32;
+            }
+            return y;
+        }
+        for r in 0..rows {
+            for c in 0..self.out_dim {
+                let acc = out.acc[r * self.out_dim + c] as i64;
+                let bv = qb.payload[c] as i64;
+                // Align the bias payload onto the accumulator grid: an
+                // integer shift (left for the common coarser-bias case;
+                // a negative shift means the bias is below one product ulp
+                // and its payload drops to the nearest grid point).
+                let acc = if shift >= 0 {
+                    if shift < 62 { acc + (bv << shift) } else { acc }
+                } else {
+                    acc + (bv >> (-shift).min(62))
+                };
+                y[r * self.out_dim + c] = (acc as f64 * s) as f32;
+            }
+        }
+        y
+    }
+}
+
+impl Layer for Linear {
+    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let rows = x.len() / self.in_dim;
+        debug_assert_eq!(rows * self.in_dim, x.len(), "input not divisible by in_dim");
+        if ctx.train {
+            self.saved_x = x.data.clone();
+            self.saved_rows = rows;
+        }
+        let y = match &self.arith {
+            Arith::Int(cfg) => {
+                let cfg = *cfg;
+                self.forward_int(&x.data, rows, &cfg, ctx)
+            }
+            Arith::Float => {
+                let mut y =
+                    fgemm(MatKind::ABT, &x.data, &self.w.data, (rows, self.in_dim, self.out_dim));
+                for r in 0..rows {
+                    for c in 0..self.out_dim {
+                        y[r * self.out_dim + c] += self.b.data[c];
+                    }
+                }
+                y
+            }
+            Arith::Uniform(cfg) => {
+                let (px, sx) = uniform_quantize(&x.data, cfg, 0.0);
+                let (pw, sw) = uniform_quantize(&self.w.data, cfg, 0.0);
+                let qx = DfpTensor { payload: px, e_max: 127, pbits: cfg.bits - 1 };
+                let qw = DfpTensor { payload: pw, e_max: 127, pbits: cfg.bits - 1 };
+                let out = igemm_kind(MatKind::ABT, &qx, &qw, (rows, self.in_dim, self.out_dim));
+                let s = uniform_dequant_scale(sx, cfg) as f64 * uniform_dequant_scale(sw, cfg) as f64;
+                let mut y: Vec<f32> =
+                    out.acc.iter().map(|&a| (a as f64 * s) as f32).collect();
+                // Prior-work baselines keep the bias in float.
+                for r in 0..rows {
+                    for c in 0..self.out_dim {
+                        y[r * self.out_dim + c] += self.b.data[c];
+                    }
+                }
+                y
+            }
+        };
+        let mut shape = x.shape.clone();
+        *shape.last_mut().expect("linear input must have a shape") = self.out_dim;
+        Tensor::new(y, shape)
+    }
+
+    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let rows = self.saved_rows;
+        debug_assert_eq!(gy.len(), rows * self.out_dim);
+        let (gx, gw, gb) = match &self.arith {
+            Arith::Int(cfg) => {
+                let cfg = *cfg;
+                let qg = quantize(&gy.data, cfg.pbits, int_mode(&cfg, ctx, true));
+                let qw = quantize(&self.w.data, cfg.pbits, int_mode(&cfg, ctx, true));
+                let qx = quantize(&self.saved_x, cfg.pbits, int_mode(&cfg, ctx, true));
+                // ∂L/∂x = Ĝ·Ŵ  — [rows×out]·[out×in]
+                let ox = igemm_kind(MatKind::AB, &qg, &qw, (rows, self.out_dim, self.in_dim));
+                let gx = crate::dfp::inverse_i32(&ox.acc, ox.scale_exp);
+                // ∂L/∂W = Ĝᵀ·X̂ — Eq. 15
+                let ow = igemm_kind(MatKind::ATB, &qg, &qx, (rows, self.out_dim, self.in_dim));
+                let gw = crate::dfp::inverse_i32(&ow.acc, ow.scale_exp);
+                // ∂L/∂b: integer column sum of the quantized gradient.
+                let mut gb = vec![0i64; self.out_dim];
+                for r in 0..rows {
+                    for c in 0..self.out_dim {
+                        gb[c] += qg.payload[r * self.out_dim + c] as i64;
+                    }
+                }
+                let sb = exp2i64(qg.scale_exp());
+                let gb: Vec<f32> = gb.iter().map(|&v| (v as f64 * sb) as f32).collect();
+                (gx, gw, gb)
+            }
+            Arith::Float => {
+                let gx =
+                    fgemm(MatKind::AB, &gy.data, &self.w.data, (rows, self.out_dim, self.in_dim));
+                let gw =
+                    fgemm(MatKind::ATB, &gy.data, &self.saved_x, (rows, self.out_dim, self.in_dim));
+                let mut gb = vec![0f32; self.out_dim];
+                for r in 0..rows {
+                    for c in 0..self.out_dim {
+                        gb[c] += gy.data[r * self.out_dim + c];
+                    }
+                }
+                (gx, gw, gb)
+            }
+            Arith::Uniform(cfg) => {
+                let cfg = *cfg;
+                let mut g = gy.data.clone();
+                clip_grad(&mut g, cfg.grad_clip);
+                let (pg, sg) = uniform_quantize(&g, &cfg, 0.0);
+                let (pw, sw) = uniform_quantize(&self.w.data, &cfg, 0.0);
+                let (px, sx) = uniform_quantize(&self.saved_x, &cfg, 0.0);
+                let qg = DfpTensor { payload: pg, e_max: 127, pbits: cfg.bits - 1 };
+                let qw = DfpTensor { payload: pw, e_max: 127, pbits: cfg.bits - 1 };
+                let qx = DfpTensor { payload: px, e_max: 127, pbits: cfg.bits - 1 };
+                let ox = igemm_kind(MatKind::AB, &qg, &qw, (rows, self.out_dim, self.in_dim));
+                let s1 = uniform_dequant_scale(sg, &cfg) as f64 * uniform_dequant_scale(sw, &cfg) as f64;
+                let gx: Vec<f32> = ox.acc.iter().map(|&a| (a as f64 * s1) as f32).collect();
+                let ow = igemm_kind(MatKind::ATB, &qg, &qx, (rows, self.out_dim, self.in_dim));
+                let s2 = uniform_dequant_scale(sg, &cfg) as f64 * uniform_dequant_scale(sx, &cfg) as f64;
+                let gw: Vec<f32> = ow.acc.iter().map(|&a| (a as f64 * s2) as f32).collect();
+                let mut gb = vec![0f32; self.out_dim];
+                for r in 0..rows {
+                    for c in 0..self.out_dim {
+                        gb[c] += g[r * self.out_dim + c];
+                    }
+                }
+                (gx, gw, gb)
+            }
+        };
+        for (acc, g) in self.w.grad.iter_mut().zip(&gw) {
+            *acc += g;
+        }
+        for (acc, g) in self.b.grad.iter_mut().zip(&gb) {
+            *acc += g;
+        }
+        let mut shape = gy.shape.clone();
+        *shape.last_mut().expect("gradient must have a shape") = self.in_dim;
+        Tensor::new(gx, shape)
+    }
+
+    fn params(&mut self) -> Vec<&mut Param> {
+        vec![&mut self.w, &mut self.b]
+    }
+
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfp::rng::Rng;
+    use crate::nn::IntCfg;
+
+    fn finite_diff_loss(layer: &mut Linear, x: &Tensor, ctx_seed: u64) -> f32 {
+        // Simple quadratic loss L = 0.5·Σ y² for gradient checking.
+        let mut ctx = Ctx::eval(ctx_seed);
+        ctx.train = true;
+        let y = layer.forward(x, &mut ctx);
+        0.5 * y.data.iter().map(|v| v * v).sum::<f32>()
+    }
+
+    #[test]
+    fn float_gradcheck() {
+        let mut rng = Rng::new(5);
+        let mut l = Linear::new(4, 3, Arith::Float, &mut rng);
+        let x = Tensor::new((0..8).map(|i| (i as f32 * 0.7).sin()).collect(), vec![2, 4]);
+        let mut ctx = Ctx::train(0, 0);
+        let y = l.forward(&x, &mut ctx);
+        // L = 0.5 Σ y² ⇒ gy = y.
+        let gx = l.backward(&y, &mut ctx);
+        // Finite differences on inputs.
+        let eps = 1e-3;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let lp = finite_diff_loss(&mut l, &xp, 0);
+            let lm = finite_diff_loss(&mut l, &xm, 0);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - gx.data[i]).abs() < 2e-2 * fd.abs().max(1.0), "i={i} fd={fd} got={}", gx.data[i]);
+        }
+        // Weight gradient finite difference.
+        let mut ctx2 = Ctx::train(0, 0);
+        let _ = l.forward(&x, &mut ctx2); // refresh saved_x
+        let gw0 = l.w.grad.clone();
+        let eps = 1e-3;
+        for i in [0usize, 5, 11] {
+            let orig = l.w.data[i];
+            l.w.data[i] = orig + eps;
+            let lp = finite_diff_loss(&mut l, &x, 0);
+            l.w.data[i] = orig - eps;
+            let lm = finite_diff_loss(&mut l, &x, 0);
+            l.w.data[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - gw0[i]).abs() < 2e-2 * fd.abs().max(1.0), "w{i} fd={fd} got={}", gw0[i]);
+        }
+    }
+
+    #[test]
+    fn int_forward_close_to_float() {
+        let mut rng = Rng::new(6);
+        let mut lf = Linear::new(16, 8, Arith::Float, &mut rng);
+        let mut li = Linear::new(16, 8, Arith::int8(), &mut rng);
+        li.w.data = lf.w.data.clone();
+        li.b.data = (0..8).map(|i| 0.05 * i as f32).collect();
+        lf.b.data = li.b.data.clone();
+        let x = Tensor::new((0..32).map(|i| ((i as f32) * 0.21).cos()).collect(), vec![2, 16]);
+        let mut c1 = Ctx::train(1, 1);
+        let mut c2 = Ctx::train(1, 1);
+        let yf = lf.forward(&x, &mut c1);
+        let yi = li.forward(&x, &mut c2);
+        let ymax = yf.data.iter().fold(0f32, |m, v| m.max(v.abs()));
+        for (a, b) in yi.data.iter().zip(&yf.data) {
+            assert!((a - b).abs() < 0.1 * ymax.max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn int_backward_unbiased_weight_grad() {
+        // Average of int8 SR weight-gradients over seeds ≈ float gradient.
+        let mut rng = Rng::new(7);
+        let mut lf = Linear::new(6, 4, Arith::Float, &mut rng);
+        let x = Tensor::new((0..12).map(|i| ((i * i) as f32 * 0.11).sin()).collect(), vec![2, 6]);
+        let gy = Tensor::new((0..8).map(|i| ((i as f32) * 0.37).cos()).collect(), vec![2, 4]);
+        let mut cf = Ctx::train(0, 0);
+        lf.forward(&x, &mut cf);
+        lf.backward(&gy, &mut cf);
+        let want = lf.w.grad.clone();
+        let trials = 3000;
+        let mut acc = vec![0f64; want.len()];
+        for t in 0..trials {
+            let mut li = Linear::new(6, 4, Arith::int8(), &mut Rng::new(7));
+            li.w.data = lf.w.data.clone();
+            let mut ci = Ctx::train(1000 + t, t);
+            li.forward(&x, &mut ci);
+            li.backward(&gy, &mut ci);
+            for (a, g) in acc.iter_mut().zip(&li.w.grad) {
+                *a += *g as f64;
+            }
+        }
+        let gmax = want.iter().fold(0f32, |m, v| m.max(v.abs())) as f64;
+        for (a, &w) in acc.iter().zip(&want) {
+            let mean = a / trials as f64;
+            assert!((mean - w as f64).abs() < 0.03 * gmax.max(1.0), "mean={mean} want={w}");
+        }
+    }
+
+    #[test]
+    fn lowbit_modes_run() {
+        for b in [4u32, 5, 6, 7, 8] {
+            let mut rng = Rng::new(b as u64);
+            let mut l = Linear::new(8, 8, Arith::Int(IntCfg::bits(b)), &mut rng);
+            let x = Tensor::new(vec![0.1; 16], vec![2, 8]);
+            let mut ctx = Ctx::train(0, 0);
+            let y = l.forward(&x, &mut ctx);
+            let g = l.backward(&y, &mut ctx);
+            assert_eq!(g.shape, vec![2, 8]);
+        }
+    }
+}

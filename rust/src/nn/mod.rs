@@ -1,0 +1,253 @@
+//! Integer neural-network layers — forward *and* backward in integer
+//! arithmetic (§3.3, §5 "Integer training setup").
+//!
+//! Design: activations cross layer boundaries as f32 (the output of the
+//! paper's non-linear inverse mapping, Figure 1b); each layer re-applies
+//! the linear fixed-point mapping to its inputs/weights/incoming gradients
+//! and performs its compute on integer payloads. Three arithmetic modes
+//! share one layer implementation:
+//!
+//! * [`Arith::Float`] — the fp32 baseline the paper compares against;
+//! * [`Arith::Int`] — the paper's method (dynamic fixed-point + SR);
+//! * [`Arith::Uniform`] — the Appendix-A.6 division/clipping quantizer used
+//!   by prior work ([2][3][4]), for the Table 4 comparison.
+
+pub mod activations;
+pub mod attention;
+pub mod batchnorm;
+pub mod blocks;
+pub mod conv2d;
+pub mod embedding;
+pub mod layernorm;
+pub mod linear;
+pub mod pool;
+pub mod qmat;
+pub mod softmax_ce;
+
+pub use blocks::Sequential;
+
+use crate::baselines::uniform::UniformCfg;
+
+/// A dense f32 tensor with explicit shape (row-major).
+#[derive(Clone, Debug, Default)]
+pub struct Tensor {
+    /// Row-major data.
+    pub data: Vec<f32>,
+    /// Shape; product must equal `data.len()`.
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    /// Construct, checking shape/data consistency.
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Tensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor { data, shape }
+    }
+
+    /// All-zeros tensor of a shape.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Leading dimension (batch).
+    pub fn dim0(&self) -> usize {
+        self.shape.first().copied().unwrap_or(0)
+    }
+
+    /// Product of all but the leading dimension.
+    pub fn inner(&self) -> usize {
+        if self.shape.len() <= 1 {
+            1
+        } else {
+            self.shape[1..].iter().product()
+        }
+    }
+}
+
+/// Integer-arithmetic configuration (the paper's method).
+#[derive(Clone, Copy, Debug)]
+pub struct IntCfg {
+    /// Payload mantissa bits for activations/weights/gradients
+    /// (7 = int8; Table 5 sweeps 6,5,4,3).
+    pub pbits: u32,
+    /// Stochastic rounding in the forward mapping (on by default — it
+    /// measurably improves convergence at small batch sizes; the paper's
+    /// hard requirement is SR in the back-propagation, §3 point ii).
+    pub sr_forward: bool,
+    /// Stochastic rounding in the backward mapping (required; turning it
+    /// off is the "nearest" ablation that biases gradients).
+    pub sr_backward: bool,
+}
+
+impl Default for IntCfg {
+    fn default() -> Self {
+        IntCfg { pbits: 7, sr_forward: true, sr_backward: true }
+    }
+}
+
+impl IntCfg {
+    /// int8 configuration (the paper's default).
+    pub fn int8() -> Self {
+        Self::default()
+    }
+
+    /// Configuration for a given total bit-width B ∈ {4..8} (Table 5).
+    pub fn bits(b: u32) -> Self {
+        assert!((2..=8).contains(&b), "bit-width {b} unsupported");
+        IntCfg { pbits: b - 1, ..Self::default() }
+    }
+}
+
+/// Which arithmetic a layer uses for its compute.
+#[derive(Clone, Copy, Debug)]
+pub enum Arith {
+    /// Pure fp32 (baseline).
+    Float,
+    /// Dynamic fixed-point with representation mapping (ours).
+    Int(IntCfg),
+    /// Symmetric uniform quantization with clipping (Appendix A.6 /
+    /// prior-work baseline).
+    Uniform(UniformCfg),
+}
+
+impl Arith {
+    /// The paper's int8 training mode.
+    pub fn int8() -> Arith {
+        Arith::Int(IntCfg::int8())
+    }
+}
+
+/// Per-step context: seeds for stochastic rounding and train/eval phase.
+#[derive(Clone, Debug)]
+pub struct Ctx {
+    /// Base seed; combined with an internal counter per quantization site.
+    pub seed: u64,
+    /// Monotonic counter: every quantization event draws a fresh stream.
+    pub counter: u64,
+    /// Training (true) vs evaluation (false) — controls BN statistics and
+    /// dropout-like behaviour.
+    pub train: bool,
+    /// Override the batch-norm running-stat momentum for this pass (used
+    /// by the trainer's post-training BN re-estimation pass).
+    pub bn_momentum: Option<f32>,
+}
+
+impl Ctx {
+    /// Fresh context for a training step.
+    pub fn train(seed: u64, step: u64) -> Ctx {
+        Ctx { seed: crate::dfp::rng::hash2(seed, step), counter: 0, train: true, bn_momentum: None }
+    }
+
+    /// Fresh context for evaluation.
+    pub fn eval(seed: u64) -> Ctx {
+        Ctx { seed, counter: 0, train: false, bn_momentum: None }
+    }
+
+    /// Next per-site stochastic-rounding seed.
+    pub fn next_seed(&mut self) -> u64 {
+        self.counter += 1;
+        crate::dfp::rng::hash2(self.seed, self.counter)
+    }
+}
+
+/// A learnable parameter: f32 master view + gradient accumulator.
+///
+/// Under integer SGD (Remark 5) the optimizer owns the authoritative int16
+/// state; `data` holds its inverse-mapped f32 view that layers re-quantize.
+#[derive(Clone, Debug, Default)]
+pub struct Param {
+    /// Current value (inverse-mapped view under integer SGD).
+    pub data: Vec<f32>,
+    /// Gradient accumulated by `backward`.
+    pub grad: Vec<f32>,
+    /// Shape (for checkpointing / debugging).
+    pub shape: Vec<usize>,
+}
+
+impl Param {
+    /// New parameter from initial values.
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Param {
+        let n = data.len();
+        debug_assert_eq!(n, shape.iter().product::<usize>());
+        Param { data, grad: vec![0.0; n], shape }
+    }
+
+    /// Zero the gradient accumulator.
+    pub fn zero_grad(&mut self) {
+        self.grad.iter_mut().for_each(|g| *g = 0.0);
+    }
+}
+
+/// The layer interface: stateful forward/backward (caches saved between
+/// the two calls), parameters exposed for the optimizer.
+pub trait Layer: Send {
+    /// Forward pass. `ctx.train` selects training behaviour.
+    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor;
+
+    /// Backward pass: consumes the upstream gradient, accumulates parameter
+    /// gradients internally, returns the input gradient.
+    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor;
+
+    /// Mutable access to parameters (empty for stateless layers).
+    fn params(&mut self) -> Vec<&mut Param> {
+        Vec::new()
+    }
+
+    /// Human-readable layer name for summaries.
+    fn name(&self) -> &'static str;
+
+    /// Parameter count (for model summaries).
+    fn param_count(&mut self) -> usize {
+        self.params().iter().map(|p| p.data.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_helpers() {
+        let t = Tensor::zeros(&[4, 3, 2]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.dim0(), 4);
+        assert_eq!(t.inner(), 6);
+    }
+
+    #[test]
+    fn ctx_seeds_unique_per_site_and_step() {
+        let mut a = Ctx::train(7, 0);
+        let s1 = a.next_seed();
+        let s2 = a.next_seed();
+        assert_ne!(s1, s2);
+        let mut b = Ctx::train(7, 1);
+        assert_ne!(s1, b.next_seed());
+        // Same seed/step reproduces the same stream.
+        let mut c = Ctx::train(7, 0);
+        assert_eq!(s1, c.next_seed());
+    }
+
+    #[test]
+    fn intcfg_bits() {
+        assert_eq!(IntCfg::bits(8).pbits, 7);
+        assert_eq!(IntCfg::bits(4).pbits, 3);
+    }
+
+    #[test]
+    fn param_zero_grad() {
+        let mut p = Param::new(vec![1.0, 2.0], vec![2]);
+        p.grad = vec![3.0, 4.0];
+        p.zero_grad();
+        assert_eq!(p.grad, vec![0.0, 0.0]);
+    }
+}

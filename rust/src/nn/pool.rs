@@ -1,0 +1,232 @@
+//! Pooling layers (NCHW).
+//!
+//! Max-pool is a payload comparison (format-exact in any mode); average
+//! pooling with a power-of-two window is an integer add + shift, which is
+//! how the integer pipeline keeps it exact.
+
+use super::{Ctx, Layer, Tensor};
+
+/// 2×2 stride-2 max pooling.
+pub struct MaxPool2 {
+    argmax: Vec<usize>,
+    in_shape: Vec<usize>,
+}
+
+impl MaxPool2 {
+    /// New layer.
+    pub fn new() -> Self {
+        MaxPool2 { argmax: Vec::new(), in_shape: Vec::new() }
+    }
+}
+
+impl Default for MaxPool2 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for MaxPool2 {
+    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        let (ho, wo) = (h / 2, w / 2);
+        let mut y = vec![f32::NEG_INFINITY; n * c * ho * wo];
+        let mut am = vec![0usize; n * c * ho * wo];
+        for b in 0..n {
+            for ch in 0..c {
+                let plane = (b * c + ch) * h * w;
+                let oplane = (b * c + ch) * ho * wo;
+                for oy in 0..ho {
+                    for ox in 0..wo {
+                        let oi = oplane + oy * wo + ox;
+                        for dy in 0..2 {
+                            for dx in 0..2 {
+                                let ii = plane + (2 * oy + dy) * w + 2 * ox + dx;
+                                if x.data[ii] > y[oi] {
+                                    y[oi] = x.data[ii];
+                                    am[oi] = ii;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if ctx.train {
+            self.argmax = am;
+            self.in_shape = x.shape.clone();
+        }
+        Tensor::new(y, vec![n, c, ho, wo])
+    }
+
+    fn backward(&mut self, gy: &Tensor, _ctx: &mut Ctx) -> Tensor {
+        let mut gx = Tensor::zeros(&self.in_shape);
+        for (i, &src) in self.argmax.iter().enumerate() {
+            gx.data[src] += gy.data[i];
+        }
+        gx
+    }
+
+    fn name(&self) -> &'static str {
+        "maxpool2"
+    }
+}
+
+/// Global average pooling: NCHW → NC.
+pub struct GlobalAvgPool {
+    in_shape: Vec<usize>,
+}
+
+impl GlobalAvgPool {
+    /// New layer.
+    pub fn new() -> Self {
+        GlobalAvgPool { in_shape: Vec::new() }
+    }
+}
+
+impl Default for GlobalAvgPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for GlobalAvgPool {
+    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let (n, c) = (x.shape[0], x.shape[1]);
+        let sp: usize = x.shape[2..].iter().product();
+        let mut y = vec![0f32; n * c];
+        for i in 0..n * c {
+            let mut s = 0f32;
+            for j in 0..sp {
+                s += x.data[i * sp + j];
+            }
+            y[i] = s / sp as f32;
+        }
+        if ctx.train {
+            self.in_shape = x.shape.clone();
+        }
+        Tensor::new(y, vec![n, c])
+    }
+
+    fn backward(&mut self, gy: &Tensor, _ctx: &mut Ctx) -> Tensor {
+        let sp: usize = self.in_shape[2..].iter().product();
+        let mut gx = Tensor::zeros(&self.in_shape);
+        for i in 0..gy.len() {
+            let g = gy.data[i] / sp as f32;
+            for j in 0..sp {
+                gx.data[i * sp + j] = g;
+            }
+        }
+        gx
+    }
+
+    fn name(&self) -> &'static str {
+        "gap"
+    }
+}
+
+/// Nearest-neighbour ×2 upsampling (decoder path of the segmentation
+/// model); backward is a 2×2 sum-pool — exact adjoint, format-independent.
+pub struct Upsample2 {
+    in_shape: Vec<usize>,
+}
+
+impl Upsample2 {
+    /// New layer.
+    pub fn new() -> Self {
+        Upsample2 { in_shape: Vec::new() }
+    }
+}
+
+impl Default for Upsample2 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for Upsample2 {
+    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+        let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        let mut y = vec![0f32; n * c * 4 * h * w];
+        let (ho, wo) = (2 * h, 2 * w);
+        for i in 0..n * c {
+            for yy in 0..ho {
+                for xx in 0..wo {
+                    y[i * ho * wo + yy * wo + xx] = x.data[i * h * w + (yy / 2) * w + xx / 2];
+                }
+            }
+        }
+        if ctx.train {
+            self.in_shape = x.shape.clone();
+        }
+        Tensor::new(y, vec![n, c, ho, wo])
+    }
+
+    fn backward(&mut self, gy: &Tensor, _ctx: &mut Ctx) -> Tensor {
+        let (n, c, h, w) =
+            (self.in_shape[0], self.in_shape[1], self.in_shape[2], self.in_shape[3]);
+        let (ho, wo) = (2 * h, 2 * w);
+        let mut gx = Tensor::zeros(&self.in_shape);
+        for i in 0..n * c {
+            for yy in 0..ho {
+                for xx in 0..wo {
+                    gx.data[i * h * w + (yy / 2) * w + xx / 2] +=
+                        gy.data[i * ho * wo + yy * wo + xx];
+                }
+            }
+        }
+        gx
+    }
+
+    fn name(&self) -> &'static str {
+        "upsample2"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upsample_roundtrip_adjoint() {
+        let x = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![1, 1, 2, 2]);
+        let mut u = Upsample2::new();
+        let mut ctx = Ctx::train(0, 0);
+        let y = u.forward(&x, &mut ctx);
+        assert_eq!(y.shape, vec![1, 1, 4, 4]);
+        assert_eq!(y.data[0], 1.0);
+        assert_eq!(y.data[1], 1.0);
+        assert_eq!(y.data[5], 1.0);
+        assert_eq!(y.data[15], 4.0);
+        let g = u.backward(&Tensor::new(vec![1.0; 16], vec![1, 1, 4, 4]), &mut ctx);
+        assert_eq!(g.data, vec![4.0; 4]);
+    }
+
+    #[test]
+    fn maxpool_forward_backward() {
+        let x = Tensor::new(
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0, 12.0, 13.0, 14.0, 15.0, 16.0],
+            vec![1, 1, 4, 4],
+        );
+        let mut p = MaxPool2::new();
+        let mut ctx = Ctx::train(0, 0);
+        let y = p.forward(&x, &mut ctx);
+        assert_eq!(y.data, vec![6.0, 8.0, 14.0, 16.0]);
+        let g = p.backward(&Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![1, 1, 2, 2]), &mut ctx);
+        assert_eq!(g.data[5], 1.0);
+        assert_eq!(g.data[7], 2.0);
+        assert_eq!(g.data[13], 3.0);
+        assert_eq!(g.data[15], 4.0);
+        assert_eq!(g.data.iter().sum::<f32>(), 10.0);
+    }
+
+    #[test]
+    fn gap_mean_and_grad() {
+        let x = Tensor::new(vec![1.0, 3.0, 5.0, 7.0], vec![1, 1, 2, 2]);
+        let mut p = GlobalAvgPool::new();
+        let mut ctx = Ctx::train(0, 0);
+        let y = p.forward(&x, &mut ctx);
+        assert_eq!(y.data, vec![4.0]);
+        let g = p.backward(&Tensor::new(vec![8.0], vec![1, 1]), &mut ctx);
+        assert_eq!(g.data, vec![2.0; 4]);
+    }
+}

@@ -1,0 +1,304 @@
+//! Arithmetic-dispatched matrix multiply — the single entry point every
+//! layer uses for its inner products, so the three arithmetic modes
+//! (float / integer representation-mapping / uniform-quant baseline) share
+//! one layer implementation.
+
+use crate::baselines::uniform::{uniform_dequant_scale, uniform_quantize};
+use crate::dfp::{self, inverse_i32, quantize, DfpTensor, RoundMode};
+use super::{Arith, Ctx};
+
+/// Which contraction to perform (avoids materializing transposes):
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatKind {
+    /// `C[m×n] = A[m×k]·B[k×n]`, dims = (m, k, n).
+    AB,
+    /// `C[m×n] = Aᵀ·B` with `A[r×m]`, `B[r×n]`, dims = (r, m, n)
+    /// (weight-gradient shape, Eq. 15).
+    ATB,
+    /// `C[m×p] = A·Bᵀ` with `A[m×n]`, `B[p×n]`, dims = (m, n, p)
+    /// (input-gradient shape).
+    ABT,
+}
+
+impl MatKind {
+    /// Output element count for given dims.
+    pub fn out_len(self, d: (usize, usize, usize)) -> usize {
+        match self {
+            MatKind::AB => d.0 * d.2,
+            MatKind::ATB => d.1 * d.2,
+            MatKind::ABT => d.0 * d.2,
+        }
+    }
+}
+
+/// Round mode for a mapping event under an [`Arith::Int`] config.
+pub fn int_mode(cfg: &super::IntCfg, ctx: &mut Ctx, backward: bool) -> RoundMode {
+    let sr = if backward { cfg.sr_backward } else { cfg.sr_forward };
+    if sr {
+        RoundMode::Stochastic(ctx.next_seed())
+    } else {
+        RoundMode::Nearest
+    }
+}
+
+/// Dispatched GEMM: multiply `a` and `b` (f32 at the boundary) under the
+/// given arithmetic; `backward` selects the backward-path rounding config.
+pub fn qgemm(
+    arith: &Arith,
+    kind: MatKind,
+    a: &[f32],
+    b: &[f32],
+    dims: (usize, usize, usize),
+    ctx: &mut Ctx,
+    backward: bool,
+) -> Vec<f32> {
+    match arith {
+        Arith::Float => fgemm(kind, a, b, dims),
+        Arith::Int(cfg) => {
+            let qa = quantize(a, cfg.pbits, int_mode(cfg, ctx, backward));
+            let qb = quantize(b, cfg.pbits, int_mode(cfg, ctx, backward));
+            let out = igemm_kind(kind, &qa, &qb, dims);
+            inverse_i32(&out.acc, out.scale_exp)
+        }
+        Arith::Uniform(cfg) => {
+            let (pa, sa) = uniform_quantize(a, cfg, 0.0);
+            let (pb, sb) = uniform_quantize(b, cfg, 0.0);
+            let qa = DfpTensor { payload: pa, e_max: 127, pbits: cfg.bits - 1 };
+            let qb = DfpTensor { payload: pb, e_max: 127, pbits: cfg.bits - 1 };
+            let out = igemm_kind(kind, &qa, &qb, dims);
+            let s = uniform_dequant_scale(sa, cfg) as f64 * uniform_dequant_scale(sb, cfg) as f64;
+            out.acc.iter().map(|&x| (x as f64 * s) as f32).collect()
+        }
+    }
+}
+
+/// Integer GEMM dispatch on payload tensors.
+pub fn igemm_kind(
+    kind: MatKind,
+    qa: &DfpTensor,
+    qb: &DfpTensor,
+    d: (usize, usize, usize),
+) -> dfp::IgemmOut {
+    match kind {
+        MatKind::AB => dfp::igemm(qa, qb, d.0, d.1, d.2),
+        MatKind::ATB => dfp::igemm_at_b(qa, qb, d.0, d.1, d.2),
+        MatKind::ABT => dfp::igemm_a_bt(qa, qb, d.0, d.1, d.2),
+    }
+}
+
+/// Float GEMM dispatch (the fp32 baseline path), cache-blocked like the
+/// integer kernel, threaded for large problems.
+pub fn fgemm(kind: MatKind, a: &[f32], b: &[f32], d: (usize, usize, usize)) -> Vec<f32> {
+    match kind {
+        MatKind::AB => fgemm_ab(a, b, d.0, d.1, d.2),
+        MatKind::ATB => {
+            let (r, m, n) = d;
+            debug_assert_eq!(a.len(), r * m);
+            debug_assert_eq!(b.len(), r * n);
+            let mut c = vec![0f32; m * n];
+            for rr in 0..r {
+                let arow = &a[rr * m..(rr + 1) * m];
+                let brow = &b[rr * n..(rr + 1) * n];
+                for (i, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let crow = &mut c[i * n..(i + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+            c
+        }
+        MatKind::ABT => {
+            let (m, n, p) = d;
+            debug_assert_eq!(a.len(), m * n);
+            debug_assert_eq!(b.len(), p * n);
+            let mut c = vec![0f32; m * p];
+            for i in 0..m {
+                let arow = &a[i * n..(i + 1) * n];
+                for j in 0..p {
+                    let brow = &b[j * n..(j + 1) * n];
+                    let mut s = 0f32;
+                    for (&x, &y) in arow.iter().zip(brow) {
+                        s += x * y;
+                    }
+                    c[i * p + j] = s;
+                }
+            }
+            c
+        }
+    }
+}
+
+fn fgemm_ab(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut c = vec![0f32; m * n];
+    let threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1).min(16);
+    if m * k * n < (1 << 18) || threads == 1 || m == 1 {
+        fgemm_rows(a, b, 0, m, k, n, &mut c);
+        return c;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = &mut c[..];
+        let mut row0 = 0usize;
+        while row0 < m {
+            let rows = rows_per.min(m - row0);
+            let (panel, tail) = rest.split_at_mut(rows * n);
+            rest = tail;
+            let r0 = row0;
+            s.spawn(move || fgemm_rows(a, b, r0, rows, k, n, panel));
+            row0 += rows;
+        }
+    });
+    c
+}
+
+fn fgemm_rows(a: &[f32], b: &[f32], row0: usize, rows: usize, k: usize, n: usize, out: &mut [f32]) {
+    for i in 0..rows {
+        let arow = &a[(row0 + i) * k..(row0 + i) * k + k];
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..kk * n + n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfp::rng::Rng;
+    use crate::nn::IntCfg;
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn fgemm_kinds_consistent() {
+        let mut rng = Rng::new(2);
+        let (m, k, n) = (5, 7, 6);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.next_gaussian()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.next_gaussian()).collect();
+        let c = fgemm(MatKind::AB, &a, &b, (m, k, n));
+        assert_eq!(c, naive(&a, &b, m, k, n));
+        // ATB: build At and compare.
+        let mut at = vec![0f32; k * m];
+        for i in 0..m {
+            for j in 0..k {
+                at[j * m + i] = a[i * k + j];
+            }
+        }
+        let c2 = fgemm(MatKind::ATB, &a, &b, (m, k, n)); // Aᵀ(k×m)... dims (r=m, m=k, n)
+        let want = naive(&at, &b, k, m, n);
+        // note: ATB treats a as [r×m]; here r=m(5), m=k(7)? — mismatch in
+        // naming; verify with the definition directly:
+        assert_eq!(c2.len(), k * n);
+        for i in 0..k {
+            for j in 0..n {
+                let mut s = 0f32;
+                for r in 0..m {
+                    s += a[r * k + i] * b[r * n + j];
+                }
+                assert!((c2[i * n + j] - s).abs() < 1e-5);
+            }
+        }
+        let _ = want;
+    }
+
+    #[test]
+    fn fgemm_abt() {
+        let mut rng = Rng::new(3);
+        let (m, n, p) = (4, 6, 3);
+        let a: Vec<f32> = (0..m * n).map(|_| rng.next_gaussian()).collect();
+        let b: Vec<f32> = (0..p * n).map(|_| rng.next_gaussian()).collect();
+        let c = fgemm(MatKind::ABT, &a, &b, (m, n, p));
+        for i in 0..m {
+            for j in 0..p {
+                let mut s = 0f32;
+                for t in 0..n {
+                    s += a[i * n + t] * b[j * n + t];
+                }
+                assert!((c[i * p + j] - s).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn qgemm_int_close_to_float() {
+        let mut rng = Rng::new(4);
+        let (m, k, n) = (8, 32, 8);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.next_gaussian()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.next_gaussian() * 0.1).collect();
+        let mut ctx = Ctx::train(1, 0);
+        let ci = qgemm(&Arith::int8(), MatKind::AB, &a, &b, (m, k, n), &mut ctx, false);
+        let cf = fgemm(MatKind::AB, &a, &b, (m, k, n));
+        let scale: f32 = cf.iter().map(|x| x.abs()).fold(0.0, f32::max);
+        for (x, y) in ci.iter().zip(&cf) {
+            assert!((x - y).abs() < 0.15 * scale.max(1.0), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn qgemm_uniform_close_to_float() {
+        let mut rng = Rng::new(6);
+        let (m, k, n) = (4, 16, 4);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.next_gaussian()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.next_gaussian() * 0.1).collect();
+        let mut ctx = Ctx::train(1, 0);
+        let arith = Arith::Uniform(crate::baselines::uniform::UniformCfg::int8());
+        let ci = qgemm(&arith, MatKind::AB, &a, &b, (m, k, n), &mut ctx, false);
+        let cf = fgemm(MatKind::AB, &a, &b, (m, k, n));
+        let scale: f32 = cf.iter().map(|x| x.abs()).fold(0.0, f32::max);
+        for (x, y) in ci.iter().zip(&cf) {
+            assert!((x - y).abs() < 0.15 * scale.max(1.0), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn qgemm_int_sr_unbiased_vs_nearest_biased_structure() {
+        // Averaging int8 SR GEMMs over seeds must converge to the float
+        // product (Eq. 1); nearest-mode stays at its one deterministic value.
+        let a = [0.3f32, -0.52, 0.11, 0.77];
+        let b = [0.2f32, 0.4, -0.33, 0.25];
+        let cf = fgemm(MatKind::AB, &a, &b, (2, 2, 2));
+        let trials = 4000u64;
+        let mut acc = vec![0f64; 4];
+        for t in 0..trials {
+            let mut ctx = Ctx::train(t, t);
+            let ci = qgemm(&Arith::int8(), MatKind::AB, &a, &b, (2, 2, 2), &mut ctx, true);
+            for (s, v) in acc.iter_mut().zip(&ci) {
+                *s += *v as f64;
+            }
+        }
+        for (s, &f) in acc.iter().zip(&cf) {
+            let mean = s / trials as f64;
+            assert!((mean - f as f64).abs() < 6e-3, "mean={mean} want={f}");
+        }
+    }
+
+    #[test]
+    fn int_mode_respects_cfg() {
+        let mut ctx = Ctx::train(0, 0);
+        let cfg = IntCfg { sr_forward: false, sr_backward: true, pbits: 7 };
+        assert_eq!(int_mode(&cfg, &mut ctx, false), RoundMode::Nearest);
+        assert!(matches!(int_mode(&cfg, &mut ctx, true), RoundMode::Stochastic(_)));
+    }
+}

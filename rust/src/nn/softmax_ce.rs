@@ -1,0 +1,224 @@
+//! Losses: softmax cross-entropy (float, as the paper keeps softmax in
+//! floating point), mean-squared error, and the multi-task losses used by
+//! the detection head (sigmoid-BCE + smooth-L1).
+
+use super::Tensor;
+
+/// Numerically-stable row softmax.
+pub fn softmax_rows(logits: &[f32], rows: usize, classes: usize) -> Vec<f32> {
+    let mut p = vec![0f32; rows * classes];
+    for r in 0..rows {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut z = 0f32;
+        for (i, &v) in row.iter().enumerate() {
+            let e = (v - m).exp();
+            p[r * classes + i] = e;
+            z += e;
+        }
+        for i in 0..classes {
+            p[r * classes + i] /= z;
+        }
+    }
+    p
+}
+
+/// Softmax cross-entropy with integer class targets.
+/// Returns `(mean loss, gradient w.r.t. logits)`.
+pub fn softmax_ce(logits: &Tensor, targets: &[usize]) -> (f32, Tensor) {
+    let classes = *logits.shape.last().expect("logits need a class dim");
+    let rows = logits.len() / classes;
+    debug_assert_eq!(targets.len(), rows);
+    let p = softmax_rows(&logits.data, rows, classes);
+    let mut loss = 0f64;
+    let mut grad = p.clone();
+    for r in 0..rows {
+        let t = targets[r];
+        loss -= (p[r * classes + t].max(1e-12) as f64).ln();
+        grad[r * classes + t] -= 1.0;
+    }
+    let inv = 1.0 / rows as f32;
+    for g in grad.iter_mut() {
+        *g *= inv;
+    }
+    ((loss / rows as f64) as f32, Tensor::new(grad, logits.shape.clone()))
+}
+
+/// Per-pixel softmax cross-entropy for segmentation: logits `[N,C,H,W]`,
+/// targets `[N·H·W]` class ids; ignore label `255`.
+pub fn softmax_ce_pixels(logits: &Tensor, targets: &[usize]) -> (f32, Tensor) {
+    let (n, c) = (logits.shape[0], logits.shape[1]);
+    let sp: usize = logits.shape[2..].iter().product();
+    debug_assert_eq!(targets.len(), n * sp);
+    let mut grad = Tensor::zeros(&logits.shape);
+    let mut loss = 0f64;
+    let mut count = 0usize;
+    for b in 0..n {
+        for s in 0..sp {
+            let t = targets[b * sp + s];
+            if t == 255 {
+                continue;
+            }
+            // Gather the class column for this pixel.
+            let mut m = f32::NEG_INFINITY;
+            for cl in 0..c {
+                m = m.max(logits.data[(b * c + cl) * sp + s]);
+            }
+            let mut z = 0f32;
+            let mut e = vec![0f32; c];
+            for cl in 0..c {
+                e[cl] = (logits.data[(b * c + cl) * sp + s] - m).exp();
+                z += e[cl];
+            }
+            loss -= ((e[t] / z).max(1e-12) as f64).ln();
+            count += 1;
+            for cl in 0..c {
+                grad.data[(b * c + cl) * sp + s] = e[cl] / z - if cl == t { 1.0 } else { 0.0 };
+            }
+        }
+    }
+    let inv = 1.0 / count.max(1) as f32;
+    for g in grad.data.iter_mut() {
+        *g *= inv;
+    }
+    ((loss / count.max(1) as f64) as f32, grad)
+}
+
+/// Mean-squared-error loss; returns `(loss, grad)`.
+pub fn mse(pred: &Tensor, target: &[f32]) -> (f32, Tensor) {
+    debug_assert_eq!(pred.len(), target.len());
+    let n = pred.len() as f32;
+    let mut loss = 0f64;
+    let mut grad = vec![0f32; pred.len()];
+    for (i, (&p, &t)) in pred.data.iter().zip(target).enumerate() {
+        let d = p - t;
+        loss += 0.5 * (d as f64) * (d as f64);
+        grad[i] = d / n;
+    }
+    ((loss / n as f64) as f32, Tensor::new(grad, pred.shape.clone()))
+}
+
+/// Sigmoid binary cross-entropy on logits with {0,1} targets and a
+/// per-element weight; returns `(sum loss, grad)` (caller normalizes).
+pub fn sigmoid_bce(pred: &Tensor, target: &[f32], weight: &[f32]) -> (f32, Tensor) {
+    let mut loss = 0f64;
+    let mut grad = vec![0f32; pred.len()];
+    for i in 0..pred.len() {
+        let x = pred.data[i];
+        let t = target[i];
+        let w = weight[i];
+        if w == 0.0 {
+            continue;
+        }
+        // log(1+e^x) stable form.
+        let l = x.max(0.0) - x * t + (1.0 + (-x.abs()).exp()).ln();
+        loss += (w * l) as f64;
+        let s = 1.0 / (1.0 + (-x).exp());
+        grad[i] = w * (s - t);
+    }
+    (loss as f32, Tensor::new(grad, pred.shape.clone()))
+}
+
+/// Smooth-L1 (Huber) regression loss with per-element weights;
+/// returns `(sum loss, grad)`.
+pub fn smooth_l1(pred: &Tensor, target: &[f32], weight: &[f32]) -> (f32, Tensor) {
+    let mut loss = 0f64;
+    let mut grad = vec![0f32; pred.len()];
+    for i in 0..pred.len() {
+        let w = weight[i];
+        if w == 0.0 {
+            continue;
+        }
+        let d = pred.data[i] - target[i];
+        if d.abs() < 1.0 {
+            loss += (w * 0.5 * d * d) as f64;
+            grad[i] = w * d;
+        } else {
+            loss += (w * (d.abs() - 0.5)) as f64;
+            grad[i] = w * d.signum();
+        }
+    }
+    (loss as f32, Tensor::new(grad, pred.shape.clone()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let p = softmax_rows(&[1.0, 2.0, 3.0, -1.0, 0.0, 1.0], 2, 3);
+        for r in 0..2 {
+            let s: f32 = p[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn ce_gradcheck() {
+        let logits = Tensor::new(vec![0.2, -0.5, 1.3, 0.9, 0.1, -0.2], vec![2, 3]);
+        let targets = [2usize, 0];
+        let (_, g) = softmax_ce(&logits, &targets);
+        let eps = 1e-3;
+        for i in 0..6 {
+            let mut lp = logits.clone();
+            lp.data[i] += eps;
+            let mut lm = logits.clone();
+            lm.data[i] -= eps;
+            let (l1, _) = softmax_ce(&lp, &targets);
+            let (l2, _) = softmax_ce(&lm, &targets);
+            let fd = (l1 - l2) / (2.0 * eps);
+            assert!((fd - g.data[i]).abs() < 1e-3, "i={i} fd={fd} got={}", g.data[i]);
+        }
+    }
+
+    #[test]
+    fn pixel_ce_ignores_255() {
+        let logits = Tensor::new(vec![1.0, 0.0, 0.0, 1.0, 0.5, 0.5, 0.5, 0.5], vec![1, 2, 2, 2]);
+        let targets = [0usize, 255, 1, 255];
+        let (loss, g) = softmax_ce_pixels(&logits, &targets);
+        assert!(loss > 0.0);
+        // Ignored pixels contribute zero gradient.
+        assert_eq!(g.data[1], 0.0);
+        assert_eq!(g.data[5], 0.0);
+    }
+
+    #[test]
+    fn mse_grad() {
+        let p = Tensor::new(vec![1.0, 2.0], vec![2]);
+        let (l, g) = mse(&p, &[0.0, 0.0]);
+        assert!((l - 0.5 * (1.0 + 4.0) / 2.0).abs() < 1e-6);
+        assert_eq!(g.data, vec![0.5, 1.0]);
+    }
+
+    #[test]
+    fn bce_and_smooth_l1_gradcheck() {
+        let p = Tensor::new(vec![0.3, -1.2, 2.0], vec![3]);
+        let t = [1.0f32, 0.0, 1.0];
+        let w = [1.0f32, 1.0, 0.5];
+        let (_, g) = sigmoid_bce(&p, &t, &w);
+        let eps = 1e-3;
+        for i in 0..3 {
+            let mut pp = p.clone();
+            pp.data[i] += eps;
+            let mut pm = p.clone();
+            pm.data[i] -= eps;
+            let (l1, _) = sigmoid_bce(&pp, &t, &w);
+            let (l2, _) = sigmoid_bce(&pm, &t, &w);
+            let fd = (l1 - l2) / (2.0 * eps);
+            assert!((fd - g.data[i]).abs() < 1e-3);
+        }
+        let (_, g) = smooth_l1(&p, &t, &w);
+        for i in 0..3 {
+            let mut pp = p.clone();
+            pp.data[i] += eps;
+            let mut pm = p.clone();
+            pm.data[i] -= eps;
+            let (l1, _) = smooth_l1(&pp, &t, &w);
+            let (l2, _) = smooth_l1(&pm, &t, &w);
+            let fd = (l1 - l2) / (2.0 * eps);
+            assert!((fd - g.data[i]).abs() < 1e-3);
+        }
+    }
+}

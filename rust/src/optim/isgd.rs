@@ -1,0 +1,262 @@
+//! Integer SGD — Remark 5 / Appendix A.4.
+//!
+//! The authoritative optimizer state (weights *and* momentum) lives in
+//! int16 dynamic fixed-point; gradients arrive as f32 from the layers'
+//! inverse mappings and are immediately mapped to int16. The update
+//!
+//! ```text
+//! g ← ĝ + λ̂·ŵ;   m ← μ̂·m + g;   w ← w − α̂·m
+//! ```
+//!
+//! is computed entirely with integer multiply / shift / add: the terms are
+//! aligned onto common power-of-two grids (left shifts exact, right shifts
+//! floor with ≥30 guard bits), and the results are stochastically rounded
+//! back to int16 payloads — making `E{ŵ_{k+1}} = w_{k+1}` (Eq. 28).
+//! Hyper-parameters are quantized to 15-bit scalars (`α̂ = α + δ^α`).
+
+use super::Optimizer;
+use crate::dfp::bits::{exp2i64, unpack};
+use crate::dfp::rng::hash2;
+use crate::dfp::round::stochastic_round_u64;
+use crate::dfp::tensor::Dfp16Tensor;
+use crate::dfp::{quantize16, RoundMode};
+use crate::nn::Param;
+
+/// Quantize a positive/negative f32 scalar to a ≤15-bit payload + exponent.
+fn scalar15(x: f32) -> (i64, i32) {
+    if x == 0.0 {
+        return (0, 0);
+    }
+    let u = unpack(x);
+    let mut p = u.mant as i64; // 24-bit
+    let mut k = u.exp - 150;
+    while p >= 1 << 15 {
+        p >>= 1;
+        k += 1;
+    }
+    (if u.sign { -p } else { p }, k)
+}
+
+#[inline(always)]
+fn align(p: i64, from: i32, to: i32) -> i64 {
+    let d = from - to;
+    if d >= 0 {
+        if d >= 62 { 0 } else { p << d }
+    } else {
+        p >> (-d).min(63)
+    }
+}
+
+/// Stochastically renormalize i64 working values at exponent `e` back to an
+/// int16 tensor (15-bit payloads, fresh shared exponent).
+fn renorm16(vals: &[i64], e: i32, seed: u64) -> Dfp16Tensor {
+    let amax = vals.iter().map(|&v| v.unsigned_abs()).max().unwrap_or(0);
+    if amax == 0 {
+        return Dfp16Tensor { payload: vec![0; vals.len()], e_max: 1, pbits: 15 };
+    }
+    let msb = 63 - amax.leading_zeros(); // leading-one position
+    let drop = (msb + 1).saturating_sub(15);
+    let maxp = (1i64 << 15) - 1;
+    let payload: Vec<i16> = vals
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            let mag = v.unsigned_abs();
+            let q = stochastic_round_u64(mag, drop, hash2(seed, i as u64)).min(maxp as u64) as i16;
+            if v < 0 {
+                -q
+            } else {
+                q
+            }
+        })
+        .collect();
+    // value = q · 2^(e + drop) ⇒ e_max = e + drop + 126 + 15.
+    Dfp16Tensor { payload, e_max: e + drop as i32 + 141, pbits: 15 }
+}
+
+/// Per-parameter integer state.
+struct State {
+    w: Dfp16Tensor,
+    m: Dfp16Tensor,
+}
+
+/// Integer SGD (int16) with momentum and weight decay.
+pub struct IntSgd {
+    /// Momentum coefficient μ (quantized to 15 bits at each step).
+    pub momentum: f32,
+    /// Weight decay λ.
+    pub weight_decay: f32,
+    /// Base seed for the stochastic-rounding streams.
+    pub seed: u64,
+    states: Vec<State>,
+}
+
+impl IntSgd {
+    /// New integer SGD.
+    pub fn new(momentum: f32, weight_decay: f32, seed: u64) -> Self {
+        IntSgd { momentum, weight_decay, seed, states: Vec::new() }
+    }
+
+    fn init_states(&mut self, params: &[&mut Param]) {
+        self.states = params
+            .iter()
+            .map(|p| State {
+                // Initial capture of the float weights into int16 (nearest —
+                // a one-time conversion, not a gradient path).
+                w: quantize16(&p.data, 15, RoundMode::Nearest),
+                m: Dfp16Tensor { payload: vec![0; p.data.len()], e_max: 1, pbits: 15 },
+            })
+            .collect();
+    }
+}
+
+impl Optimizer for IntSgd {
+    fn step(&mut self, params: &mut [&mut Param], lr: f32, step_idx: u64) {
+        if self.states.len() != params.len() {
+            self.init_states(params);
+        }
+        let (qmu, kmu) = scalar15(self.momentum);
+        let (qwd, kwd) = scalar15(self.weight_decay);
+        let (qlr, klr) = scalar15(lr);
+        for (pi, (p, st)) in params.iter_mut().zip(self.states.iter_mut()).enumerate() {
+            let seed0 = hash2(self.seed, step_idx ^ ((pi as u64) << 32));
+            // ĝ: map the f32 gradient to int16 with SR (unbiased).
+            let g = quantize16(&p.grad, 15, RoundMode::Stochastic(hash2(seed0, 1)));
+            let kg = g.scale_exp();
+            let kw = st.w.scale_exp();
+            let km = st.m.scale_exp();
+            let n = p.data.len();
+
+            // Common grids sit 30 octaves below the *largest* term exponent:
+            // the dominant term left-shifts ≤30 (no overflow), smaller terms
+            // right-shift (their dropped bits are ≥30 octaves below the
+            // dominant term — beyond int16 resolution either way).
+            // g' = ĝ + λ̂ŵ on grid e1.
+            let e1 = kg.max(kwd + kw) - 30;
+            // m' = μ̂m̂ + g' on grid e2.
+            let e2 = e1.max(kmu + km - 30);
+            let mut mnew = vec![0i64; n];
+            for i in 0..n {
+                let gp = align(g.payload[i] as i64, kg, e1)
+                    + align(qwd * st.w.payload[i] as i64, kwd + kw, e1);
+                mnew[i] = align(gp, e1, e2)
+                    + align(qmu * st.m.payload[i] as i64, kmu + km, e2);
+            }
+            let m16 = renorm16(&mnew, e2, hash2(seed0, 2));
+            let km_new = m16.scale_exp();
+            // w' = ŵ − α̂·m̂' on grid e3.
+            let e3 = kw.max(klr + km_new) - 30;
+            let mut wnew = vec![0i64; n];
+            for i in 0..n {
+                wnew[i] = align(st.w.payload[i] as i64, kw, e3)
+                    - align(qlr * m16.payload[i] as i64, klr + km_new, e3);
+            }
+            let w16 = renorm16(&wnew, e3, hash2(seed0, 3));
+            // Publish the inverse-mapped f32 view for the layers.
+            let s = exp2i64(w16.scale_exp());
+            for (d, &q) in p.data.iter_mut().zip(&w16.payload) {
+                *d = (q as f64 * s) as f32;
+            }
+            st.w = w16;
+            st.m = m16;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfp::rng::Rng;
+    use crate::optim::fsgd::FloatSgd;
+
+    #[test]
+    fn descends_quadratic_like_float() {
+        // Minimize 0.5‖x − c‖² with both optimizers; trajectories must stay
+        // close (Figure 3c at optimizer granularity).
+        let c: Vec<f32> = (0..16).map(|i| ((i as f32) * 0.41).sin()).collect();
+        let mut pf = Param::new(vec![0.0; 16], vec![16]);
+        let mut pi = Param::new(vec![0.0; 16], vec![16]);
+        let mut of = FloatSgd::new(0.9, 0.0);
+        let mut oi = IntSgd::new(0.9, 0.0, 7);
+        for s in 0..200 {
+            for i in 0..16 {
+                pf.grad[i] = pf.data[i] - c[i];
+                pi.grad[i] = pi.data[i] - c[i];
+            }
+            let mut a = [&mut pf];
+            of.step(&mut a, 0.05, s);
+            let mut b = [&mut pi];
+            oi.step(&mut b, 0.05, s);
+        }
+        for i in 0..16 {
+            assert!((pf.data[i] - c[i]).abs() < 1e-3, "float did not converge");
+            assert!((pi.data[i] - pf.data[i]).abs() < 5e-3, "int diverged from float at {i}");
+        }
+    }
+
+    #[test]
+    fn momentum_matches_float_trajectory() {
+        let mut pf = Param::new(vec![1.0], vec![1]);
+        let mut pi = Param::new(vec![1.0], vec![1]);
+        let mut of = FloatSgd::new(0.9, 1e-2);
+        let mut oi = IntSgd::new(0.9, 1e-2, 3);
+        for s in 0..100 {
+            pf.grad[0] = pf.data[0];
+            pi.grad[0] = pi.data[0];
+            let mut a = [&mut pf];
+            of.step(&mut a, 0.02, s);
+            let mut b = [&mut pi];
+            oi.step(&mut b, 0.02, s);
+            assert!(
+                (pf.data[0] - pi.data[0]).abs() < 0.02 * pf.data[0].abs().max(0.05),
+                "step {s}: {} vs {}",
+                pf.data[0],
+                pi.data[0]
+            );
+        }
+    }
+
+    #[test]
+    fn update_unbiased_over_seeds() {
+        // E{ŵ₁} = w₁ (Eq. 28): average the first integer update over many
+        // seeds and compare with the float update.
+        let mut rng = Rng::new(5);
+        let w0: Vec<f32> = (0..8).map(|_| rng.next_gaussian()).collect();
+        let g0: Vec<f32> = (0..8).map(|_| rng.next_gaussian() * 0.1).collect();
+        let mut pf = Param::new(w0.clone(), vec![8]);
+        pf.grad = g0.clone();
+        let mut of = FloatSgd::new(0.0, 0.0);
+        let mut a = [&mut pf];
+        of.step(&mut a, 0.1, 0);
+        let want = pf.data.clone();
+        let trials = 2000u64;
+        let mut acc = vec![0f64; 8];
+        for t in 0..trials {
+            let mut p = Param::new(w0.clone(), vec![8]);
+            p.grad = g0.clone();
+            let mut o = IntSgd::new(0.0, 0.0, t);
+            let mut b = [&mut p];
+            o.step(&mut b, 0.1, 0);
+            for (s, &v) in acc.iter_mut().zip(&p.data) {
+                *s += v as f64;
+            }
+        }
+        for (i, (&s, &w)) in acc.iter().zip(&want).enumerate() {
+            let mean = s / trials as f64;
+            assert!((mean - w as f64).abs() < 3e-4 * w.abs().max(1.0) as f64, "i={i} mean={mean} want={w}");
+        }
+    }
+
+    #[test]
+    fn zero_gradients_keep_weights() {
+        let mut p = Param::new(vec![0.5, -0.25], vec![2]);
+        let mut o = IntSgd::new(0.9, 0.0, 1);
+        for s in 0..10 {
+            p.grad = vec![0.0, 0.0];
+            let mut b = [&mut p];
+            o.step(&mut b, 0.1, s);
+        }
+        assert!((p.data[0] - 0.5).abs() < 1e-3);
+        assert!((p.data[1] + 0.25).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,32 @@
+//! Optimizers and learning-rate schedules.
+//!
+//! * [`isgd`] — the paper's integer SGD (Remark 5, Appendix A.4): int16
+//!   weight/momentum state, integer multiply-accumulate update with
+//!   stochastic rounding.
+//! * [`fsgd`] — the fp32 SGD baseline (identical hyper-parameter semantics).
+//! * [`schedule`] — step / cosine / warmup learning-rate schedules
+//!   (Appendix A.5 hyper-parameter tables).
+
+pub mod fsgd;
+pub mod isgd;
+pub mod schedule;
+
+pub use fsgd::FloatSgd;
+pub use isgd::IntSgd;
+pub use schedule::LrSchedule;
+
+use crate::nn::Param;
+
+/// Common optimizer interface.
+pub trait Optimizer {
+    /// Apply one update step to the parameters, consuming their `grad`
+    /// accumulators and writing new values into `data`.
+    fn step(&mut self, params: &mut [&mut Param], lr: f32, step_idx: u64);
+
+    /// Zero all gradient accumulators.
+    fn zero_grad(&mut self, params: &mut [&mut Param]) {
+        for p in params.iter_mut() {
+            p.zero_grad();
+        }
+    }
+}

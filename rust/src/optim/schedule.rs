@@ -1,0 +1,115 @@
+//! Learning-rate schedules — the shapes used by Appendix A.5
+//! (step decay, cosine, reduce-at-epochs, linear warmup).
+
+/// A learning-rate schedule mapping a step index to a rate.
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    /// Constant rate.
+    Constant(f32),
+    /// ×`gamma` every `every` steps (the "×0.1 every 30 epochs" rows).
+    Step {
+        /// Base rate.
+        base: f32,
+        /// Steps between decays.
+        every: u64,
+        /// Multiplicative decay.
+        gamma: f32,
+    },
+    /// Cosine annealing to zero over `t_max` steps.
+    Cosine {
+        /// Base rate.
+        base: f32,
+        /// Horizon.
+        t_max: u64,
+    },
+    /// Reduce by ×`gamma` at each listed step (the "reduce at epochs 80
+    /// and 120" rows).
+    Milestones {
+        /// Base rate.
+        base: f32,
+        /// Decay points.
+        at: Vec<u64>,
+        /// Multiplicative decay.
+        gamma: f32,
+    },
+    /// Linear warmup from `base·ratio` to `base` over `warmup` steps, then
+    /// an inner schedule (the detection-experiment configuration).
+    Warmup {
+        /// Warmup length.
+        warmup: u64,
+        /// Starting fraction of the base rate.
+        ratio: f32,
+        /// Schedule after warmup.
+        inner: Box<LrSchedule>,
+    },
+}
+
+impl LrSchedule {
+    /// Learning rate at a step.
+    pub fn at(&self, step: u64) -> f32 {
+        match self {
+            LrSchedule::Constant(b) => *b,
+            LrSchedule::Step { base, every, gamma } => {
+                base * gamma.powi((step / every.max(&1).to_owned()) as i32)
+            }
+            LrSchedule::Cosine { base, t_max } => {
+                let t = (step.min(*t_max)) as f32 / *t_max as f32;
+                base * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+            LrSchedule::Milestones { base, at, gamma } => {
+                let k = at.iter().filter(|&&m| step >= m).count() as i32;
+                base * gamma.powi(k)
+            }
+            LrSchedule::Warmup { warmup, ratio, inner } => {
+                if step < *warmup {
+                    let f = ratio + (1.0 - ratio) * (step as f32 / *warmup as f32);
+                    inner.at(0) * f
+                } else {
+                    inner.at(step - warmup)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_decays() {
+        let s = LrSchedule::Step { base: 0.1, every: 30, gamma: 0.1 };
+        assert_eq!(s.at(0), 0.1);
+        assert!((s.at(30) - 0.01).abs() < 1e-9);
+        assert!((s.at(65) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_endpoints() {
+        let s = LrSchedule::Cosine { base: 0.1, t_max: 100 };
+        assert!((s.at(0) - 0.1).abs() < 1e-7);
+        assert!(s.at(100) < 1e-7);
+        assert!((s.at(50) - 0.05).abs() < 1e-3);
+    }
+
+    #[test]
+    fn milestones() {
+        let s = LrSchedule::Milestones { base: 1.0, at: vec![80, 120], gamma: 0.1 };
+        assert_eq!(s.at(79), 1.0);
+        assert!((s.at(80) - 0.1).abs() < 1e-9);
+        assert!((s.at(120) - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warmup_ramps() {
+        let s = LrSchedule::Warmup {
+            warmup: 500,
+            ratio: 1e-3,
+            inner: Box::new(LrSchedule::Constant(0.2)),
+        };
+        assert!(s.at(0) < 0.001);
+        assert!(s.at(499) < 0.2);
+        assert_eq!(s.at(500), 0.2);
+        assert_eq!(s.at(1000), 0.2);
+    }
+}

@@ -1,0 +1,95 @@
+//! Parser for `artifacts/manifest.txt` — the plain-text contract between
+//! the Python AOT exporter and the Rust coordinator (model dimensions and
+//! the ordered parameter shapes of the train-step signature).
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Sequence length.
+    pub seq: usize,
+    /// Model width.
+    pub dim: usize,
+    /// Transformer depth.
+    pub depth: usize,
+    /// Attention heads.
+    pub heads: usize,
+    /// Batch size the step was lowered for.
+    pub batch: usize,
+    /// Ordered `(name, shape)` parameter list.
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+impl Manifest {
+    /// Parse from a file.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let mut it = line.split_whitespace();
+            let Some(key) = it.next() else { continue };
+            match key {
+                "vocab" => m.vocab = it.next().context("vocab value")?.parse()?,
+                "seq" => m.seq = it.next().context("seq value")?.parse()?,
+                "dim" => m.dim = it.next().context("dim value")?.parse()?,
+                "depth" => m.depth = it.next().context("depth value")?.parse()?,
+                "heads" => m.heads = it.next().context("heads value")?.parse()?,
+                "batch" => m.batch = it.next().context("batch value")?.parse()?,
+                "param" => {
+                    let name = it.next().context("param name")?.to_string();
+                    let dims = it.next().context("param dims")?;
+                    let shape: Vec<usize> = dims
+                        .split('x')
+                        .map(|d| d.parse().context("dim"))
+                        .collect::<Result<_>>()?;
+                    m.params.push((name, shape));
+                }
+                other => bail!("line {}: unknown manifest key {other:?}", lineno + 1),
+            }
+        }
+        if m.params.is_empty() {
+            bail!("manifest has no parameters");
+        }
+        Ok(m)
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_text() {
+        let m = Manifest::parse(
+            "vocab 256\nseq 32\ndim 128\ndepth 2\nheads 4\nbatch 8\n\
+             param embed 256x128\nparam pos 32x128\nparam lnf_g 128\n",
+        )
+        .unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.params.len(), 3);
+        assert_eq!(m.params[0].1, vec![256, 128]);
+        assert_eq!(m.params[2].1, vec![128]);
+        assert_eq!(m.param_count(), 256 * 128 + 32 * 128 + 128);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_empty() {
+        assert!(Manifest::parse("bogus 3\n").is_err());
+        assert!(Manifest::parse("vocab 4\n").is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load AOT artifacts (HLO text produced by
+//! `python/compile/aot.py`), compile them on the CPU PJRT client once, and
+//! execute them from the coordinator's hot loop — Python never runs here.
+
+pub mod artifact;
+pub mod manifest;
+
+pub use artifact::{f32_literal, i32_literal, u32_literal, Artifact, Runtime};
+pub use manifest::Manifest;

@@ -1,0 +1,97 @@
+//! Minimal checkpoint format: a self-describing little-endian binary blob
+//! of every parameter tensor (magic + count + per-tensor length + f32
+//! data). No serde available offline — the format is 30 lines on purpose.
+
+use crate::nn::Layer;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"INTRAIN1";
+
+/// Save all model parameters to a file.
+pub fn save(model: &mut dyn Layer, path: &Path) -> std::io::Result<()> {
+    let params = model.params();
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.len() as u64).to_le_bytes())?;
+    for p in params {
+        f.write_all(&(p.data.len() as u64).to_le_bytes())?;
+        for &v in &p.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load parameters saved by [`save`] into a model of identical structure.
+pub fn load(model: &mut dyn Layer, path: &Path) -> std::io::Result<()> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic"));
+    }
+    let mut u64buf = [0u8; 8];
+    f.read_exact(&mut u64buf)?;
+    let count = u64::from_le_bytes(u64buf) as usize;
+    let mut params = model.params();
+    if count != params.len() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("param count mismatch: file {count}, model {}", params.len()),
+        ));
+    }
+    for p in params.iter_mut() {
+        f.read_exact(&mut u64buf)?;
+        let n = u64::from_le_bytes(u64buf) as usize;
+        if n != p.data.len() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("tensor length mismatch: file {n}, model {}", p.data.len()),
+            ));
+        }
+        let mut f32buf = [0u8; 4];
+        for v in p.data.iter_mut() {
+            f.read_exact(&mut f32buf)?;
+            *v = f32::from_le_bytes(f32buf);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::mlp::mlp;
+    use crate::nn::{Arith, Ctx, Tensor};
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("intrain_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.bin");
+        let mut a = mlp(&[4, 8, 2], Arith::Float, 1);
+        save(&mut a, &path).unwrap();
+        let mut b = mlp(&[4, 8, 2], Arith::Float, 2); // different init
+        load(&mut b, &path).unwrap();
+        let x = Tensor::new(vec![0.3; 4], vec![1, 4]);
+        let mut c1 = Ctx::eval(0);
+        let mut c2 = Ctx::eval(0);
+        let ya = a.forward(&x, &mut c1);
+        let yb = b.forward(&x, &mut c2);
+        assert_eq!(ya.data, yb.data);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn structure_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("intrain_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.bin");
+        let mut a = mlp(&[4, 8, 2], Arith::Float, 1);
+        save(&mut a, &path).unwrap();
+        let mut b = mlp(&[4, 6, 2], Arith::Float, 1);
+        assert!(load(&mut b, &path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

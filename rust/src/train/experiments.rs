@@ -1,0 +1,186 @@
+//! Shared experiment runners — the exact procedures behind the paper's
+//! tables, reused by `examples/` and `rust/benches/` so both report the
+//! same numbers.
+
+use crate::data::boxes_det::BoxesDet;
+use crate::data::loader::Dataset;
+use crate::data::shapes_seg::ShapesSeg;
+use crate::data::synth_images::SynthImages;
+use crate::metrics::map::{average_precision, Detection};
+use crate::metrics::miou::MiouAccum;
+use crate::models::ssd::SsdLite;
+use crate::models::{fcn_seg, mobilenet_tiny, resnet_tiny, VitTiny};
+use crate::nn::{Arith, Ctx, Layer, Tensor};
+use crate::optim::LrSchedule;
+use crate::train::trainer::{TrainConfig, TrainRecord, Trainer};
+
+/// Model family selector for the Table-1 runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetKind {
+    /// ResNet-tiny (the ResNet18 stand-in).
+    Resnet,
+    /// MobileNet-ish inverted residual net.
+    Mobilenet,
+    /// ViT-tiny.
+    Vit,
+}
+
+/// Size preset controlling runtime.
+#[derive(Clone, Copy, Debug)]
+pub struct Budget {
+    /// Training samples.
+    pub samples: usize,
+    /// Image side.
+    pub hw: usize,
+    /// Epochs.
+    pub epochs: usize,
+    /// Batch size.
+    pub batch: usize,
+}
+
+impl Budget {
+    /// Bench-scale preset (~tens of seconds per run).
+    pub fn small() -> Budget {
+        Budget { samples: 600, hw: 16, epochs: 10, batch: 32 }
+    }
+
+    /// Example-scale preset (minutes).
+    pub fn medium() -> Budget {
+        Budget { samples: 2000, hw: 16, epochs: 12, batch: 64 }
+    }
+}
+
+/// Build the model for a Table-1 row.
+pub fn build_classifier(
+    kind: NetKind,
+    classes: usize,
+    hw: usize,
+    arith: Arith,
+    seed: u64,
+) -> Box<dyn Layer> {
+    match kind {
+        NetKind::Resnet => Box::new(resnet_tiny(classes, 3, hw, arith, seed)),
+        NetKind::Mobilenet => Box::new(mobilenet_tiny(classes, 3, hw, arith, seed)),
+        NetKind::Vit => Box::new(VitTiny::new(classes, 3, hw, 4, 48, 2, 4, arith, seed)),
+    }
+}
+
+/// Table-1 row: train a classifier on a synthetic image dataset.
+/// Returns the full record (trajectory + final top1/top5).
+pub fn run_classification(
+    kind: NetKind,
+    classes: usize,
+    arith: Arith,
+    budget: &Budget,
+    seed: u64,
+) -> TrainRecord {
+    let train = SynthImages::new(budget.samples, classes, 3, budget.hw, 0.25, 1, 100 + seed);
+    let test =
+        SynthImages::new(budget.samples / 4, classes, 3, budget.hw, 0.25, 1, 777 + seed);
+    let mut model = build_classifier(kind, classes, budget.hw, arith, seed);
+    let mut opt = crate::coordinator::driver::optimizer_for(&arith, seed ^ 0xBEEF);
+    let steps = (budget.epochs * budget.samples / budget.batch) as u64;
+    let cfg = TrainConfig {
+        epochs: budget.epochs,
+        batch: budget.batch,
+        schedule: LrSchedule::Cosine { base: 0.05, t_max: steps.max(1) },
+        seed,
+        eval_every: 0,
+        verbose: false,
+    };
+    Trainer { model: model.as_mut(), opt: opt.as_mut(), cfg, dense: false }.run(&train, &test)
+}
+
+/// Table-2 row: train the FCN on synthetic shapes, report mIoU (×100).
+pub fn run_segmentation(arith: Arith, coco: bool, budget: &Budget, seed: u64) -> f64 {
+    let (train, test): (ShapesSeg, ShapesSeg) = if coco {
+        (ShapesSeg::coco_like(budget.samples, 1, 100 + seed), ShapesSeg::coco_like(60, 1, 900))
+    } else {
+        (ShapesSeg::voc_like(budget.samples, 1, 100 + seed), ShapesSeg::voc_like(60, 1, 900))
+    };
+    // The synthetic scenes are 32×32; width kept small for bench budgets.
+    // BN is live (not frozen): the paper freezes BN when fine-tuning from
+    // an MS-COCO checkpoint whose statistics are already calibrated; we
+    // train from scratch, where frozen random-init stats would cripple
+    // both arms (and the integer arm catastrophically).
+    let mut model = fcn_seg(train.classes, 3, train.hw, 6, false, arith, seed);
+    let mut opt = crate::coordinator::driver::optimizer_for(&arith, seed ^ 0xFACE);
+    let cfg = TrainConfig {
+        epochs: budget.epochs,
+        batch: budget.batch.min(16),
+        schedule: LrSchedule::Constant(0.05),
+        seed,
+        eval_every: 0,
+        verbose: false,
+    };
+    Trainer { model: &mut model, opt: opt.as_mut(), cfg, dense: true }.run(&train, &test);
+    // mIoU on the eval split.
+    let mut acc = MiouAccum::new(train.classes);
+    let mut img = vec![0f32; test.input_len()];
+    for i in 0..test.len() {
+        let mask = test.sample(i, &mut img);
+        let x = Tensor::new(img.clone(), vec![1, 3, test.hw, test.hw]);
+        let mut ctx = Ctx::eval(0);
+        let logits = model.forward(&x, &mut ctx);
+        let c = logits.shape[1];
+        let sp = test.hw * test.hw;
+        let pred: Vec<usize> = (0..sp)
+            .map(|s| {
+                (0..c)
+                    .max_by(|&a, &b| {
+                        logits.data[a * sp + s].partial_cmp(&logits.data[b * sp + s]).unwrap()
+                    })
+                    .unwrap()
+            })
+            .collect();
+        acc.add(&pred, &mask);
+    }
+    acc.miou()
+}
+
+/// Table-3 row: train SSD-lite on synthetic scenes, report mAP@0.5 (×100).
+pub fn run_detection(arith: Arith, variant: &str, budget: &Budget, seed: u64) -> f64 {
+    let ds = match variant {
+        "coco" => BoxesDet::coco_like(budget.samples, 100 + seed),
+        "voc" => BoxesDet::voc_like(budget.samples, 100 + seed),
+        _ => BoxesDet::cityscapes_like(budget.samples, 100 + seed),
+    };
+    let eval = match variant {
+        "coco" => BoxesDet::coco_like(60, 901),
+        "voc" => BoxesDet::voc_like(60, 901),
+        _ => BoxesDet::cityscapes_like(60, 901),
+    };
+    let mut det = SsdLite::new(3, ds.hw, 6, false, arith, seed);
+    let mut opt = crate::coordinator::driver::optimizer_for(&arith, seed ^ 0xD0D0);
+    let bs = budget.batch.min(16);
+    let steps = budget.epochs * ds.len() / bs;
+    for step in 0..steps {
+        // Assemble a batch of scenes.
+        let scenes: Vec<_> = (0..bs).map(|r| ds.scene((step * bs + r) % ds.len())).collect();
+        let refs: Vec<&_> = scenes.iter().collect();
+        let mut x = Vec::with_capacity(bs * 3 * ds.hw * ds.hw);
+        for sc in &scenes {
+            x.extend_from_slice(&sc.img);
+        }
+        let xt = Tensor::new(x, vec![bs, 3, ds.hw, ds.hw]);
+        let mut ctx = Ctx::train(seed, step as u64);
+        let head = det.forward(&xt, &mut ctx);
+        let (_loss, grad) = det.loss(&head, &refs);
+        det.backward(&grad, &mut ctx);
+        let mut params = det.params();
+        opt.step(&mut params, 0.02, step as u64);
+        opt.zero_grad(&mut params);
+    }
+    // mAP@0.5 on held-out scenes.
+    let mut dets: Vec<Detection> = Vec::new();
+    let mut gts = Vec::new();
+    for i in 0..eval.len() {
+        let sc = eval.scene(i);
+        let xt = Tensor::new(sc.img.clone(), vec![1, 3, eval.hw, eval.hw]);
+        let mut ctx = Ctx::eval(0);
+        let head = det.forward(&xt, &mut ctx);
+        dets.extend(det.decode(&head, i, 0.3));
+        gts.push(sc.boxes);
+    }
+    100.0 * average_precision(&dets, &gts, 0.5)
+}

@@ -1,0 +1,133 @@
+//! Loss-landscape prober — Figure 3(a)/(b): evaluate the loss on a 2-D
+//! grid of Gaussian weight perturbations around trained weights `w*`,
+//! once with float forward passes and once with int8, to visualize the
+//! local convexity the paper's Remark 4 appeals to.
+
+use crate::data::loader::{BatchIter, Dataset};
+use crate::dfp::rng::Rng;
+use crate::nn::softmax_ce::softmax_ce;
+use crate::nn::{Ctx, Layer, Tensor};
+
+/// One landscape surface: `z[i·steps + j]` = loss at grid point (i, j).
+#[derive(Clone, Debug)]
+pub struct Landscape {
+    /// Grid side.
+    pub steps: usize,
+    /// Perturbation radius multiplier at the grid edge.
+    pub radius: f32,
+    /// Loss values, row-major.
+    pub z: Vec<f32>,
+}
+
+/// Probe the landscape of `model` around its current weights on one batch
+/// of `ds`. Two random Gaussian directions (filter-normalized per
+/// parameter tensor) span the plane.
+pub fn probe(
+    model: &mut dyn Layer,
+    ds: &dyn Dataset,
+    batch: usize,
+    steps: usize,
+    radius: f32,
+    seed: u64,
+) -> Landscape {
+    // Snapshot weights and build two scaled random directions.
+    let mut rng = Rng::new(seed);
+    let shapes: Vec<usize> = model.params().iter().map(|p| p.data.len()).collect();
+    let w0: Vec<Vec<f32>> = model.params().iter().map(|p| p.data.clone()).collect();
+    let dir = |rng: &mut Rng| -> Vec<Vec<f32>> {
+        shapes
+            .iter()
+            .zip(&w0)
+            .map(|(&n, w)| {
+                let mut d: Vec<f32> = (0..n).map(|_| rng.next_gaussian()).collect();
+                // Filter normalization: scale the direction to the weight
+                // tensor's norm so the plane is comparable across layers.
+                let wn = w.iter().map(|v| v * v).sum::<f32>().sqrt();
+                let dn = d.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-9);
+                let s = wn / dn;
+                d.iter_mut().for_each(|v| *v *= s);
+                d
+            })
+            .collect()
+    };
+    let d1 = dir(&mut rng);
+    let d2 = dir(&mut rng);
+    // One fixed evaluation batch.
+    let b = BatchIter::new(ds, batch, 0, 0, false).next().expect("dataset empty");
+    let mut shape = vec![b.bs];
+    shape.extend_from_slice(&ds.input_shape());
+    let x = Tensor::new(b.x, shape);
+
+    let mut z = vec![0f32; steps * steps];
+    for i in 0..steps {
+        for j in 0..steps {
+            let a = radius * (2.0 * i as f32 / (steps - 1) as f32 - 1.0);
+            let bcoef = radius * (2.0 * j as f32 / (steps - 1) as f32 - 1.0);
+            {
+                let mut params = model.params();
+                for (((p, w), da), db) in params.iter_mut().zip(&w0).zip(&d1).zip(&d2) {
+                    for idx in 0..p.data.len() {
+                        p.data[idx] = w[idx] + a * da[idx] + bcoef * db[idx];
+                    }
+                }
+            }
+            // Batch-stat normalization (momentum-0 train context): the
+            // probe is run on models whose running stats may not match the
+            // probed weights (e.g. float-trained weights loaded into an
+            // int8 model), and Figure 3 measures the loss *surface*, not
+            // stats quality.
+            let mut ctx = Ctx::train(seed, u64::MAX - 1);
+            ctx.bn_momentum = Some(0.0);
+            let logits = model.forward(&x, &mut ctx);
+            let (loss, _) = softmax_ce(&logits, &b.y);
+            z[i * steps + j] = loss;
+        }
+    }
+    // Restore original weights.
+    let mut params = model.params();
+    for (p, w) in params.iter_mut().zip(&w0) {
+        p.data.copy_from_slice(w);
+    }
+    Landscape { steps, radius, z }
+}
+
+impl Landscape {
+    /// Loss at the center of the grid.
+    pub fn center(&self) -> f32 {
+        self.z[(self.steps / 2) * self.steps + self.steps / 2]
+    }
+
+    /// Fraction of grid points with loss above the center — a convexity
+    /// indicator (≈1.0 for a locally convex bowl).
+    pub fn bowl_fraction(&self) -> f32 {
+        let c = self.center();
+        let above = self.z.iter().filter(|&&v| v >= c - 1e-6).count();
+        above as f32 / self.z.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::Blobs;
+    use crate::models::mlp::mlp;
+    use crate::nn::Arith;
+    use crate::optim::{FloatSgd, Optimizer};
+    use crate::train::trainer::{TrainConfig, Trainer};
+
+    #[test]
+    fn trained_model_sits_in_a_bowl() {
+        let train = Blobs::new(200, 3, 8, 0.3, 1);
+        let mut model = mlp(&[8, 16, 3], Arith::Float, 3);
+        let mut opt = FloatSgd::new(0.9, 0.0);
+        let cfg = TrainConfig { epochs: 10, batch: 32, ..Default::default() };
+        Trainer { model: &mut model, opt: &mut opt, cfg, dense: false }.run(&train, &train);
+        let ls = probe(&mut model, &train, 64, 7, 0.5, 2);
+        assert_eq!(ls.z.len(), 49);
+        // The center (trained weights) is a local minimum of the plane.
+        assert!(ls.bowl_fraction() > 0.9, "bowl fraction {}", ls.bowl_fraction());
+        // Weights restored after probing: loss at center reproducible.
+        let ls2 = probe(&mut model, &train, 64, 3, 0.5, 2);
+        assert!((ls.center() - ls2.center()).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,10 @@
+//! Training loop, metrics logging, checkpointing, and the theory harnesses
+//! (loss landscape, strongly-convex optimality gap).
+
+pub mod checkpoint;
+pub mod convex;
+pub mod experiments;
+pub mod landscape;
+pub mod trainer;
+
+pub use trainer::{TrainConfig, TrainRecord, Trainer};

@@ -1,0 +1,233 @@
+//! The training driver: epochs over a [`Dataset`], loss/accuracy logging,
+//! identical control flow for every arithmetic mode so int-vs-float
+//! comparisons differ only in the numerics (Figure 3c protocol).
+
+use crate::data::loader::{BatchIter, Dataset};
+use crate::metrics::classify::{top1, topk};
+use crate::nn::softmax_ce::{softmax_ce, softmax_ce_pixels};
+use crate::nn::{Ctx, Layer, Tensor};
+use crate::optim::{LrSchedule, Optimizer};
+
+/// Training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Epochs.
+    pub epochs: usize,
+    /// Batch size.
+    pub batch: usize,
+    /// LR schedule (per *step*).
+    pub schedule: LrSchedule,
+    /// Base RNG seed (data order + stochastic rounding).
+    pub seed: u64,
+    /// Evaluate every `eval_every` epochs (0 = only at the end).
+    pub eval_every: usize,
+    /// Print progress lines.
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 5,
+            batch: 32,
+            schedule: LrSchedule::Constant(0.05),
+            seed: 0,
+            eval_every: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// What a run produced.
+#[derive(Clone, Debug, Default)]
+pub struct TrainRecord {
+    /// Mean loss per epoch.
+    pub epoch_loss: Vec<f32>,
+    /// Loss at every step (the Figure 3c trajectory).
+    pub step_loss: Vec<f32>,
+    /// `(epoch, top1)` eval points.
+    pub eval_top1: Vec<(usize, f32)>,
+    /// Final top-1.
+    pub final_top1: f32,
+    /// Final top-5.
+    pub final_top5: f32,
+}
+
+/// Generic classification/segmentation trainer.
+pub struct Trainer<'a> {
+    /// The model.
+    pub model: &'a mut dyn Layer,
+    /// The optimizer.
+    pub opt: &'a mut dyn Optimizer,
+    /// Run configuration.
+    pub cfg: TrainConfig,
+    /// Dense (per-pixel) task if true; image-level classification if false.
+    pub dense: bool,
+}
+
+impl<'a> Trainer<'a> {
+    /// Train on `train_ds`, evaluating on `eval_ds`.
+    pub fn run(&mut self, train_ds: &dyn Dataset, eval_ds: &dyn Dataset) -> TrainRecord {
+        let mut rec = TrainRecord::default();
+        let mut step = 0u64;
+        let in_shape = train_ds.input_shape();
+        for epoch in 0..self.cfg.epochs {
+            let mut ep_loss = 0f64;
+            let mut nb = 0usize;
+            for b in BatchIter::new(train_ds, self.cfg.batch, self.cfg.seed, epoch as u64, true) {
+                let mut shape = vec![b.bs];
+                shape.extend_from_slice(&in_shape);
+                let x = Tensor::new(b.x, shape);
+                let mut ctx = Ctx::train(self.cfg.seed, step);
+                let logits = self.model.forward(&x, &mut ctx);
+                let (loss, grad) = if self.dense {
+                    softmax_ce_pixels(&logits, &b.y)
+                } else {
+                    softmax_ce(&logits, &b.y)
+                };
+                self.model.backward(&grad, &mut ctx);
+                let lr = self.cfg.schedule.at(step);
+                let mut params = self.model.params();
+                self.opt.step(&mut params, lr, step);
+                self.opt.zero_grad(&mut params);
+                rec.step_loss.push(loss);
+                ep_loss += loss as f64;
+                nb += 1;
+                step += 1;
+            }
+            let mean = (ep_loss / nb.max(1) as f64) as f32;
+            rec.epoch_loss.push(mean);
+            let do_eval = self.cfg.eval_every > 0 && (epoch + 1) % self.cfg.eval_every == 0;
+            if do_eval {
+                self.recalibrate_bn(train_ds);
+                let acc = self.evaluate(eval_ds).0;
+                rec.eval_top1.push((epoch, acc));
+                if self.cfg.verbose {
+                    println!("epoch {epoch:>3}  loss {mean:.4}  top1 {acc:.3}");
+                }
+            } else if self.cfg.verbose {
+                println!("epoch {epoch:>3}  loss {mean:.4}");
+            }
+        }
+        self.recalibrate_bn(train_ds);
+        let (t1, t5) = self.evaluate(eval_ds);
+        rec.final_top1 = t1;
+        rec.final_top5 = t5;
+        rec
+    }
+
+    /// Batch-norm re-estimation: after training, the running statistics
+    /// lag the final weights (the integer pipeline's activation scales
+    /// drift faster than fp32's, so the lag is larger — cf. NITI's BN
+    /// re-estimation). A few forward passes in train mode with a high
+    /// stats momentum re-anchor them; no gradients, no weight updates.
+    pub fn recalibrate_bn(&mut self, ds: &dyn Dataset) {
+        let in_shape = ds.input_shape();
+        for (i, b) in BatchIter::new(ds, self.cfg.batch, 1, 9999, true).take(8).enumerate() {
+            let mut shape = vec![b.bs];
+            shape.extend_from_slice(&in_shape);
+            let x = Tensor::new(b.x, shape);
+            let mut ctx = Ctx::train(self.cfg.seed ^ 0xCA11B, i as u64);
+            // Cumulative-average momentum 1/(i+1): after k batches the
+            // running stats equal the plain average of the k batch stats.
+            ctx.bn_momentum = Some(1.0 / (i + 1) as f32);
+            self.model.forward(&x, &mut ctx);
+        }
+    }
+
+    /// Top-1/top-5 on a dataset (classification) or pixel accuracy (dense).
+    ///
+    /// Evaluation uses *batch* normalization statistics for both arithmetic
+    /// arms (momentum-0 train-mode context): under integer training at this
+    /// micro-scale the deep layers' activation scales vary enough batch to
+    /// batch that any fixed running statistics mis-normalize — see
+    /// EXPERIMENTS.md §Deviations. The running stats are still maintained
+    /// (and re-estimated post-training) for checkpoint consumers.
+    pub fn evaluate(&mut self, ds: &dyn Dataset) -> (f32, f32) {
+        let in_shape = ds.input_shape();
+        let mut t1 = 0f64;
+        let mut t5 = 0f64;
+        let mut n = 0usize;
+        for b in BatchIter::new(ds, self.cfg.batch, 0, 0, false) {
+            let mut shape = vec![b.bs];
+            shape.extend_from_slice(&in_shape);
+            let x = Tensor::new(b.x, shape);
+            let mut ctx = Ctx::train(self.cfg.seed, u64::MAX);
+            ctx.bn_momentum = Some(0.0); // batch stats, no running update
+            let logits = self.model.forward(&x, &mut ctx);
+            if self.dense {
+                // Per-pixel argmax accuracy.
+                let (bn, c) = (logits.shape[0], logits.shape[1]);
+                let sp: usize = logits.shape[2..].iter().product();
+                let mut hits = 0usize;
+                let mut tot = 0usize;
+                for bi in 0..bn {
+                    for s in 0..sp {
+                        let t = b.y[bi * sp + s];
+                        if t == 255 {
+                            continue;
+                        }
+                        let mut best = 0usize;
+                        let mut bv = f32::NEG_INFINITY;
+                        for cl in 0..c {
+                            let v = logits.data[(bi * c + cl) * sp + s];
+                            if v > bv {
+                                bv = v;
+                                best = cl;
+                            }
+                        }
+                        tot += 1;
+                        hits += (best == t) as usize;
+                    }
+                }
+                t1 += hits as f64;
+                t5 += hits as f64;
+                n += tot;
+            } else {
+                let classes = *logits.shape.last().unwrap();
+                t1 += (top1(&logits.data, classes, &b.y) * b.bs as f32) as f64;
+                t5 += (topk(&logits.data, classes, &b.y, 5.min(classes)) * b.bs as f32) as f64;
+                n += b.bs;
+            }
+        }
+        ((t1 / n.max(1) as f64) as f32, (t5 / n.max(1) as f64) as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::Blobs;
+    use crate::models::mlp::mlp;
+    use crate::nn::Arith;
+    use crate::optim::{FloatSgd, IntSgd};
+
+    #[test]
+    fn float_mlp_learns_blobs() {
+        let train = Blobs::new_split(300, 3, 8, 0.3, 1, 10);
+        let test = Blobs::new_split(90, 3, 8, 0.3, 1, 20);
+        let mut model = mlp(&[8, 16, 3], Arith::Float, 3);
+        let mut opt = FloatSgd::new(0.9, 0.0);
+        let cfg = TrainConfig { epochs: 8, batch: 32, ..Default::default() };
+        let mut tr = Trainer { model: &mut model, opt: &mut opt, cfg, dense: false };
+        let rec = tr.run(&train, &test);
+        assert!(rec.final_top1 > 0.95, "top1={}", rec.final_top1);
+        assert!(rec.epoch_loss.last().unwrap() < &0.2);
+    }
+
+    #[test]
+    fn int8_mlp_matches_float_on_blobs() {
+        let train = Blobs::new_split(300, 3, 8, 0.3, 1, 10);
+        let test = Blobs::new_split(90, 3, 8, 0.3, 1, 20);
+        let mut mf = mlp(&[8, 16, 3], Arith::Float, 3);
+        let mut mi = mlp(&[8, 16, 3], Arith::int8(), 3); // same init seed
+        let cfg = TrainConfig { epochs: 8, batch: 32, ..Default::default() };
+        let mut of = FloatSgd::new(0.9, 0.0);
+        let rf = Trainer { model: &mut mf, opt: &mut of, cfg: cfg.clone(), dense: false }
+            .run(&train, &test);
+        let mut oi = IntSgd::new(0.9, 0.0, 11);
+        let ri = Trainer { model: &mut mi, opt: &mut oi, cfg, dense: false }.run(&train, &test);
+        assert!(ri.final_top1 > 0.9, "int top1={}", ri.final_top1);
+        assert!((rf.final_top1 - ri.final_top1).abs() < 0.08);
+    }
+}

@@ -1,0 +1,97 @@
+//! Mini benchmark harness (criterion is not available offline): warmup,
+//! timed iterations, mean / p50 / p95 reporting. Used by every
+//! `[[bench]]` target (`harness = false`).
+
+use std::time::Instant;
+
+/// Timing summary of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Label.
+    pub name: String,
+    /// Iterations measured.
+    pub iters: usize,
+    /// Mean seconds/iter.
+    pub mean_s: f64,
+    /// Median seconds/iter.
+    pub p50_s: f64,
+    /// 95th-percentile seconds/iter.
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    /// One-line report, matching the style `cargo bench` users expect.
+    pub fn report(&self) -> String {
+        fn fmt(s: f64) -> String {
+            if s >= 1.0 {
+                format!("{s:.3} s")
+            } else if s >= 1e-3 {
+                format!("{:.3} ms", s * 1e3)
+            } else {
+                format!("{:.3} µs", s * 1e6)
+            }
+        }
+        format!(
+            "{:<44} {:>12}/iter  (p50 {:>12}, p95 {:>12}, n={})",
+            self.name,
+            fmt(self.mean_s),
+            fmt(self.p50_s),
+            fmt(self.p95_s),
+            self.iters
+        )
+    }
+}
+
+/// Run `f` with warmup then timed iterations. Iteration count adapts so the
+/// whole measurement stays near `budget_s` seconds.
+pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / one).ceil() as usize).clamp(3, 10_000);
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let res = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        p50_s: times[times.len() / 2],
+        p95_s: times[(times.len() * 95 / 100).min(times.len() - 1)],
+    };
+    println!("{}", res.report());
+    res
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print a table row of `(label, value)` pairs — used by the experiment
+/// benches to emit the same rows the paper's tables report.
+pub fn row(cols: &[(&str, String)]) {
+    let line: Vec<String> = cols.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    println!("  {}", line.join("  "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let r = bench("noop-spin", 0.02, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.mean_s > 0.0);
+        assert!(r.p50_s <= r.p95_s * 1.0001);
+        assert!(r.iters >= 3);
+    }
+}

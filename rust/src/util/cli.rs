@@ -1,0 +1,87 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline):
+//! `--key value` / `--key=value` / bare flags, with typed getters.
+
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand plus `--key value` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First positional argument (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    opts: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (testable).
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap_or_default();
+                    args.opts.insert(stripped.to_string(), v);
+                } else {
+                    args.opts.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Boolean flag (present or `--flag true`).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        // NOTE: a bare flag consumes the following token as its value
+        // unless that token starts with `--`, so positionals go first.
+        let a = Args::parse_from(toks("train extra --epochs 10 --lr=0.1 --verbose"));
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get_or("epochs", 0usize), 10);
+        assert_eq!(a.get_or("lr", 0f32), 0.1);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse_from(toks("bench"));
+        assert_eq!(a.get_or("epochs", 7usize), 7);
+        assert!(!a.flag("verbose"));
+    }
+}

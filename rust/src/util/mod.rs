@@ -1,0 +1,8 @@
+//! Small self-contained utilities (no external deps are available
+//! offline): micro-benchmark harness, CLI argument parsing, timers.
+
+pub mod bench;
+pub mod cli;
+
+pub use bench::{bench, BenchResult};
+pub use cli::Args;

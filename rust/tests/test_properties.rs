@@ -1,0 +1,173 @@
+//! Property-based tests over the dfp substrate (hand-rolled proptest-style
+//! harness: seeded random cases, shrink-free but reproducible — proptest
+//! itself is unavailable offline). Each property runs across many random
+//! tensors/shapes/bit-widths.
+
+use intrain::dfp::rng::Rng;
+use intrain::dfp::{igemm, inverse_i32, quantize, quantize16, shared_exponent, RoundMode};
+
+fn rand_tensor(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.next_gaussian() * scale).collect()
+}
+
+/// Roundtrip error never exceeds one ulp of the shared grid.
+#[test]
+fn prop_roundtrip_error_bounded() {
+    let mut rng = Rng::new(1);
+    for case in 0..200 {
+        let n = 1 + rng.below(300);
+        let scale = 10f32.powi(rng.below(30) as i32 - 15);
+        let xs = rand_tensor(&mut rng, n, scale);
+        let pbits = 3 + rng.below(5) as u32;
+        let mode = if case % 2 == 0 { RoundMode::Nearest } else { RoundMode::Stochastic(case) };
+        let q = quantize(&xs, pbits, mode);
+        let ulp = q.scale();
+        for (i, (&x, y)) in xs.iter().zip(q.to_f32()).enumerate() {
+            assert!(
+                (x - y).abs() <= ulp * 1.000001,
+                "case {case} i={i}: x={x} y={y} ulp={ulp} pbits={pbits}"
+            );
+        }
+    }
+}
+
+/// The shared exponent equals the max element's IEEE exponent.
+#[test]
+fn prop_shared_exponent_is_max() {
+    let mut rng = Rng::new(2);
+    for _ in 0..200 {
+        let n = 1 + rng.below(100);
+        let xs = rand_tensor(&mut rng, n, 3.0);
+        let e = shared_exponent(&xs);
+        let max_abs = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        if max_abs > 0.0 {
+            let want = ((max_abs.to_bits() >> 23) & 0xFF) as i32;
+            assert_eq!(e, want.max(1));
+        }
+    }
+}
+
+/// Bit-width monotonicity: more payload bits never coarsens the grid and
+/// never increases nearest-rounding error.
+#[test]
+fn prop_bitwidth_monotone() {
+    let mut rng = Rng::new(3);
+    for _ in 0..100 {
+        let xs = rand_tensor(&mut rng, 64, 1.0);
+        let mut last_err = f32::INFINITY;
+        for pbits in 3..=7 {
+            let q = quantize(&xs, pbits, RoundMode::Nearest);
+            let err = xs
+                .iter()
+                .zip(q.to_f32())
+                .map(|(&x, y)| (x - y).abs())
+                .fold(0f32, f32::max);
+            assert!(err <= last_err * 1.000001, "pbits={pbits} err={err} last={last_err}");
+            last_err = err;
+        }
+    }
+}
+
+/// Integer GEMM equals the f32 GEMM over the *dequantized* operands
+/// exactly (the payload-domain computation is exact on the grid).
+#[test]
+fn prop_igemm_exact_on_grid() {
+    let mut rng = Rng::new(4);
+    for case in 0..50 {
+        let (m, k, n) = (1 + rng.below(8), 1 + rng.below(16), 1 + rng.below(8));
+        let a = rand_tensor(&mut rng, m * k, 1.0);
+        let b = rand_tensor(&mut rng, k * n, 0.3);
+        let qa = quantize(&a, 7, RoundMode::Nearest);
+        let qb = quantize(&b, 7, RoundMode::Nearest);
+        let out = igemm(&qa, &qb, m, k, n);
+        let got = inverse_i32(&out.acc, out.scale_exp);
+        let da = qa.to_f32();
+        let db = qb.to_f32();
+        for i in 0..m {
+            for j in 0..n {
+                let mut want = 0f64;
+                for kk in 0..k {
+                    want += da[i * k + kk] as f64 * db[kk * n + j] as f64;
+                }
+                let g = got[i * n + j] as f64;
+                assert!(
+                    (g - want).abs() <= 1e-6 * want.abs().max(1e-20),
+                    "case {case} ({i},{j}): {g} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+/// SR unbiasedness at tensor level: the empirical mean over seeds
+/// converges to the input (weak-law check at 3σ).
+#[test]
+fn prop_sr_unbiased_random_tensors() {
+    let mut rng = Rng::new(5);
+    for case in 0..10 {
+        let xs = rand_tensor(&mut rng, 16, 0.5);
+        let trials = 5000u64;
+        let mut acc = vec![0f64; 16];
+        for t in 0..trials {
+            let q = quantize(&xs, 7, RoundMode::Stochastic(case * 10_000 + t));
+            for (a, v) in acc.iter_mut().zip(q.to_f32()) {
+                *a += v as f64;
+            }
+        }
+        let ulp = quantize(&xs, 7, RoundMode::Nearest).scale() as f64;
+        for (&x, &a) in xs.iter().zip(&acc) {
+            let mean = a / trials as f64;
+            // SR noise ≤ ulp/2 per draw (but saturation at the top element
+            // can bias by ≤ 1 ulp one-sided).
+            let tol = 3.0 * ulp / (trials as f64).sqrt() + ulp * 0.01;
+            assert!((mean - x as f64).abs() < tol.max(ulp * 0.02), "case {case}: x={x} mean={mean}");
+        }
+    }
+}
+
+/// int16 mapping is strictly finer than int8 for the same data.
+#[test]
+fn prop_int16_finer_than_int8() {
+    let mut rng = Rng::new(6);
+    for _ in 0..50 {
+        let xs = rand_tensor(&mut rng, 128, 2.0);
+        let q8 = quantize(&xs, 7, RoundMode::Nearest);
+        let q16 = quantize16(&xs, 15, RoundMode::Nearest);
+        let e8: f32 = xs.iter().zip(q8.to_f32()).map(|(&x, y)| (x - y).abs()).sum();
+        let e16: f32 = xs.iter().zip(q16.to_f32()).map(|(&x, y)| (x - y).abs()).sum();
+        assert!(e16 <= e8 + 1e-9, "int16 total error {e16} vs int8 {e8}");
+    }
+}
+
+/// Exponent-addition law of the GEMM output scale.
+#[test]
+fn prop_gemm_scale_exponents_add() {
+    let mut rng = Rng::new(7);
+    for _ in 0..50 {
+        let sa = 10f32.powi(rng.below(20) as i32 - 10);
+        let sb = 10f32.powi(rng.below(20) as i32 - 10);
+        let a = rand_tensor(&mut rng, 4, sa);
+        let b = rand_tensor(&mut rng, 4, sb);
+        let qa = quantize(&a, 7, RoundMode::Nearest);
+        let qb = quantize(&b, 7, RoundMode::Nearest);
+        let out = igemm(&qa, &qb, 2, 2, 2);
+        assert_eq!(out.scale_exp, qa.scale_exp() + qb.scale_exp());
+    }
+}
+
+/// Quantization never produces payloads outside ±(2^pbits − 1).
+#[test]
+fn prop_payload_range() {
+    let mut rng = Rng::new(8);
+    for case in 0..100 {
+        let sc = 10f32.powi(rng.below(40) as i32 - 20);
+        let xs = rand_tensor(&mut rng, 100, sc);
+        for pbits in 3..=7u32 {
+            let q = quantize(&xs, pbits, RoundMode::Stochastic(case));
+            let maxp = (1i32 << pbits) - 1;
+            for &p in &q.payload {
+                assert!((p as i32).abs() <= maxp, "payload {p} exceeds {maxp}");
+            }
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Integration tests over the PJRT runtime: load the AOT artifacts
+//! produced by `make artifacts` and check cross-language numerics.
+//! Skipped (with a message) when the artifacts have not been built.
+
+use intrain::dfp::rng::hash2;
+use intrain::dfp::{inverse_i32, quantize_with_emax, shared_exponent, RoundMode};
+use intrain::runtime::{f32_literal, u32_literal, Manifest, Runtime};
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("quant_demo.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping runtime test: run `make artifacts` first");
+        None
+    }
+}
+
+/// The AOT quant→igemm→inverse demo must agree with the Rust dfp
+/// substrate when fed the SAME stochastic-rounding bits — the
+/// cross-language bit-compatibility check.
+#[test]
+fn quant_demo_matches_rust_dfp() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let art = rt.load(&dir.join("quant_demo.hlo.txt")).unwrap();
+    let m = 16usize;
+    let mut rng = intrain::dfp::rng::Rng::new(3);
+    let a: Vec<f32> = (0..m * m).map(|_| rng.next_gaussian()).collect();
+    let b: Vec<f32> = (0..m * m).map(|_| rng.next_gaussian() * 0.2).collect();
+    // SR bits from the shared counter-based stream.
+    let ra: Vec<u32> = (0..m * m).map(|i| hash2(11, i as u64) as u32).collect();
+    let rb: Vec<u32> = (0..m * m).map(|i| hash2(22, i as u64) as u32).collect();
+    let out = art
+        .run(&[
+            &f32_literal(&a, &[m, m]).unwrap(),
+            &f32_literal(&b, &[m, m]).unwrap(),
+            &u32_literal(&ra, &[m * m]).unwrap(),
+            &u32_literal(&rb, &[m * m]).unwrap(),
+        ])
+        .unwrap();
+    let got = out[0].to_vec::<f32>().unwrap();
+    // Rust reference with identical draws.
+    let ea = shared_exponent(&a);
+    let eb = shared_exponent(&b);
+    let qa = quantize_with_rand(&a, ea, &ra);
+    let qb = quantize_with_rand(&b, eb, &rb);
+    let o = intrain::dfp::igemm(&qa, &qb, m, m, m);
+    let want = inverse_i32(&o.acc, o.scale_exp);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() <= 1e-6 * w.abs().max(1e-6), "i={i}: jax {g} vs rust {w}");
+    }
+}
+
+/// Helper: quantize with explicit per-element random words (matching what
+/// the Python kernel receives), rather than a seed.
+fn quantize_with_rand(xs: &[f32], e_max: i32, rand: &[u32]) -> intrain::dfp::DfpTensor {
+    let mut payload = Vec::with_capacity(xs.len());
+    for (&x, &r) in xs.iter().zip(rand) {
+        payload.push(intrain::dfp::map::map_one(x, e_max, 7, RoundMode::Stochastic(0), r));
+    }
+    intrain::dfp::DfpTensor { payload, e_max, pbits: 7 }
+}
+
+/// Manifest parses and the init artifact produces tensors of the declared
+/// shapes.
+#[test]
+fn init_params_match_manifest() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir.join("manifest.txt")).unwrap();
+    let init = rt.load(&dir.join("init_params.hlo.txt")).unwrap();
+    let seed = xla::Literal::scalar(0i32);
+    let params = init.run(&[&seed]).unwrap();
+    assert_eq!(params.len(), manifest.params.len());
+    for (lit, (name, shape)) in params.iter().zip(&manifest.params) {
+        let n: usize = shape.iter().product();
+        assert_eq!(lit.element_count(), n, "param {name}");
+    }
+}
+
+/// One train step through the runtime decreases loss on a repeated batch.
+#[test]
+fn train_step_executes_and_learns() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = intrain::coordinator::e2e::E2eConfig {
+        steps: 12,
+        lr: 0.1,
+        integer: true,
+        log_every: 0,
+        seed: 1,
+    };
+    let rec = intrain::coordinator::e2e::run_e2e(&dir, &cfg).unwrap();
+    assert_eq!(rec.losses.len(), 12);
+    assert!(rec.losses.iter().all(|l| l.is_finite()));
+    // Loss trend over 12 steps on the structured corpus: mean of last 4
+    // below mean of first 4.
+    let head: f32 = rec.losses[..4].iter().sum::<f32>() / 4.0;
+    let tail: f32 = rec.losses[8..].iter().sum::<f32>() / 4.0;
+    assert!(tail < head, "loss did not trend down: {:?}", rec.losses);
+}
+
+/// The quantize_with_emax public path used above is consistent with the
+/// seed-based API when fed the hash2 stream.
+#[test]
+fn rand_explicit_matches_seeded() {
+    let xs: Vec<f32> = (0..64).map(|i| ((i as f32) * 0.37).sin()).collect();
+    let seeded = intrain::dfp::quantize(&xs, 7, RoundMode::Stochastic(99));
+    let e = shared_exponent(&xs);
+    let rand: Vec<u32> = (0..64).map(|i| hash2(99, i as u64) as u32).collect();
+    let explicit = quantize_with_rand(&xs, e, &rand);
+    assert_eq!(seeded.payload, explicit.payload);
+    let _ = quantize_with_emax(&xs, e, 7, RoundMode::Nearest); // API surface
+}

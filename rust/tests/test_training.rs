@@ -1,0 +1,87 @@
+//! Integration tests over the full training stack: end-to-end convergence
+//! smoke runs, checkpoint round-trips, and the experiment runners that the
+//! benches build on.
+
+use intrain::data::blobs::Blobs;
+use intrain::models::mlp;
+use intrain::nn::{Arith, IntCfg};
+use intrain::optim::{FloatSgd, IntSgd};
+use intrain::train::experiments::{run_detection, run_segmentation, Budget};
+use intrain::train::trainer::{TrainConfig, Trainer};
+
+fn tiny_budget() -> Budget {
+    Budget { samples: 120, hw: 16, epochs: 2, batch: 16 }
+}
+
+/// Fully-integer training (int8 layers + int16 SGD) reaches high accuracy
+/// on a separable task — the headline "integer is enough" smoke test.
+#[test]
+fn int8_training_converges() {
+    let train = Blobs::new_split(400, 4, 16, 0.3, 1, 10);
+    let test = Blobs::new_split(120, 4, 16, 0.3, 1, 20);
+    let mut model = mlp(&[16, 32, 4], Arith::int8(), 3);
+    let mut opt = IntSgd::new(0.9, 1e-4, 7);
+    let cfg = TrainConfig { epochs: 12, batch: 32, ..Default::default() };
+    let rec = Trainer { model: &mut model, opt: &mut opt, cfg, dense: false }.run(&train, &test);
+    assert!(rec.final_top1 > 0.9, "int8 top1 = {}", rec.final_top1);
+}
+
+/// The low-bit ladder is monotone in difficulty: int4 must do no better
+/// than int8 on the same task (Table 5's machinery).
+#[test]
+fn lowbit_ladder_ordering() {
+    let train = Blobs::new_split(300, 4, 16, 0.3, 1, 10);
+    let test = Blobs::new_split(100, 4, 16, 0.3, 1, 20);
+    let mut accs = Vec::new();
+    for bits in [8u32, 4] {
+        let mut model = mlp(&[16, 32, 4], Arith::Int(IntCfg::bits(bits)), 3);
+        let mut opt = IntSgd::new(0.9, 0.0, 7);
+        let cfg = TrainConfig { epochs: 8, batch: 32, ..Default::default() };
+        let rec =
+            Trainer { model: &mut model, opt: &mut opt, cfg, dense: false }.run(&train, &test);
+        accs.push(rec.final_top1);
+    }
+    assert!(accs[0] >= accs[1] - 0.05, "int8 {} should beat int4 {}", accs[0], accs[1]);
+}
+
+/// Checkpoint round-trip through a real training run.
+#[test]
+fn checkpoint_roundtrip_after_training() {
+    let train = Blobs::new_split(200, 3, 8, 0.3, 1, 10);
+    let mut model = mlp(&[8, 16, 3], Arith::Float, 3);
+    let mut opt = FloatSgd::new(0.9, 0.0);
+    let cfg = TrainConfig { epochs: 4, batch: 32, ..Default::default() };
+    Trainer { model: &mut model, opt: &mut opt, cfg: cfg.clone(), dense: false }
+        .run(&train, &train);
+    let dir = std::env::temp_dir().join("intrain_it_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trained.bin");
+    intrain::train::checkpoint::save(&mut model, &path).unwrap();
+    let mut fresh = mlp(&[8, 16, 3], Arith::Float, 99);
+    intrain::train::checkpoint::load(&mut fresh, &path).unwrap();
+    let mut o2 = FloatSgd::new(0.9, 0.0);
+    let acc = Trainer { model: &mut fresh, opt: &mut o2, cfg, dense: false }
+        .evaluate(&train)
+        .0;
+    assert!(acc > 0.9, "restored model acc {acc}");
+    std::fs::remove_file(&path).unwrap();
+}
+
+/// Segmentation runner produces a sane mIoU for both arithmetics
+/// (smoke-scale; the bench uses a larger budget).
+#[test]
+fn segmentation_runner_smoke() {
+    let b = tiny_budget();
+    let mi = run_segmentation(Arith::int8(), false, &b, 3);
+    let mf = run_segmentation(Arith::Float, false, &b, 3);
+    assert!((0.0..=100.0).contains(&mi));
+    assert!((0.0..=100.0).contains(&mf));
+}
+
+/// Detection runner produces a sane mAP and the decode path fires.
+#[test]
+fn detection_runner_smoke() {
+    let b = tiny_budget();
+    let m = run_detection(Arith::Float, "voc", &b, 3);
+    assert!((0.0..=100.0).contains(&m));
+}
