@@ -8,10 +8,12 @@ use crate::data::synth_images::SynthImages;
 use crate::models::{mlp, resnet_tiny};
 use crate::nn::{Arith, IntCfg};
 use crate::optim::{FloatSgd, IntSgd, LrSchedule, Optimizer};
+use crate::telemetry;
 use crate::train::trainer::{TrainConfig, Trainer};
 use crate::util::cli::Args;
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Pick the optimizer matching an arithmetic mode (integer SGD for the
 /// paper's pipeline, float SGD otherwise).
@@ -121,19 +123,65 @@ pub fn cmd_gap(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `intrain train` — telemetry-first training entry point: picks the model
+/// family with `--model {mlp,resnet}` and honors the global `--trace` /
+/// `--metrics-out` flags like every other command.
+pub fn cmd_train(args: &Args) -> Result<()> {
+    match args.get("model").unwrap_or("mlp") {
+        "mlp" => cmd_mlp(args),
+        "resnet" => cmd_classify(args),
+        other => bail!("unknown --model {other:?} (expected mlp or resnet)"),
+    }
+}
+
+/// Wire the global telemetry flags: `--trace` enables collection (and a
+/// console sink when no JSONL path is given), `--metrics-out <path.jsonl>`
+/// streams events to a file, `--sample-every N` tunes the numeric-probe
+/// decimation. Returns true when telemetry was switched on.
+pub fn init_telemetry(args: &Args) -> Result<bool> {
+    let trace = args.flag("trace");
+    let metrics_out = args.get("metrics-out");
+    if !trace && metrics_out.is_none() {
+        return Ok(false);
+    }
+    if let Some(path) = metrics_out {
+        let sink = telemetry::JsonlSink::create(std::path::Path::new(path))
+            .with_context(|| format!("creating metrics file {path}"))?;
+        telemetry::add_sink(Arc::new(sink));
+    } else {
+        telemetry::add_sink(Arc::new(telemetry::ConsoleSink));
+    }
+    let period = args.get_or("sample-every", telemetry::numeric::DEFAULT_SAMPLE_PERIOD);
+    telemetry::numeric::set_sample_period(period);
+    telemetry::set_enabled(true);
+    Ok(true)
+}
+
+/// Flush sinks and print the end-of-run telemetry summary table.
+pub fn finish_telemetry() {
+    telemetry::flush();
+    println!("{}", telemetry::summary_table());
+}
+
 /// Top-level dispatch.
 pub fn dispatch(args: &Args) -> Result<()> {
-    match args.command.as_deref() {
+    let telem = init_telemetry(args)?;
+    let result = match args.command.as_deref() {
         Some("e2e") => cmd_e2e(args),
         Some("classify") => cmd_classify(args),
         Some("mlp") => cmd_mlp(args),
+        Some("train") => cmd_train(args),
         Some("gap") => cmd_gap(args),
         Some(other) => bail!("unknown command {other:?}; see --help"),
         None => {
             println!("{}", HELP);
             Ok(())
         }
+    };
+    if telem {
+        finish_telemetry();
     }
+    result
 }
 
 /// CLI help text.
@@ -143,6 +191,8 @@ intrain — fully-integer deep learning training (NeurIPS 2022 reproduction)
 USAGE: intrain <command> [--key value]...
 
 COMMANDS:
+  train     train with telemetry (alias over mlp/resnet)
+            --model {mlp,resnet} --arith ... --epochs N
   e2e       train the AOT transformer via PJRT (needs `make artifacts`)
             --steps N --lr F --arith {int8,fp32} --artifacts DIR
   classify  train ResNet-tiny on synthetic CIFAR
@@ -150,5 +200,12 @@ COMMANDS:
   mlp       fast MLP smoke workload        --arith ... --epochs N
   gap       Theorem-1 optimality-gap experiment  --lr F --steps N
 
+GLOBAL OPTIONS (all commands):
+  --trace             enable telemetry: spans, numeric probes, summary table
+  --metrics-out PATH  stream telemetry events as JSONL to PATH (implies
+                      collection; without it --trace prints to the console)
+  --sample-every N    numeric-probe decimation period (default 8)
+
 Benches reproducing every paper table/figure: `cargo bench`.
+Set BENCH_JSON=1 to emit one machine-readable JSON line per bench result.
 Examples: `cargo run --release --example quickstart` (and 6 more).";

@@ -5,7 +5,7 @@
 //! logs the loss curve. Python is not involved at any point here.
 
 use crate::data::corpus::Corpus;
-use crate::runtime::{f32_literal, i32_literal, Manifest, Runtime};
+use crate::runtime::{f32_literal, i32_literal, xla, Manifest, Runtime};
 use anyhow::{Context, Result};
 use std::path::Path;
 use std::time::Instant;
@@ -89,14 +89,25 @@ pub fn run_e2e(artifacts: &Path, cfg: &E2eConfig) -> Result<E2eRecord> {
         args.push(&tgt_lit);
         args.push(&seed);
         args.push(&lr);
-        let mut out = step.run(&args).with_context(|| format!("train step {s}"))?;
+        let mut out = {
+            let _span = crate::telemetry::trace::span("e2e_step");
+            step.run(&args).with_context(|| format!("train step {s}"))?
+        };
         let loss: f32 = out.pop().context("missing loss output")?.to_vec::<f32>()?[0];
         let p = params.len();
         moments = out.split_off(p);
         params = out;
         rec.losses.push(loss);
+        if crate::telemetry::enabled() {
+            crate::telemetry::emit(
+                crate::telemetry::Event::new("step")
+                    .with("task", "e2e")
+                    .with("step", s)
+                    .with("loss", loss),
+            );
+        }
         if cfg.log_every > 0 && s % cfg.log_every == 0 {
-            println!("step {s:>5}  loss {loss:.4}");
+            crate::telemetry::log(&format!("step {s:>5}  loss {loss:.4}"));
         }
     }
     rec.steps_per_sec = cfg.steps as f64 / t0.elapsed().as_secs_f64();

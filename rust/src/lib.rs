@@ -7,6 +7,37 @@
 //! and an int16 integer SGD — plus the float and uniform-quantization
 //! baselines, synthetic workloads, and the benches that regenerate every
 //! table and figure of the paper's evaluation.
+//!
+//! # Telemetry
+//!
+//! The [`telemetry`] module is the observability substrate for the whole
+//! pipeline — integer training fails silently (overflow saturates, small
+//! values underflow to the DFP grid floor), so visibility into the
+//! numerics is a correctness tool, not a luxury. It provides:
+//!
+//! - **Metrics** ([`telemetry::metrics`]): atomic counters, gauges, and
+//!   fixed-bucket histograms, named via a global registry plus a handful
+//!   of `static` hot counters (GEMM accumulator saturation, integer-SGD
+//!   clamps, stochastic-rounding events).
+//! - **Tracing spans** ([`telemetry::trace`]): RAII scoped timers for the
+//!   data-load / forward / backward / optimizer-step / eval phases, with
+//!   per-name aggregates that feed the end-of-run summary table.
+//! - **Numeric probes** ([`telemetry::numeric`]): sampled per-layer DFP
+//!   health — saturation fraction, zero fraction, shared-exponent drift.
+//! - **Sinks** ([`telemetry::sink`]): human-readable console lines and
+//!   JSONL event streams from one `Event` model (hand-rolled JSON; no
+//!   external deps).
+//!
+//! Everything is **off by default** and costs one relaxed atomic load per
+//! instrumented site when disabled. The CLI switches it on:
+//!
+//! ```text
+//! intrain train --arith int8 --trace --metrics-out run.jsonl
+//! ```
+//!
+//! `--trace` enables collection (console sink unless `--metrics-out`
+//! gives a JSONL path) and prints a summary table — span timings, hot
+//! counters, last-value gauges — when the command finishes.
 
 pub mod baselines;
 pub mod coordinator;
@@ -17,5 +48,6 @@ pub mod metrics;
 pub mod models;
 pub mod optim;
 pub mod runtime;
+pub mod telemetry;
 pub mod train;
 pub mod util;

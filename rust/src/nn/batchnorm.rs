@@ -231,10 +231,10 @@ impl BatchNorm2d {
                     let bm = s as f64 / cntf * exp2i64(kx);
                     let bv = (s2 as f64 / cntf - (s as f64 / cntf) * (s as f64 / cntf))
                         * exp2i64(2 * kx);
-                    eprintln!(
+                    crate::telemetry::log(&format!(
                         "BN[ch{}] eval: running=({:.4},{:.4}) batch=({:.4},{:.4})",
                         self.ch, self.running_mean[c], self.running_var[c], bm, bv
-                    );
+                    ));
                 }
                 let mfx = self.running_mean[c];
                 let mu = if mfx == 0.0 {

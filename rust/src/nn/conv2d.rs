@@ -108,6 +108,9 @@ impl Conv2d {
             let img = &qx.payload[b * s.in_img()..(b + 1) * s.in_img()];
             im2col_i8(img, s, &mut col);
             crate::dfp::gemm::igemm_into(&qw.payload, &col, s.c_out, s.patch(), pix, &mut acc);
+            if crate::telemetry::enabled() {
+                super::qmat::count_acc_saturation(&acc);
+            }
             let out = &mut y[b * s.out_img()..(b + 1) * s.out_img()];
             match bias_int {
                 Some((qb, k)) => {
@@ -147,10 +150,16 @@ impl Layer for Conv2d {
         let (ho, wo) = (s.h_out(), s.w_out());
         let y = match &self.arith {
             Arith::Int(cfg) => {
+                static PROBE: crate::telemetry::numeric::Sampler =
+                    crate::telemetry::numeric::Sampler::new();
                 let cfg = *cfg;
                 let qx = quantize(&x.data, cfg.pbits, int_mode(&cfg, ctx, false));
                 let qw = quantize(&self.w.data, cfg.pbits, int_mode(&cfg, ctx, false));
                 let qb = quantize(&self.b.data, cfg.pbits, int_mode(&cfg, ctx, false));
+                if PROBE.tick() {
+                    crate::telemetry::numeric::probe_dfp("conv2d/x", &qx);
+                    crate::telemetry::numeric::probe_dfp("conv2d/w", &qw);
+                }
                 let k = qx.scale_exp() + qw.scale_exp();
                 self.forward_payload(&qx, &qw, &s, exp2i64(k), Some((&qb, k)))
             }
@@ -208,10 +217,15 @@ impl Layer for Conv2d {
         // algebra is identical for Int and Uniform.
         let (qg, qx, qw, sg, sx, sw) = match &self.arith {
             Arith::Int(cfg) => {
+                static PROBE: crate::telemetry::numeric::Sampler =
+                    crate::telemetry::numeric::Sampler::new();
                 let cfg = *cfg;
                 let qg = quantize(&gy.data, cfg.pbits, int_mode(&cfg, ctx, true));
                 let qx = quantize(&self.saved_x, cfg.pbits, int_mode(&cfg, ctx, true));
                 let qw = quantize(&self.w.data, cfg.pbits, int_mode(&cfg, ctx, true));
+                if PROBE.tick() {
+                    crate::telemetry::numeric::probe_dfp("conv2d/dy", &qg);
+                }
                 let (sg, sx, sw) =
                     (exp2i64(qg.scale_exp()), exp2i64(qx.scale_exp()), exp2i64(qw.scale_exp()));
                 (qg, qx, qw, sg, sx, sw)

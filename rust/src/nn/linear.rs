@@ -46,9 +46,18 @@ impl Linear {
 
     /// Integer forward: GEMM + accumulator-domain bias add + inverse map.
     fn forward_int(&self, x: &[f32], rows: usize, cfg: &super::IntCfg, ctx: &mut Ctx) -> Vec<f32> {
+        static PROBE: crate::telemetry::numeric::Sampler =
+            crate::telemetry::numeric::Sampler::new();
         let qx = quantize(x, cfg.pbits, int_mode(cfg, ctx, false));
         let qw = quantize(&self.w.data, cfg.pbits, int_mode(cfg, ctx, false));
+        if PROBE.tick() {
+            crate::telemetry::numeric::probe_dfp("linear/x", &qx);
+            crate::telemetry::numeric::probe_dfp("linear/w", &qw);
+        }
         let out = igemm_kind(MatKind::ABT, &qx, &qw, (rows, self.in_dim, self.out_dim));
+        if crate::telemetry::enabled() {
+            super::qmat::count_acc_saturation(&out.acc);
+        }
         let k = out.scale_exp;
         let qb = quantize(&self.b.data, cfg.pbits, int_mode(cfg, ctx, false));
         let kb = qb.scale_exp();
@@ -132,10 +141,15 @@ impl Layer for Linear {
         debug_assert_eq!(gy.len(), rows * self.out_dim);
         let (gx, gw, gb) = match &self.arith {
             Arith::Int(cfg) => {
+                static PROBE: crate::telemetry::numeric::Sampler =
+                    crate::telemetry::numeric::Sampler::new();
                 let cfg = *cfg;
                 let qg = quantize(&gy.data, cfg.pbits, int_mode(&cfg, ctx, true));
                 let qw = quantize(&self.w.data, cfg.pbits, int_mode(&cfg, ctx, true));
                 let qx = quantize(&self.saved_x, cfg.pbits, int_mode(&cfg, ctx, true));
+                if PROBE.tick() {
+                    crate::telemetry::numeric::probe_dfp("linear/dy", &qg);
+                }
                 // ∂L/∂x = Ĝ·Ŵ  — [rows×out]·[out×in]
                 let ox = igemm_kind(MatKind::AB, &qg, &qw, (rows, self.out_dim, self.in_dim));
                 let gx = crate::dfp::inverse_i32(&ox.acc, ox.scale_exp);

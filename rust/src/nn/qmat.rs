@@ -35,10 +35,23 @@ impl MatKind {
 pub fn int_mode(cfg: &super::IntCfg, ctx: &mut Ctx, backward: bool) -> RoundMode {
     let sr = if backward { cfg.sr_backward } else { cfg.sr_forward };
     if sr {
+        if crate::telemetry::enabled() {
+            crate::telemetry::hot::SR_MAPS.inc();
+        }
         RoundMode::Stochastic(ctx.next_seed())
     } else {
         RoundMode::Nearest
     }
+}
+
+/// Count int32 accumulator values within a factor of 2 of overflow
+/// (|acc| ≥ 2³⁰) into the `gemm/acc_saturation` hot counter — the early
+/// warning for accumulator wrap, the silent failure mode of int8 GEMM.
+/// Call only when telemetry is enabled.
+pub(crate) fn count_acc_saturation(acc: &[i32]) {
+    crate::telemetry::hot::GEMM_CALLS.inc();
+    let sat = acc.iter().filter(|&&a| a.unsigned_abs() >= (1 << 30)).count() as u64;
+    crate::telemetry::hot::ACC_SATURATION.add(sat);
 }
 
 /// Dispatched GEMM: multiply `a` and `b` (f32 at the boundary) under the
@@ -58,6 +71,9 @@ pub fn qgemm(
             let qa = quantize(a, cfg.pbits, int_mode(cfg, ctx, backward));
             let qb = quantize(b, cfg.pbits, int_mode(cfg, ctx, backward));
             let out = igemm_kind(kind, &qa, &qb, dims);
+            if crate::telemetry::enabled() {
+                count_acc_saturation(&out.acc);
+            }
             inverse_i32(&out.acc, out.scale_exp)
         }
         Arith::Uniform(cfg) => {

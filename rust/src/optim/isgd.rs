@@ -48,7 +48,9 @@ fn align(p: i64, from: i32, to: i32) -> i64 {
 }
 
 /// Stochastically renormalize i64 working values at exponent `e` back to an
-/// int16 tensor (15-bit payloads, fresh shared exponent).
+/// int16 tensor (15-bit payloads, fresh shared exponent). Saturating-carry
+/// clamps (a rounded payload exceeding 15 bits) are counted into the
+/// `isgd/clamp` telemetry counter when telemetry is enabled.
 fn renorm16(vals: &[i64], e: i32, seed: u64) -> Dfp16Tensor {
     let amax = vals.iter().map(|&v| v.unsigned_abs()).max().unwrap_or(0);
     if amax == 0 {
@@ -57,12 +59,18 @@ fn renorm16(vals: &[i64], e: i32, seed: u64) -> Dfp16Tensor {
     let msb = 63 - amax.leading_zeros(); // leading-one position
     let drop = (msb + 1).saturating_sub(15);
     let maxp = (1i64 << 15) - 1;
+    let telem = crate::telemetry::enabled();
+    let mut clamps = 0u64;
     let payload: Vec<i16> = vals
         .iter()
         .enumerate()
         .map(|(i, &v)| {
             let mag = v.unsigned_abs();
-            let q = stochastic_round_u64(mag, drop, hash2(seed, i as u64)).min(maxp as u64) as i16;
+            let raw = stochastic_round_u64(mag, drop, hash2(seed, i as u64));
+            if telem && raw > maxp as u64 {
+                clamps += 1;
+            }
+            let q = raw.min(maxp as u64) as i16;
             if v < 0 {
                 -q
             } else {
@@ -70,6 +78,9 @@ fn renorm16(vals: &[i64], e: i32, seed: u64) -> Dfp16Tensor {
             }
         })
         .collect();
+    if clamps > 0 {
+        crate::telemetry::hot::ISGD_CLAMP.add(clamps);
+    }
     // value = q · 2^(e + drop) ⇒ e_max = e + drop + 126 + 15.
     Dfp16Tensor { payload, e_max: e + drop as i32 + 141, pbits: 15 }
 }
@@ -159,6 +170,14 @@ impl Optimizer for IntSgd {
             }
             st.w = w16;
             st.m = m16;
+            // Sampled DFP health of the authoritative int16 state: exponent
+            // drift and payload saturation per parameter tensor.
+            static PROBE: crate::telemetry::numeric::Sampler =
+                crate::telemetry::numeric::Sampler::new();
+            if PROBE.tick() {
+                crate::telemetry::numeric::probe_dfp16(&format!("isgd/w{pi}"), &st.w);
+                crate::telemetry::numeric::probe_dfp16(&format!("isgd/m{pi}"), &st.m);
+            }
         }
     }
 }

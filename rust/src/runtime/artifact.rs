@@ -6,6 +6,7 @@
 //! computations return one tuple (`return_tuple=True`), decomposed into a
 //! `Vec<Literal>` after each call.
 
+use super::xla;
 use anyhow::{Context, Result};
 use std::path::Path;
 

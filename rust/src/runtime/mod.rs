@@ -4,6 +4,12 @@
 
 pub mod artifact;
 pub mod manifest;
+pub mod xla_stub;
+
+/// The `xla` bindings the runtime layer compiles against. The real crate
+/// is unavailable offline, so this aliases the stub; see `xla_stub.rs`
+/// for how to swap the real bindings back in.
+pub use xla_stub as xla;
 
 pub use artifact::{f32_literal, i32_literal, u32_literal, Artifact, Runtime};
 pub use manifest::Manifest;

@@ -1,0 +1,354 @@
+//! Lightweight metrics primitives: counters, gauges, and fixed-bucket
+//! histograms, all backed by atomics so instrumented hot loops never take a
+//! lock. Dynamic (named) instruments live in a [`Registry`]; the handful of
+//! numeric-health counters on the hottest paths are `static` instances in
+//! [`crate::telemetry::hot`] (const-constructed, zero allocation).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// IEEE-754 bit pattern of a quiet NaN — the "never set" gauge value.
+const NAN_BITS: u64 = 0x7FF8_0000_0000_0000;
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// New counter at zero (const: usable in `static` items).
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Increment by one.
+    #[inline(always)]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Increment by `n`.
+    #[inline(always)]
+    pub fn add(&self, n: u64) {
+        if n > 0 {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Reset to zero, returning the previous value.
+    pub fn reset(&self) -> u64 {
+        self.0.swap(0, Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge holding an `f64` (bit-packed into an atomic).
+#[derive(Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// New unset gauge (reads as NaN until first `set`).
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(NAN_BITS))
+    }
+
+    /// Store a value.
+    #[inline(always)]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Read the last stored value (NaN if never set).
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    /// True once `set` has been called with a non-NaN value.
+    pub fn is_set(&self) -> bool {
+        !self.get().is_nan()
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge::new()
+    }
+}
+
+/// Default bucket bounds for durations in seconds: 10 µs … 30 s,
+/// roughly half-decade spacing.
+pub const DURATION_BUCKETS: [f64; 13] = [
+    1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 0.1, 0.3, 1.0, 3.0, 30.0,
+];
+
+/// Fixed-bucket histogram. `bounds` are the inclusive upper edges of the
+/// first `bounds.len()` buckets; one overflow bucket catches the rest.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    /// New histogram with the given (ascending) bucket upper bounds.
+    pub fn new(bounds: &[f64]) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        // CAS loop for the f64 running sum (no atomic f64 in std).
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observations.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Mean observation (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() / n as f64
+        }
+    }
+
+    /// Per-bucket counts (last entry = overflow bucket).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Approximate quantile: the upper bound of the bucket where the
+    /// cumulative count crosses `q·total` (the last finite bound for the
+    /// overflow bucket). Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    *self.bounds.last().unwrap_or(&f64::INFINITY)
+                };
+            }
+        }
+        *self.bounds.last().unwrap_or(&0.0)
+    }
+}
+
+/// Snapshot of one histogram for reporting.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    /// Observation count.
+    pub count: u64,
+    /// Mean observation.
+    pub mean: f64,
+    /// Approximate median (bucket upper bound).
+    pub p50: f64,
+    /// Approximate 95th percentile (bucket upper bound).
+    pub p95: f64,
+}
+
+/// Named-instrument registry. Lookup takes a mutex (uncontended outside the
+/// hot path); call sites that run per-step cache the returned `Arc` handle.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or create a counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(|| Arc::new(Counter::new())).clone()
+    }
+
+    /// Get or create a gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(|| Arc::new(Gauge::new())).clone()
+    }
+
+    /// Get or create a histogram (`bounds` only used on first creation).
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Arc<Histogram> {
+        let mut m = self.histograms.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new(bounds))).clone()
+    }
+
+    /// Sorted `(name, value)` snapshot of all counters.
+    pub fn counters_snapshot(&self) -> Vec<(String, u64)> {
+        self.counters.lock().unwrap().iter().map(|(k, v)| (k.clone(), v.get())).collect()
+    }
+
+    /// Sorted `(name, value)` snapshot of all gauges that have been set.
+    pub fn gauges_snapshot(&self) -> Vec<(String, f64)> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, v)| v.is_set())
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect()
+    }
+
+    /// Sorted `(name, snapshot)` of all non-empty histograms.
+    pub fn histograms_snapshot(&self) -> Vec<(String, HistogramSnapshot)> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, h)| h.count() > 0)
+            .map(|(k, h)| {
+                (
+                    k.clone(),
+                    HistogramSnapshot {
+                        count: h.count(),
+                        mean: h.mean(),
+                        p50: h.quantile(0.5),
+                        p95: h.quantile(0.95),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// Drop every registered instrument (tests / fresh runs).
+    pub fn reset(&self) {
+        self.counters.lock().unwrap().clear();
+        self.gauges.lock().unwrap().clear();
+        self.histograms.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_concurrent_increments_exact() {
+        let c = Arc::new(Counter::new());
+        let threads = 8;
+        let per = 10_000u64;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..per {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), threads * per);
+        assert_eq!(c.reset(), threads * per);
+        assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn gauge_set_get() {
+        let g = Gauge::new();
+        assert!(!g.is_set());
+        g.set(3.25);
+        assert_eq!(g.get(), 3.25);
+        assert!(g.is_set());
+    }
+
+    #[test]
+    fn histogram_concurrent_observations_exact_count_and_sum() {
+        let h = Arc::new(Histogram::new(&[1.0, 2.0, 4.0]));
+        let threads = 4;
+        let per = 5_000;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..per {
+                        h.observe(((t * per + i) % 5) as f64);
+                    }
+                });
+            }
+        });
+        let n = (threads * per) as u64;
+        assert_eq!(h.count(), n);
+        // Values cycle 0,1,2,3,4 → mean 2 exactly (integers sum exactly in f64).
+        assert!((h.mean() - 2.0).abs() < 1e-9, "mean={}", h.mean());
+        let buckets = h.bucket_counts();
+        assert_eq!(buckets.iter().sum::<u64>(), n);
+        // 0 and 1 land in bucket ≤1.0; 2 in ≤2.0; 3 and 4 in ≤4.0.
+        assert_eq!(buckets[0], n / 5 * 2);
+        assert_eq!(buckets[1], n / 5);
+        assert_eq!(buckets[2], n / 5 * 2);
+        assert_eq!(buckets[3], 0);
+    }
+
+    #[test]
+    fn histogram_quantiles_from_buckets() {
+        let h = Histogram::new(&[0.001, 0.01, 0.1, 1.0]);
+        for _ in 0..90 {
+            h.observe(0.005); // bucket ≤0.01
+        }
+        for _ in 0..10 {
+            h.observe(0.5); // bucket ≤1.0
+        }
+        assert_eq!(h.quantile(0.5), 0.01);
+        assert_eq!(h.quantile(0.95), 1.0);
+    }
+
+    #[test]
+    fn registry_handles_are_shared() {
+        let r = Registry::new();
+        r.counter("a").add(2);
+        r.counter("a").add(3);
+        assert_eq!(r.counter("a").get(), 5);
+        r.gauge("g").set(1.5);
+        assert_eq!(r.gauges_snapshot(), vec![("g".to_string(), 1.5)]);
+        r.histogram("h", &DURATION_BUCKETS).observe(0.02);
+        assert_eq!(r.histograms_snapshot().len(), 1);
+        r.reset();
+        assert!(r.counters_snapshot().is_empty());
+    }
+}

@@ -1,0 +1,205 @@
+//! Numeric-health probes for the integer pipeline: saturation fraction
+//! (payloads pinned at the clip boundary), zero fraction (underflow), and
+//! the dynamic-fixed-point shared-exponent distribution. Silent overflow
+//! and underflow are exactly how integer training fails (cf. NITI, WAGE),
+//! so these probes are the first thing to read when an int run diverges.
+//!
+//! Probes are decimated by a [`Sampler`] so per-layer inspection stays off
+//! the critical path: a disabled-telemetry tick is one relaxed atomic load.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::sink::Event;
+use crate::dfp::{Dfp16Tensor, DfpTensor};
+
+/// Default probe decimation: inspect one call in every `8`.
+pub const DEFAULT_SAMPLE_PERIOD: u64 = 8;
+
+static SAMPLE_PERIOD: AtomicU64 = AtomicU64::new(DEFAULT_SAMPLE_PERIOD);
+
+/// Current probe decimation period.
+pub fn sample_period() -> u64 {
+    SAMPLE_PERIOD.load(Ordering::Relaxed)
+}
+
+/// Set the probe decimation period (1 = probe every call).
+pub fn set_sample_period(period: u64) {
+    SAMPLE_PERIOD.store(period.max(1), Ordering::Relaxed);
+}
+
+/// Decimating tick counter for probe sites; const-constructible so each
+/// instrumented layer holds a `static Sampler`.
+#[derive(Debug)]
+pub struct Sampler(AtomicU64);
+
+impl Sampler {
+    /// New sampler.
+    pub const fn new() -> Sampler {
+        Sampler(AtomicU64::new(0))
+    }
+
+    /// Returns true when this call should probe: telemetry is enabled and
+    /// the tick count hits the decimation period.
+    #[inline]
+    pub fn tick(&self) -> bool {
+        if !super::enabled() {
+            return false;
+        }
+        let n = self.0.fetch_add(1, Ordering::Relaxed);
+        n % sample_period() == 0
+    }
+}
+
+impl Default for Sampler {
+    fn default() -> Self {
+        Sampler::new()
+    }
+}
+
+/// Health summary of one quantized tensor.
+#[derive(Clone, Copy, Debug)]
+pub struct TensorHealth {
+    /// Element count.
+    pub n: usize,
+    /// Fraction of payloads at exactly `±max_payload` (saturating-carry
+    /// clip boundary).
+    pub sat_frac: f64,
+    /// Fraction of payloads equal to zero (underflow to the grid floor).
+    pub zero_frac: f64,
+    /// Shared exponent of the tensor.
+    pub e_max: i32,
+    /// Effective scale exponent: `value = payload × 2^scale_exp`.
+    pub scale_exp: i32,
+}
+
+fn health_from_counts(
+    n: usize,
+    sat: usize,
+    zero: usize,
+    e_max: i32,
+    scale_exp: i32,
+) -> TensorHealth {
+    let d = n.max(1) as f64;
+    TensorHealth { n, sat_frac: sat as f64 / d, zero_frac: zero as f64 / d, e_max, scale_exp }
+}
+
+/// Compute health of an int8 DFP tensor.
+pub fn dfp_health(t: &DfpTensor) -> TensorHealth {
+    let maxp = t.max_payload() as i32;
+    let mut sat = 0usize;
+    let mut zero = 0usize;
+    for &p in &t.payload {
+        let a = (p as i32).abs();
+        if a == maxp {
+            sat += 1;
+        } else if a == 0 {
+            zero += 1;
+        }
+    }
+    health_from_counts(t.payload.len(), sat, zero, t.e_max, t.scale_exp())
+}
+
+/// Compute health of an int16 DFP tensor.
+pub fn dfp16_health(t: &Dfp16Tensor) -> TensorHealth {
+    let maxp = t.max_payload() as i32;
+    let mut sat = 0usize;
+    let mut zero = 0usize;
+    for &p in &t.payload {
+        let a = (p as i32).abs();
+        if a == maxp {
+            sat += 1;
+        } else if a == 0 {
+            zero += 1;
+        }
+    }
+    health_from_counts(t.payload.len(), sat, zero, t.e_max, t.scale_exp())
+}
+
+fn publish(site: &str, h: &TensorHealth) {
+    super::hot::MAP_SATURATION.add((h.sat_frac * h.n as f64).round() as u64);
+    let reg = super::registry();
+    reg.gauge(&format!("{site}/sat_frac")).set(h.sat_frac);
+    reg.gauge(&format!("{site}/zero_frac")).set(h.zero_frac);
+    reg.gauge(&format!("{site}/e_max")).set(h.e_max as f64);
+    // Exponent distribution: one histogram bucket per probe over the run.
+    reg.histogram(&format!("{site}/e_max_hist"), &EXP_BUCKETS).observe(h.e_max as f64);
+    super::emit(
+        Event::new("numeric")
+            .with("layer", site)
+            .with("n", h.n)
+            .with("sat_frac", h.sat_frac)
+            .with("zero_frac", h.zero_frac)
+            .with("e_max", h.e_max as i64)
+            .with("scale_exp", h.scale_exp as i64),
+    );
+}
+
+/// Shared-exponent histogram buckets: IEEE-754 biased exponents cluster
+/// around 127 for unit-scale data; this range covers ~2^-97 … 2^+97.
+const EXP_BUCKETS: [f64; 14] = [
+    30.0, 60.0, 90.0, 105.0, 115.0, 120.0, 125.0, 130.0, 135.0, 140.0, 150.0, 165.0, 195.0, 225.0,
+];
+
+/// Probe an int8 DFP tensor under the given site label
+/// (e.g. `"linear/x"`). Call only after a [`Sampler::tick`] returns true.
+pub fn probe_dfp(site: &str, t: &DfpTensor) {
+    if !super::enabled() {
+        return;
+    }
+    publish(site, &dfp_health(t));
+}
+
+/// Probe an int16 DFP tensor (optimizer state) under the given site label.
+pub fn probe_dfp16(site: &str, t: &Dfp16Tensor) {
+    if !super::enabled() {
+        return;
+    }
+    publish(site, &dfp16_health(t));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfp::{quantize, RoundMode};
+
+    #[test]
+    fn health_counts_saturation_and_zeros() {
+        // pbits=7 → max_payload=127. Payloads: two saturated, one zero.
+        let t = DfpTensor { payload: vec![127, -127, 0, 64], e_max: 127, pbits: 7 };
+        let h = dfp_health(&t);
+        assert_eq!(h.n, 4);
+        assert!((h.sat_frac - 0.5).abs() < 1e-12);
+        assert!((h.zero_frac - 0.25).abs() < 1e-12);
+        assert_eq!(h.e_max, 127);
+        assert_eq!(h.scale_exp, 127 - 126 - 7);
+    }
+
+    #[test]
+    fn quantized_max_element_saturates() {
+        // Nearest rounding maps the max-|x| element to the top payload.
+        let xs = [1.0f32, 0.5, 0.25, 0.0];
+        let t = quantize(&xs, 7, RoundMode::Nearest);
+        let h = dfp_health(&t);
+        assert!(h.sat_frac >= 0.25, "max element should sit at the boundary");
+        assert!(h.zero_frac >= 0.25, "exact zero should stay zero");
+    }
+
+    #[test]
+    fn dfp16_health_boundary() {
+        let t = Dfp16Tensor { payload: vec![32767, 0, 1], e_max: 100, pbits: 15 };
+        let h = dfp16_health(&t);
+        assert!((h.sat_frac - 1.0 / 3.0).abs() < 1e-9);
+        assert!((h.zero_frac - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampler_decimates() {
+        crate::telemetry::set_enabled(true);
+        set_sample_period(4);
+        let s = Sampler::new();
+        let fired: Vec<bool> = (0..8).map(|_| s.tick()).collect();
+        assert_eq!(fired.iter().filter(|&&b| b).count(), 2);
+        assert!(fired[0], "first tick must probe");
+        set_sample_period(DEFAULT_SAMPLE_PERIOD);
+    }
+}

@@ -1,0 +1,565 @@
+//! Event model and pluggable sinks. Every telemetry record is an [`Event`]
+//! (a kind tag plus ordered key/value fields); sinks render events as
+//! human-readable lines ([`ConsoleSink`]), JSONL streams ([`JsonlSink`]),
+//! or in-memory buffers for tests ([`MemorySink`]).
+//!
+//! JSON emission and parsing are hand-rolled over `std` only — the build
+//! environment has no serde — and the parser exists so round-trip tests and
+//! downstream tools can consume the JSONL stream without extra deps.
+
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A telemetry field value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// Unsigned integer.
+    U64(u64),
+    /// Signed integer.
+    I64(i64),
+    /// Float (non-finite values serialize as JSON `null`).
+    F64(f64),
+    /// String.
+    Str(String),
+    /// Boolean.
+    Bool(bool),
+}
+
+impl From<u64> for Value {
+    fn from(v: u64) -> Value {
+        Value::U64(v)
+    }
+}
+impl From<u32> for Value {
+    fn from(v: u32) -> Value {
+        Value::U64(v as u64)
+    }
+}
+impl From<usize> for Value {
+    fn from(v: usize) -> Value {
+        Value::U64(v as u64)
+    }
+}
+impl From<i64> for Value {
+    fn from(v: i64) -> Value {
+        Value::I64(v)
+    }
+}
+impl From<i32> for Value {
+    fn from(v: i32) -> Value {
+        Value::I64(v as i64)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Value {
+        Value::F64(v)
+    }
+}
+impl From<f32> for Value {
+    fn from(v: f32) -> Value {
+        Value::F64(v as f64)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Value {
+        Value::Str(v.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Value {
+        Value::Str(v)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Value {
+        Value::Bool(v)
+    }
+}
+
+/// One telemetry record: an event kind plus ordered fields.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Event kind tag, serialized under the `"ev"` key
+    /// (e.g. `"step"`, `"span"`, `"numeric"`, `"log"`).
+    pub kind: &'static str,
+    /// Ordered key/value fields.
+    pub fields: Vec<(String, Value)>,
+}
+
+impl Event {
+    /// New event with no fields.
+    pub fn new(kind: &'static str) -> Event {
+        Event { kind, fields: Vec::new() }
+    }
+
+    /// Builder: append a field.
+    pub fn with(mut self, key: impl Into<String>, v: impl Into<Value>) -> Event {
+        self.fields.push((key.into(), v.into()));
+        self
+    }
+
+    /// Look up a field by key.
+    pub fn field(&self, key: &str) -> Option<&Value> {
+        self.fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// Serialize as one JSON object (no trailing newline), e.g.
+    /// `{"ev":"step","step":3,"loss":1.25}`.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(32 + 16 * self.fields.len());
+        s.push_str("{\"ev\":\"");
+        json_escape_into(&mut s, self.kind);
+        s.push('"');
+        for (k, v) in &self.fields {
+            s.push_str(",\"");
+            json_escape_into(&mut s, k);
+            s.push_str("\":");
+            match v {
+                Value::U64(n) => {
+                    let _ = write!(s, "{n}");
+                }
+                Value::I64(n) => {
+                    let _ = write!(s, "{n}");
+                }
+                Value::F64(x) => {
+                    if x.is_finite() {
+                        let _ = write!(s, "{x}");
+                    } else {
+                        s.push_str("null");
+                    }
+                }
+                Value::Str(t) => {
+                    s.push('"');
+                    json_escape_into(&mut s, t);
+                    s.push('"');
+                }
+                Value::Bool(b) => s.push_str(if *b { "true" } else { "false" }),
+            }
+        }
+        s.push('}');
+        s
+    }
+
+    /// Render as a human-readable line, e.g. `[step] step=3 loss=1.25`.
+    /// A bare `log` event renders as just its message.
+    pub fn to_line(&self) -> String {
+        if self.kind == "log" {
+            if let Some(Value::Str(msg)) = self.field("msg") {
+                return msg.clone();
+            }
+        }
+        let mut s = format!("[{}]", self.kind);
+        for (k, v) in &self.fields {
+            if k == "t" {
+                continue; // timestamps add noise on the console
+            }
+            match v {
+                Value::U64(n) => {
+                    let _ = write!(s, " {k}={n}");
+                }
+                Value::I64(n) => {
+                    let _ = write!(s, " {k}={n}");
+                }
+                Value::F64(x) => {
+                    let _ = write!(s, " {k}={x:.6}");
+                }
+                Value::Str(t) => {
+                    let _ = write!(s, " {k}={t}");
+                }
+                Value::Bool(b) => {
+                    let _ = write!(s, " {k}={b}");
+                }
+            }
+        }
+        s
+    }
+}
+
+fn json_escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Destination for telemetry events. Implementations must be internally
+/// synchronized (`Send + Sync`): events arrive from any thread.
+pub trait Sink: Send + Sync {
+    /// Consume one event.
+    fn emit(&self, ev: &Event);
+    /// Flush any buffered output (default: no-op).
+    fn flush(&self) {}
+}
+
+/// Sink that prints human-readable lines to stdout.
+#[derive(Debug, Default)]
+pub struct ConsoleSink;
+
+impl Sink for ConsoleSink {
+    fn emit(&self, ev: &Event) {
+        println!("{}", ev.to_line());
+    }
+}
+
+/// Sink that appends one JSON object per line to a file.
+#[derive(Debug)]
+pub struct JsonlSink {
+    w: Mutex<BufWriter<File>>,
+}
+
+impl JsonlSink {
+    /// Create (truncating) the JSONL file at `path`.
+    pub fn create(path: &Path) -> std::io::Result<JsonlSink> {
+        let f = File::create(path)?;
+        Ok(JsonlSink { w: Mutex::new(BufWriter::new(f)) })
+    }
+}
+
+impl Sink for JsonlSink {
+    fn emit(&self, ev: &Event) {
+        let mut w = self.w.lock().unwrap();
+        // Best effort: a full disk should not abort training.
+        let _ = writeln!(w, "{}", ev.to_json());
+    }
+
+    fn flush(&self) {
+        let _ = self.w.lock().unwrap().flush();
+    }
+}
+
+/// Sink that buffers JSON lines in memory (tests and report capture).
+#[derive(Debug, Default)]
+pub struct MemorySink {
+    lines: Mutex<Vec<String>>,
+}
+
+impl MemorySink {
+    /// Empty buffer.
+    pub fn new() -> MemorySink {
+        MemorySink::default()
+    }
+
+    /// Snapshot of all captured JSON lines.
+    pub fn lines(&self) -> Vec<String> {
+        self.lines.lock().unwrap().clone()
+    }
+}
+
+impl Sink for MemorySink {
+    fn emit(&self, ev: &Event) {
+        self.lines.lock().unwrap().push(ev.to_json());
+    }
+}
+
+/// Parsed JSON value (minimal model: all numbers are `f64`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Any number.
+    Num(f64),
+    /// String.
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object, with insertion order preserved.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric value, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// String value, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a single JSON document (used for JSONL round-trip checks and by
+/// tools consuming `--metrics-out` streams).
+pub fn parse_json(input: &str) -> Result<Json, String> {
+    let mut p = Parser { b: input.as_bytes(), i: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing data at byte {}", p.i));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(format!("unexpected byte at {}", self.i)),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or_else(|| format!("bad number at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            if self.i + 4 >= self.b.len() {
+                                return Err("bad \\u escape".to_string());
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            self.i += 4;
+                        }
+                        _ => return Err(format!("bad escape at byte {}", self.i)),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // Advance one UTF-8 char (multi-byte safe).
+                    let rest = std::str::from_utf8(&self.b[self.i..])
+                        .map_err(|_| "invalid utf-8".to_string())?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let v = self.value()?;
+            fields.push((k, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_json_shape() {
+        let ev = Event::new("step")
+            .with("step", 3u64)
+            .with("loss", 1.25f64)
+            .with("tag", "a\"b")
+            .with("ok", true);
+        assert_eq!(ev.to_json(), r#"{"ev":"step","step":3,"loss":1.25,"tag":"a\"b","ok":true}"#);
+    }
+
+    #[test]
+    fn non_finite_floats_serialize_as_null() {
+        let ev = Event::new("x").with("v", f64::NAN);
+        assert_eq!(ev.to_json(), r#"{"ev":"x","v":null}"#);
+        assert_eq!(parse_json(&ev.to_json()).unwrap().get("v"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let ev = Event::new("numeric")
+            .with("layer", "conv1/w")
+            .with("sat_frac", 0.0625f64)
+            .with("e_max", -3i64)
+            .with("n", 1024usize)
+            .with("msg", "line1\nline2\ttab");
+        let parsed = parse_json(&ev.to_json()).unwrap();
+        assert_eq!(parsed.get("ev").and_then(Json::as_str), Some("numeric"));
+        assert_eq!(parsed.get("layer").and_then(Json::as_str), Some("conv1/w"));
+        assert_eq!(parsed.get("sat_frac").and_then(Json::as_f64), Some(0.0625));
+        assert_eq!(parsed.get("e_max").and_then(Json::as_f64), Some(-3.0));
+        assert_eq!(parsed.get("n").and_then(Json::as_f64), Some(1024.0));
+        assert_eq!(parsed.get("msg").and_then(Json::as_str), Some("line1\nline2\ttab"));
+    }
+
+    #[test]
+    fn parser_handles_nesting_and_ws() {
+        let j = parse_json(r#" { "a": [1, 2.5, -3e2, null], "b": {"c": false} } "#).unwrap();
+        let a = j.get("a").unwrap();
+        assert_eq!(
+            a,
+            &Json::Arr(vec![Json::Num(1.0), Json::Num(2.5), Json::Num(-300.0), Json::Null])
+        );
+        assert_eq!(j.get("b").unwrap().get("c"), Some(&Json::Bool(false)));
+        assert!(parse_json("{\"unterminated\":").is_err());
+        assert!(parse_json("{} junk").is_err());
+    }
+
+    #[test]
+    fn memory_sink_captures_lines() {
+        let sink = MemorySink::new();
+        sink.emit(&Event::new("a").with("x", 1u64));
+        sink.emit(&Event::new("b").with("y", 2u64));
+        let lines = sink.lines();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(parse_json(&lines[0]).unwrap().get("ev").and_then(Json::as_str), Some("a"));
+    }
+
+    #[test]
+    fn jsonl_sink_writes_parseable_lines() {
+        let path = std::env::temp_dir().join("intrain_test_sink.jsonl");
+        {
+            let sink = JsonlSink::create(&path).unwrap();
+            sink.emit(&Event::new("step").with("step", 0u64).with("loss", 2.0f64));
+            sink.emit(&Event::new("step").with("step", 1u64).with("loss", 1.5f64));
+            sink.flush();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let j = parse_json(line).unwrap();
+            assert_eq!(j.get("ev").and_then(Json::as_str), Some("step"));
+            assert!(j.get("loss").and_then(Json::as_f64).is_some());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -164,12 +164,29 @@ pub fn run_detection(arith: Arith, variant: &str, budget: &Budget, seed: u64) ->
         }
         let xt = Tensor::new(x, vec![bs, 3, ds.hw, ds.hw]);
         let mut ctx = Ctx::train(seed, step as u64);
-        let head = det.forward(&xt, &mut ctx);
-        let (_loss, grad) = det.loss(&head, &refs);
-        det.backward(&grad, &mut ctx);
+        let head = {
+            let _s = crate::telemetry::trace::span("forward");
+            det.forward(&xt, &mut ctx)
+        };
+        let (loss, grad) = det.loss(&head, &refs);
+        {
+            let _s = crate::telemetry::trace::span("backward");
+            det.backward(&grad, &mut ctx);
+        }
         let mut params = det.params();
-        opt.step(&mut params, 0.02, step as u64);
+        {
+            let _s = crate::telemetry::trace::span("optimizer_step");
+            opt.step(&mut params, 0.02, step as u64);
+        }
         opt.zero_grad(&mut params);
+        if crate::telemetry::enabled() {
+            crate::telemetry::emit(
+                crate::telemetry::Event::new("step")
+                    .with("task", "detection")
+                    .with("step", step)
+                    .with("loss", loss),
+            );
+        }
     }
     // mAP@0.5 on held-out scenes.
     let mut dets: Vec<Detection> = Vec::new();

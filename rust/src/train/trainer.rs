@@ -7,6 +7,7 @@ use crate::metrics::classify::{top1, topk};
 use crate::nn::softmax_ce::{softmax_ce, softmax_ce_pixels};
 use crate::nn::{Ctx, Layer, Tensor};
 use crate::optim::{LrSchedule, Optimizer};
+use crate::telemetry::{self, metrics::DURATION_BUCKETS, trace, Event};
 
 /// Training-run configuration.
 #[derive(Clone, Debug)]
@@ -51,6 +52,12 @@ pub struct TrainRecord {
     pub final_top1: f32,
     /// Final top-5.
     pub final_top5: f32,
+    /// Learning rate at every step (mirrors `step_loss`).
+    pub step_lr: Vec<f32>,
+    /// `(phase, seconds)` accumulated over this run's tracing spans
+    /// (data_load / forward / backward / optimizer_step / eval / …).
+    /// Empty when telemetry is disabled.
+    pub phase_seconds: Vec<(String, f64)>,
 }
 
 /// Generic classification/segmentation trainer.
@@ -67,30 +74,82 @@ pub struct Trainer<'a> {
 
 impl<'a> Trainer<'a> {
     /// Train on `train_ds`, evaluating on `eval_ds`.
+    ///
+    /// When telemetry is enabled each step is traced phase by phase
+    /// (data_load / forward / backward / optimizer_step), step loss and
+    /// learning rate land in the `train/loss` and `train/lr` gauges, a
+    /// `step` event goes to the sinks, and the phase timings are folded
+    /// into [`TrainRecord::phase_seconds`].
     pub fn run(&mut self, train_ds: &dyn Dataset, eval_ds: &dyn Dataset) -> TrainRecord {
+        let telem = telemetry::enabled();
+        // Cache gauge/histogram handles once: the per-step cost is then a
+        // relaxed store, not a registry lookup.
+        let instruments = if telem {
+            let r = telemetry::registry();
+            Some((
+                r.gauge("train/loss"),
+                r.gauge("train/lr"),
+                r.histogram("train/step_seconds", &DURATION_BUCKETS),
+            ))
+        } else {
+            None
+        };
+        let spans_before = trace::stats();
         let mut rec = TrainRecord::default();
         let mut step = 0u64;
         let in_shape = train_ds.input_shape();
         for epoch in 0..self.cfg.epochs {
             let mut ep_loss = 0f64;
             let mut nb = 0usize;
-            for b in BatchIter::new(train_ds, self.cfg.batch, self.cfg.seed, epoch as u64, true) {
+            let mut batches =
+                BatchIter::new(train_ds, self.cfg.batch, self.cfg.seed, epoch as u64, true);
+            loop {
+                let step_t0 = if telem { Some(std::time::Instant::now()) } else { None };
+                let b = {
+                    let _s = trace::span("data_load");
+                    batches.next()
+                };
+                let Some(b) = b else { break };
                 let mut shape = vec![b.bs];
                 shape.extend_from_slice(&in_shape);
                 let x = Tensor::new(b.x, shape);
                 let mut ctx = Ctx::train(self.cfg.seed, step);
-                let logits = self.model.forward(&x, &mut ctx);
+                let logits = {
+                    let _s = trace::span("forward");
+                    self.model.forward(&x, &mut ctx)
+                };
                 let (loss, grad) = if self.dense {
                     softmax_ce_pixels(&logits, &b.y)
                 } else {
                     softmax_ce(&logits, &b.y)
                 };
-                self.model.backward(&grad, &mut ctx);
+                {
+                    let _s = trace::span("backward");
+                    self.model.backward(&grad, &mut ctx);
+                }
                 let lr = self.cfg.schedule.at(step);
-                let mut params = self.model.params();
-                self.opt.step(&mut params, lr, step);
-                self.opt.zero_grad(&mut params);
+                {
+                    let _s = trace::span("optimizer_step");
+                    let mut params = self.model.params();
+                    self.opt.step(&mut params, lr, step);
+                    self.opt.zero_grad(&mut params);
+                }
                 rec.step_loss.push(loss);
+                rec.step_lr.push(lr);
+                if let Some((g_loss, g_lr, h_step)) = &instruments {
+                    g_loss.set(loss as f64);
+                    g_lr.set(lr as f64);
+                    if let Some(t0) = step_t0 {
+                        h_step.observe(t0.elapsed().as_secs_f64());
+                    }
+                    telemetry::emit(
+                        Event::new("step")
+                            .with("step", step)
+                            .with("epoch", epoch)
+                            .with("loss", loss)
+                            .with("lr", lr),
+                    );
+                }
                 ep_loss += loss as f64;
                 nb += 1;
                 step += 1;
@@ -98,21 +157,35 @@ impl<'a> Trainer<'a> {
             let mean = (ep_loss / nb.max(1) as f64) as f32;
             rec.epoch_loss.push(mean);
             let do_eval = self.cfg.eval_every > 0 && (epoch + 1) % self.cfg.eval_every == 0;
+            let mut ep_event = Event::new("epoch").with("epoch", epoch).with("loss", mean);
             if do_eval {
                 self.recalibrate_bn(train_ds);
                 let acc = self.evaluate(eval_ds).0;
                 rec.eval_top1.push((epoch, acc));
+                ep_event = ep_event.with("top1", acc);
                 if self.cfg.verbose {
-                    println!("epoch {epoch:>3}  loss {mean:.4}  top1 {acc:.3}");
+                    telemetry::log(&format!("epoch {epoch:>3}  loss {mean:.4}  top1 {acc:.3}"));
                 }
             } else if self.cfg.verbose {
-                println!("epoch {epoch:>3}  loss {mean:.4}");
+                telemetry::log(&format!("epoch {epoch:>3}  loss {mean:.4}"));
+            }
+            if telem {
+                telemetry::emit(ep_event);
             }
         }
         self.recalibrate_bn(train_ds);
         let (t1, t5) = self.evaluate(eval_ds);
         rec.final_top1 = t1;
         rec.final_top5 = t5;
+        if telem {
+            rec.phase_seconds = phase_delta(&spans_before, &trace::stats());
+            telemetry::emit(
+                Event::new("run_end")
+                    .with("steps", step)
+                    .with("final_top1", t1)
+                    .with("final_top5", t5),
+            );
+        }
         rec
     }
 
@@ -122,6 +195,7 @@ impl<'a> Trainer<'a> {
     /// re-estimation). A few forward passes in train mode with a high
     /// stats momentum re-anchor them; no gradients, no weight updates.
     pub fn recalibrate_bn(&mut self, ds: &dyn Dataset) {
+        let _span = trace::span("bn_recalibrate");
         let in_shape = ds.input_shape();
         for (i, b) in BatchIter::new(ds, self.cfg.batch, 1, 9999, true).take(8).enumerate() {
             let mut shape = vec![b.bs];
@@ -144,6 +218,7 @@ impl<'a> Trainer<'a> {
     /// EXPERIMENTS.md §Deviations. The running stats are still maintained
     /// (and re-estimated post-training) for checkpoint consumers.
     pub fn evaluate(&mut self, ds: &dyn Dataset) -> (f32, f32) {
+        let _span = trace::span("eval");
         let in_shape = ds.input_shape();
         let mut t1 = 0f64;
         let mut t5 = 0f64;
@@ -192,6 +267,22 @@ impl<'a> Trainer<'a> {
         }
         ((t1 / n.max(1) as f64) as f32, (t5 / n.max(1) as f64) as f32)
     }
+}
+
+/// Per-phase seconds accumulated between two [`trace::stats`] snapshots.
+fn phase_delta(
+    before: &[(String, trace::SpanStat)],
+    after: &[(String, trace::SpanStat)],
+) -> Vec<(String, f64)> {
+    after
+        .iter()
+        .filter_map(|(name, s)| {
+            let prev = before.iter().find(|(n, _)| n == name).map(|(_, p)| *p);
+            let delta = s.total_s - prev.map_or(0.0, |p| p.total_s);
+            let count = s.count - prev.map_or(0, |p| p.count);
+            (count > 0).then(|| (name.clone(), delta))
+        })
+        .collect()
 }
 
 #[cfg(test)]

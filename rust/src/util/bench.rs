@@ -40,6 +40,24 @@ impl BenchResult {
             self.iters
         )
     }
+
+    /// Single JSON line for machine-readable perf tracking:
+    /// `{"name":…,"mean_s":…,"p50_s":…,"p95_s":…,"iters":…}`.
+    pub fn to_json_line(&self) -> String {
+        crate::telemetry::Event::new("bench")
+            .with("name", self.name.as_str())
+            .with("mean_s", self.mean_s)
+            .with("p50_s", self.p50_s)
+            .with("p95_s", self.p95_s)
+            .with("iters", self.iters)
+            .to_json()
+    }
+}
+
+/// `BENCH_JSON=1` switches every bench to emit JSON lines instead of the
+/// human-readable report.
+fn bench_json() -> bool {
+    matches!(std::env::var("BENCH_JSON").as_deref(), Ok("1") | Ok("true"))
 }
 
 /// Run `f` with warmup then timed iterations. Iteration count adapts so the
@@ -65,7 +83,11 @@ pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
         p50_s: times[times.len() / 2],
         p95_s: times[(times.len() * 95 / 100).min(times.len() - 1)],
     };
-    println!("{}", res.report());
+    if bench_json() {
+        println!("{}", res.to_json_line());
+    } else {
+        println!("{}", res.report());
+    }
     res
 }
 
@@ -93,5 +115,23 @@ mod tests {
         assert!(r.mean_s > 0.0);
         assert!(r.p50_s <= r.p95_s * 1.0001);
         assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn bench_result_json_line_round_trips() {
+        let r = BenchResult {
+            name: "igemm 256".to_string(),
+            iters: 42,
+            mean_s: 0.00125,
+            p50_s: 0.0012,
+            p95_s: 0.0015,
+        };
+        let line = r.to_json_line();
+        let j = crate::telemetry::sink::parse_json(&line).unwrap();
+        assert_eq!(j.get("name").and_then(|v| v.as_str()), Some("igemm 256"));
+        assert_eq!(j.get("mean_s").and_then(|v| v.as_f64()), Some(0.00125));
+        assert_eq!(j.get("p50_s").and_then(|v| v.as_f64()), Some(0.0012));
+        assert_eq!(j.get("p95_s").and_then(|v| v.as_f64()), Some(0.0015));
+        assert_eq!(j.get("iters").and_then(|v| v.as_f64()), Some(42.0));
     }
 }

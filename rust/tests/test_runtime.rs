@@ -4,7 +4,7 @@
 
 use intrain::dfp::rng::hash2;
 use intrain::dfp::{inverse_i32, quantize_with_emax, shared_exponent, RoundMode};
-use intrain::runtime::{f32_literal, u32_literal, Manifest, Runtime};
+use intrain::runtime::{f32_literal, u32_literal, xla, Manifest, Runtime};
 use std::path::{Path, PathBuf};
 
 fn artifacts_dir() -> Option<PathBuf> {

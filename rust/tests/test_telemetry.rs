@@ -1,0 +1,179 @@
+//! Integration tests over the telemetry subsystem end to end: a real
+//! `Trainer` run must emit per-step events with the expected keys, phase
+//! spans, and per-layer numeric probes; the JSONL sink must produce a
+//! parseable stream; and telemetry disabled must stay silent.
+//!
+//! These tests share process-global telemetry state (enabled flag, sinks,
+//! counters), so every test serializes on `LOCK` and tears down what it
+//! set up.
+
+use intrain::data::blobs::Blobs;
+use intrain::models::mlp;
+use intrain::nn::Arith;
+use intrain::optim::IntSgd;
+use intrain::telemetry::sink::{parse_json, Json, JsonlSink, MemorySink};
+use intrain::telemetry::{self, hot};
+use intrain::train::trainer::{TrainConfig, TrainRecord, Trainer};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    // A panicking test must not wedge the rest of the suite.
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A two-epoch int8 MLP run on a tiny blob dataset.
+fn run_tiny(seed: u64) -> TrainRecord {
+    let train = Blobs::new_split(120, 3, 8, 0.3, 1, 10);
+    let test = Blobs::new_split(60, 3, 8, 0.3, 1, 20);
+    let mut model = mlp(&[8, 16, 3], Arith::int8(), 3);
+    let mut opt = IntSgd::new(0.9, 0.0, seed);
+    let cfg = TrainConfig { epochs: 2, batch: 32, ..Default::default() };
+    Trainer { model: &mut model, opt: &mut opt, cfg, dense: false }.run(&train, &test)
+}
+
+fn teardown() {
+    telemetry::set_enabled(false);
+    telemetry::clear_sinks();
+    telemetry::numeric::set_sample_period(telemetry::numeric::DEFAULT_SAMPLE_PERIOD);
+}
+
+#[test]
+fn disabled_telemetry_emits_nothing() {
+    let _g = lock();
+    telemetry::set_enabled(false);
+    telemetry::clear_sinks();
+    let sink = Arc::new(MemorySink::new());
+    telemetry::add_sink(sink.clone());
+    let rec = run_tiny(7);
+    assert!(!rec.step_loss.is_empty());
+    assert!(sink.lines().is_empty(), "disabled telemetry must not emit events");
+    assert!(rec.phase_seconds.is_empty(), "phase timings only collected when enabled");
+    teardown();
+}
+
+#[test]
+fn trainer_emits_step_span_and_numeric_events() {
+    let _g = lock();
+    telemetry::reset();
+    telemetry::clear_sinks();
+    telemetry::numeric::set_sample_period(1); // probe every quantization site
+    let sink = Arc::new(MemorySink::new());
+    telemetry::add_sink(sink.clone());
+    telemetry::set_enabled(true);
+    let rec = run_tiny(7);
+    telemetry::set_enabled(false);
+    let events: Vec<Json> = sink.lines().iter().map(|l| parse_json(l).unwrap()).collect();
+    let kind = |j: &Json| j.get("ev").and_then(Json::as_str).map(str::to_string);
+
+    // Per-step events carry the full key set, one per training step.
+    let steps: Vec<&Json> =
+        events.iter().filter(|j| kind(j).as_deref() == Some("step")).collect();
+    assert_eq!(steps.len(), rec.step_loss.len(), "one step event per step");
+    assert_eq!(rec.step_lr.len(), rec.step_loss.len());
+    for s in &steps {
+        for key in ["step", "epoch", "loss", "lr", "t"] {
+            assert!(
+                s.get(key).and_then(Json::as_f64).is_some(),
+                "step event missing numeric key {key}"
+            );
+        }
+    }
+
+    // Phase spans cover the whole training loop.
+    let span_names: Vec<String> = events
+        .iter()
+        .filter(|j| kind(j).as_deref() == Some("span"))
+        .filter_map(|j| j.get("name").and_then(Json::as_str).map(str::to_string))
+        .collect();
+    for phase in ["data_load", "forward", "backward", "optimizer_step", "eval", "bn_recalibrate"] {
+        assert!(span_names.iter().any(|n| n == phase), "missing span {phase}");
+    }
+    assert!(rec.phase_seconds.iter().any(|(n, s)| n == "forward" && *s >= 0.0));
+
+    // Numeric probes report per-layer DFP health.
+    let numeric: Vec<&Json> =
+        events.iter().filter(|j| kind(j).as_deref() == Some("numeric")).collect();
+    assert!(!numeric.is_empty(), "numeric probes should fire at sample period 1");
+    assert!(numeric
+        .iter()
+        .any(|j| j.get("layer").and_then(Json::as_str).is_some_and(|l| l.starts_with("linear/"))));
+    assert!(numeric
+        .iter()
+        .any(|j| j.get("layer").and_then(Json::as_str).is_some_and(|l| l.starts_with("isgd/"))));
+    for j in &numeric {
+        for key in ["sat_frac", "zero_frac", "e_max", "n"] {
+            assert!(
+                j.get(key).and_then(Json::as_f64).is_some(),
+                "numeric event missing key {key}"
+            );
+        }
+    }
+
+    // Hot counters saw integer GEMM traffic, and the summary renders.
+    assert!(hot::snapshot().iter().any(|(n, v)| *n == "gemm/calls" && *v > 0));
+    let table = telemetry::summary_table();
+    assert!(table.contains("telemetry summary"));
+    assert!(table.contains("forward"));
+    assert!(table.contains("train/loss"));
+    teardown();
+}
+
+#[test]
+fn jsonl_sink_streams_a_parseable_run() {
+    let _g = lock();
+    telemetry::reset();
+    telemetry::clear_sinks();
+    let path = std::env::temp_dir().join("intrain_test_run.jsonl");
+    telemetry::add_sink(Arc::new(JsonlSink::create(&path).unwrap()));
+    telemetry::set_enabled(true);
+    run_tiny(11);
+    telemetry::flush();
+    telemetry::set_enabled(false);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut n_steps = 0usize;
+    let mut n_spans = 0usize;
+    for line in text.lines() {
+        let j = parse_json(line).unwrap_or_else(|e| panic!("bad JSONL line {line:?}: {e}"));
+        match j.get("ev").and_then(Json::as_str) {
+            Some("step") => {
+                assert!(j.get("loss").and_then(Json::as_f64).is_some());
+                n_steps += 1;
+            }
+            Some("span") => n_spans += 1,
+            _ => {}
+        }
+    }
+    assert!(n_steps > 0, "no step events in JSONL stream");
+    assert!(n_spans > 0, "no span events in JSONL stream");
+    teardown();
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn verbose_progress_routes_through_sink() {
+    let _g = lock();
+    telemetry::clear_sinks();
+    let sink = Arc::new(MemorySink::new());
+    telemetry::add_sink(sink.clone());
+    telemetry::set_enabled(true);
+    let train = Blobs::new_split(120, 3, 8, 0.3, 1, 10);
+    let mut model = mlp(&[8, 16, 3], Arith::int8(), 3);
+    let mut opt = IntSgd::new(0.9, 0.0, 5);
+    let cfg = TrainConfig { epochs: 1, batch: 32, verbose: true, ..Default::default() };
+    Trainer { model: &mut model, opt: &mut opt, cfg, dense: false }.run(&train, &train);
+    telemetry::set_enabled(false);
+    let logs: Vec<Json> = sink
+        .lines()
+        .iter()
+        .map(|l| parse_json(l).unwrap())
+        .filter(|j| j.get("ev").and_then(Json::as_str) == Some("log"))
+        .collect();
+    assert!(!logs.is_empty(), "verbose epoch line should become a log event");
+    assert!(logs.iter().any(|j| j
+        .get("msg")
+        .and_then(Json::as_str)
+        .is_some_and(|m| m.contains("epoch"))));
+    teardown();
+}
