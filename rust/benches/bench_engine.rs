@@ -1,0 +1,94 @@
+//! §Perf: execution-engine microbenches — the GEMM kernels behind every
+//! layer (all three contraction kinds) plus the im2col convolution path,
+//! reported in MACs/s. `BENCH_JSON=1` emits machine-readable lines (the CI
+//! bench-smoke step archives them as the perf baseline).
+
+use intrain::dfp::conv::{iconv2d, ConvShape};
+use intrain::dfp::exec::{self, GemmPlan, MatKind};
+use intrain::dfp::{quantize, RoundMode};
+use intrain::util::bench::{bench_macs, row, section};
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = intrain::dfp::rng::Rng::new(seed);
+    (0..n).map(|_| rng.next_gaussian()).collect()
+}
+
+fn randi8(n: usize, seed: u64) -> Vec<i8> {
+    randv(n, seed).iter().map(|&x| (x * 50.0) as i8).collect()
+}
+
+fn main() {
+    section(&format!("engine GEMM int8×int8→int32 ({} threads)", exec::pool().threads()));
+    for (m, k, n) in [(128, 128, 128), (256, 256, 256), (512, 512, 512)] {
+        for kind in [MatKind::AB, MatKind::ATB, MatKind::ABT] {
+            let plan = GemmPlan::new(kind, (m, k, n));
+            let a = randi8(plan.a_len(), 2);
+            let b = randi8(plan.b_len(), 3);
+            let mut out = vec![0i32; plan.out_len()];
+            let r = bench_macs(
+                &format!("engine/gemm_i8/{kind:?}/{m}x{k}x{n}"),
+                0.4,
+                plan.macs() as f64,
+                || {
+                    exec::gemm_i8(plan, &a, &b, &mut out);
+                    std::hint::black_box(&out);
+                },
+            );
+            row(&[("GMAC/s", format!("{:.2}", r.gmacs().unwrap_or(0.0)))]);
+        }
+    }
+
+    section("engine GEMM f32 (same kernels, float baseline)");
+    {
+        let (m, k, n) = (256, 256, 256);
+        for kind in [MatKind::AB, MatKind::ATB, MatKind::ABT] {
+            let plan = GemmPlan::new(kind, (m, k, n));
+            let a = randv(plan.a_len(), 4);
+            let b = randv(plan.b_len(), 5);
+            let mut out = vec![0f32; plan.out_len()];
+            let r = bench_macs(
+                &format!("engine/gemm_f32/{kind:?}/{m}x{k}x{n}"),
+                0.4,
+                plan.macs() as f64,
+                || {
+                    exec::gemm_f32(plan, &a, &b, &mut out);
+                    std::hint::black_box(&out);
+                },
+            );
+            row(&[("GMAC/s", format!("{:.2}", r.gmacs().unwrap_or(0.0)))]);
+        }
+    }
+
+    section("engine im2col conv2d (int8)");
+    for (c_in, hw, c_out, kk) in [(16, 16, 32, 3), (32, 32, 64, 3)] {
+        let s = ConvShape {
+            n: 8,
+            c_in,
+            h: hw,
+            w: hw,
+            c_out,
+            kh: kk,
+            kw: kk,
+            stride: 1,
+            pad: 1,
+        };
+        let qx = quantize(&randv(s.n * s.in_img(), 6), 7, RoundMode::Nearest);
+        let qw = quantize(&randv(s.c_out * s.patch(), 7), 7, RoundMode::Nearest);
+        let macs = (s.n * s.c_out * s.patch() * s.h_out() * s.w_out()) as f64;
+        let r = bench_macs(
+            &format!("engine/iconv2d/{c_in}x{hw}x{hw}->{c_out}/k{kk}"),
+            0.4,
+            macs,
+            || {
+                let out = iconv2d(&qx, &qw, &s);
+                exec::recycle_i32(std::hint::black_box(out).acc);
+            },
+        );
+        row(&[("GMAC/s", format!("{:.2}", r.gmacs().unwrap_or(0.0)))]);
+    }
+
+    // Steady-state guarantee: the worker pool spawned once up front — the
+    // bench loops above must not have created any further threads.
+    let spawned = exec::spawn_count();
+    println!("\npool threads spawned over run: {spawned} (steady state: no per-call spawns)");
+}

@@ -6,6 +6,7 @@
 //! the payload-level `im2col`/`col2im` pair is also what the backward pass
 //! uses (input gradients scatter back through `col2im`).
 
+use super::exec;
 use super::gemm::{igemm_into, IgemmOut};
 use super::tensor::DfpTensor;
 
@@ -135,8 +136,8 @@ pub fn iconv2d(input: &DfpTensor, weight: &DfpTensor, s: &ConvShape) -> IgemmOut
     assert_eq!(weight.len(), s.c_out * s.patch(), "weight size mismatch");
     let (ho, wo) = (s.h_out(), s.w_out());
     let pix = ho * wo;
-    let mut acc = vec![0i32; s.n * s.out_img()];
-    let mut col = vec![0i8; s.patch() * pix];
+    let mut acc = exec::take_i32_vec(s.n * s.out_img());
+    let mut col = exec::scratch_i8(s.patch() * pix);
     for b in 0..s.n {
         let img = &input.payload[b * s.in_img()..(b + 1) * s.in_img()];
         im2col_i8(img, s, &mut col);

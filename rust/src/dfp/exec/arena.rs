@@ -1,0 +1,273 @@
+//! Scratch arena: size-classed, reusable buffers for the execution engine.
+//!
+//! Every compute layer used to allocate its int32 accumulators, i8 im2col
+//! columns, and quantization staging fresh on each call — megabytes of
+//! `Vec` churn per training step. The arena keeps per-thread free lists of
+//! recycled buffers (one pool per element class: `i8`, `i32`, `f32`), so a
+//! steady-state step reuses the same allocations.
+//!
+//! Buffers are handed out either as RAII guards ([`ScratchI8`] & friends,
+//! returned to the pool on drop) or as plain `Vec`s ([`take_i8_vec`] /
+//! [`recycle_i8`]) for call sites that thread the buffer through an owning
+//! struct (e.g. [`crate::dfp::tensor::DfpTensor`] payloads from the
+//! quantizer). Capacities are rounded up to a power of two so nearby
+//! request sizes share a class instead of fragmenting the free list.
+//!
+//! Telemetry: each class publishes its high-water mark of outstanding bytes
+//! through the `exec/arena_{i8,i32,f32}_hwm_bytes` gauges when telemetry is
+//! enabled, and [`stats`] exposes the same numbers (plus reuse/alloc
+//! counts) for tests and reports.
+
+use std::cell::RefCell;
+
+/// Buffers larger than this are never kept on the free list (returned to
+/// the allocator instead) — protects against one huge transient pinning
+/// memory for the rest of the run.
+const MAX_KEEP_BYTES: usize = 64 << 20;
+
+/// Maximum buffers kept per class free list.
+const MAX_FREE: usize = 32;
+
+/// Minimum buffer capacity handed out (elements).
+const MIN_CAP: usize = 64;
+
+/// Per-class accounting snapshot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClassStats {
+    /// Buffers currently parked on the free list.
+    pub free: usize,
+    /// Bytes currently checked out of this class.
+    pub outstanding_bytes: usize,
+    /// High-water mark of `outstanding_bytes` since the last [`reset`].
+    pub hwm_bytes: usize,
+    /// Checkouts served from the free list.
+    pub reuses: u64,
+    /// Checkouts that had to allocate.
+    pub allocs: u64,
+}
+
+/// Arena snapshot across all element classes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ArenaStats {
+    /// `i8` class (im2col columns, quantization staging).
+    pub i8c: ClassStats,
+    /// `i32` class (GEMM accumulators, col2im scatter).
+    pub i32c: ClassStats,
+    /// `f32` class (inverse-mapped staging, float-path scratch).
+    pub f32c: ClassStats,
+}
+
+struct ClassPool<T> {
+    free: Vec<Vec<T>>,
+    stats: ClassStats,
+    gauge: &'static str,
+}
+
+impl<T: Default + Clone> ClassPool<T> {
+    fn new(gauge: &'static str) -> ClassPool<T> {
+        ClassPool { free: Vec::new(), stats: ClassStats::default(), gauge }
+    }
+
+    fn take(&mut self, len: usize) -> Vec<T> {
+        // Smallest free buffer that fits; else allocate at the size class.
+        let mut best: Option<usize> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            if b.capacity() < len {
+                continue;
+            }
+            best = match best {
+                Some(j) if self.free[j].capacity() <= b.capacity() => Some(j),
+                _ => Some(i),
+            };
+        }
+        let mut v = match best {
+            Some(i) => {
+                self.stats.reuses += 1;
+                self.free.swap_remove(i)
+            }
+            None => {
+                self.stats.allocs += 1;
+                Vec::with_capacity(len.next_power_of_two().max(MIN_CAP))
+            }
+        };
+        v.clear();
+        v.resize(len, T::default());
+        self.stats.outstanding_bytes += v.capacity() * std::mem::size_of::<T>();
+        if self.stats.outstanding_bytes > self.stats.hwm_bytes {
+            self.stats.hwm_bytes = self.stats.outstanding_bytes;
+            if crate::telemetry::enabled() {
+                crate::telemetry::registry().gauge(self.gauge).set(self.stats.hwm_bytes as f64);
+            }
+        }
+        v
+    }
+
+    fn put(&mut self, v: Vec<T>) {
+        let bytes = v.capacity() * std::mem::size_of::<T>();
+        self.stats.outstanding_bytes = self.stats.outstanding_bytes.saturating_sub(bytes);
+        if bytes > 0 && bytes <= MAX_KEEP_BYTES && self.free.len() < MAX_FREE {
+            self.free.push(v);
+        }
+        self.stats.free = self.free.len();
+    }
+
+    fn reset(&mut self) {
+        self.free.clear();
+        self.stats = ClassStats::default();
+    }
+
+    fn snapshot(&self) -> ClassStats {
+        ClassStats { free: self.free.len(), ..self.stats }
+    }
+}
+
+struct Arena {
+    i8p: ClassPool<i8>,
+    i32p: ClassPool<i32>,
+    f32p: ClassPool<f32>,
+}
+
+impl Arena {
+    fn new() -> Arena {
+        Arena {
+            i8p: ClassPool::new("exec/arena_i8_hwm_bytes"),
+            i32p: ClassPool::new("exec/arena_i32_hwm_bytes"),
+            f32p: ClassPool::new("exec/arena_f32_hwm_bytes"),
+        }
+    }
+}
+
+thread_local! {
+    static ARENA: RefCell<Arena> = RefCell::new(Arena::new());
+}
+
+/// Snapshot of this thread's arena accounting.
+pub fn stats() -> ArenaStats {
+    ARENA.with(|a| {
+        let a = a.borrow();
+        ArenaStats {
+            i8c: a.i8p.snapshot(),
+            i32c: a.i32p.snapshot(),
+            f32c: a.f32p.snapshot(),
+        }
+    })
+}
+
+/// Drop every parked buffer and zero the accounting for this thread
+/// (lifecycle tests / fresh runs).
+pub fn reset() {
+    ARENA.with(|a| {
+        let mut a = a.borrow_mut();
+        a.i8p.reset();
+        a.i32p.reset();
+        a.f32p.reset();
+    });
+}
+
+macro_rules! arena_class {
+    ($t:ty, $field:ident, $guard:ident, $scratch:ident, $take:ident, $recycle:ident, $doc:expr) => {
+        #[doc = concat!("Check a zeroed `", stringify!($t), "` buffer (", $doc, ") out of the arena as a plain `Vec`; pair with [`", stringify!($recycle), "`].")]
+        pub fn $take(len: usize) -> Vec<$t> {
+            ARENA.with(|a| a.borrow_mut().$field.take(len))
+        }
+
+        #[doc = concat!("Return a `Vec<", stringify!($t), ">` to the arena free list.")]
+        pub fn $recycle(v: Vec<$t>) {
+            ARENA.with(|a| a.borrow_mut().$field.put(v));
+        }
+
+        #[doc = concat!("RAII scratch buffer of `", stringify!($t), "` — derefs to a slice, returns to the arena on drop.")]
+        pub struct $guard(Vec<$t>);
+
+        impl std::ops::Deref for $guard {
+            type Target = [$t];
+            fn deref(&self) -> &[$t] {
+                &self.0
+            }
+        }
+
+        impl std::ops::DerefMut for $guard {
+            fn deref_mut(&mut self) -> &mut [$t] {
+                &mut self.0
+            }
+        }
+
+        impl Drop for $guard {
+            fn drop(&mut self) {
+                $recycle(std::mem::take(&mut self.0));
+            }
+        }
+
+        #[doc = concat!("Borrow a zeroed `", stringify!($t), "` scratch buffer (", $doc, ") from this thread's arena.")]
+        pub fn $scratch(len: usize) -> $guard {
+            $guard($take(len))
+        }
+    };
+}
+
+arena_class!(
+    i8,
+    i8p,
+    ScratchI8,
+    scratch_i8,
+    take_i8_vec,
+    recycle_i8,
+    "im2col columns, payload staging"
+);
+arena_class!(i32, i32p, ScratchI32, scratch_i32, take_i32_vec, recycle_i32, "GEMM accumulators");
+arena_class!(f32, f32p, ScratchF32, scratch_f32, take_f32_vec, recycle_f32, "float staging");
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_is_zeroed_and_reused() {
+        reset();
+        let ptr;
+        {
+            let mut s = scratch_i32(1000);
+            assert!(s.iter().all(|&v| v == 0));
+            s[0] = 42;
+            ptr = s.as_ptr() as usize;
+        }
+        // Second checkout of a fitting size reuses the same allocation,
+        // freshly zeroed.
+        let s2 = scratch_i32(900);
+        assert_eq!(s2.as_ptr() as usize, ptr, "buffer should be recycled");
+        assert!(s2.iter().all(|&v| v == 0));
+        let st = stats();
+        assert_eq!(st.i32c.reuses, 1);
+        assert_eq!(st.i32c.allocs, 1);
+    }
+
+    #[test]
+    fn outstanding_and_hwm_track_checkouts() {
+        reset();
+        let a = scratch_i8(1 << 10);
+        let b = scratch_i8(1 << 12);
+        let st = stats();
+        assert!(st.i8c.outstanding_bytes >= (1 << 10) + (1 << 12));
+        assert_eq!(st.i8c.hwm_bytes, st.i8c.outstanding_bytes);
+        let hwm = st.i8c.hwm_bytes;
+        drop(a);
+        drop(b);
+        let st = stats();
+        assert_eq!(st.i8c.outstanding_bytes, 0);
+        assert_eq!(st.i8c.hwm_bytes, hwm, "hwm persists after release");
+        reset();
+        assert_eq!(stats().i8c.hwm_bytes, 0);
+    }
+
+    #[test]
+    fn vec_take_recycle_roundtrip() {
+        reset();
+        let v = take_f32_vec(100);
+        assert_eq!(v.len(), 100);
+        recycle_f32(v);
+        assert_eq!(stats().f32c.free, 1);
+        let v2 = take_f32_vec(50);
+        assert_eq!(stats().f32c.reuses, 1);
+        drop(v2); // dropped without recycling: arena just forgets it
+    }
+}

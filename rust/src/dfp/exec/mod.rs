@@ -1,0 +1,262 @@
+//! Unified integer execution engine: one kernel path for every layer.
+//!
+//! Every compute layer used to reach the int8 GEMM its own way — `igemm`
+//! spawned fresh scoped threads per call, conv kept private im2col buffers,
+//! attention hand-rolled its contractions. The engine centralizes the three
+//! resources they were each reinventing:
+//!
+//! * **[`pool`]** — a persistent worker pool (spawned once, panel-queue
+//!   work stealing over row blocks, `PALLAS_THREADS` override). Zero
+//!   per-call thread spawns on the steady-state training path.
+//! * **[`arena`]** — size-classed reusable scratch (int32 accumulators,
+//!   i8 im2col columns, quantization staging) with high-water-mark gauges.
+//! * **plan dispatch** — layers describe *what* to contract
+//!   ([`GemmPlan`]: a [`MatKind`] plus dims); the engine owns blocking,
+//!   threading and memory. The blocked kernels live in
+//!   [`crate::dfp::gemm`] next to the scalar reference kernels they are
+//!   bit-identical to (integer accumulation is exact under any order).
+//!
+//! Layers reach the engine through the [`ExecCtx`] handle threaded through
+//! [`crate::nn::Ctx`], so alternate backends (e.g. a real
+//! `runtime/xla` device) can slot in underneath without touching layer
+//! code.
+
+pub mod arena;
+pub mod pool;
+
+pub use arena::{
+    recycle_f32, recycle_i32, recycle_i8, scratch_f32, scratch_i32, scratch_i8, take_f32_vec,
+    take_i32_vec, take_i8_vec, ArenaStats, ScratchF32, ScratchI32, ScratchI8,
+};
+pub use pool::{pool, spawn_count, Pool};
+
+use crate::dfp::gemm;
+
+/// Which contraction to perform (avoids materializing transposes):
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatKind {
+    /// `C[m×n] = A[m×k]·B[k×n]`, dims = (m, k, n).
+    AB,
+    /// `C[m×n] = Aᵀ·B` with `A[r×m]`, `B[r×n]`, dims = (r, m, n)
+    /// (weight-gradient shape, Eq. 15).
+    ATB,
+    /// `C[m×p] = A·Bᵀ` with `A[m×n]`, `B[p×n]`, dims = (m, n, p)
+    /// (input-gradient shape).
+    ABT,
+}
+
+impl MatKind {
+    /// Output element count for given dims.
+    pub fn out_len(self, d: (usize, usize, usize)) -> usize {
+        match self {
+            MatKind::AB => d.0 * d.2,
+            MatKind::ATB => d.1 * d.2,
+            MatKind::ABT => d.0 * d.2,
+        }
+    }
+}
+
+/// A contraction described as data: the layer states *what* to multiply,
+/// the engine decides blocking and threading.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmPlan {
+    /// Contraction kind.
+    pub kind: MatKind,
+    /// Kind-specific dims (see [`MatKind`]).
+    pub dims: (usize, usize, usize),
+}
+
+impl GemmPlan {
+    /// New plan.
+    pub fn new(kind: MatKind, dims: (usize, usize, usize)) -> GemmPlan {
+        GemmPlan { kind, dims }
+    }
+
+    /// Expected `A` operand length.
+    /// AB: m×k, ATB: r×m, ABT: m×n — all `dims.0 × dims.1`.
+    pub fn a_len(&self) -> usize {
+        self.dims.0 * self.dims.1
+    }
+
+    /// Expected `B` operand length.
+    pub fn b_len(&self) -> usize {
+        let (d0, d1, d2) = self.dims;
+        match self.kind {
+            MatKind::AB => d1 * d2,  // k×n
+            MatKind::ATB => d0 * d2, // r×n
+            MatKind::ABT => d2 * d1, // p×n
+        }
+    }
+
+    /// Output element count.
+    pub fn out_len(&self) -> usize {
+        self.kind.out_len(self.dims)
+    }
+
+    /// Multiply-accumulate count — the engine's parallelism threshold.
+    pub fn macs(&self) -> usize {
+        let (d0, d1, d2) = self.dims;
+        d0 * d1 * d2
+    }
+
+    /// Parallel decomposition: (output rows to split, row width).
+    fn par_shape(&self) -> (usize, usize) {
+        let (d0, d1, d2) = self.dims;
+        match self.kind {
+            MatKind::AB => (d0, d2),
+            MatKind::ATB => (d1, d2),
+            MatKind::ABT => (d0, d2),
+        }
+    }
+
+    fn check(&self, a_len: usize, b_len: usize, out_len: usize) {
+        assert_eq!(a_len, self.a_len(), "A operand size mismatch for {:?}", self);
+        assert_eq!(b_len, self.b_len(), "B operand size mismatch for {:?}", self);
+        assert_eq!(out_len, self.out_len(), "output size mismatch for {:?}", self);
+    }
+}
+
+/// MAC threshold above which a contraction fans out over the pool.
+const PAR_THRESHOLD: usize = 1 << 18;
+
+/// Row blocks per pool thread: finer than one block per thread so the
+/// panel queue can rebalance uneven progress (work stealing).
+const BLOCKS_PER_THREAD: usize = 4;
+
+/// Raw output pointer shared across pool workers. Sound because each row
+/// block writes a disjoint `[row0·width, (row0+rows)·width)` window.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+macro_rules! engine_gemm {
+    ($name:ident, $elem:ty, $acc:ty, $ab:path, $atb:path, $abt:path) => {
+        /// Execute a contraction plan on raw payloads into a caller (or
+        /// arena) output buffer. Blocked; runs on the persistent pool above
+        /// the MAC threshold. Bit-identical to the scalar reference
+        /// kernels in [`crate::dfp::gemm`].
+        pub fn $name(plan: GemmPlan, a: &[$elem], b: &[$elem], out: &mut [$acc]) {
+            plan.check(a.len(), b.len(), out.len());
+            let (rows, width) = plan.par_shape();
+            if rows == 0 || width == 0 {
+                return;
+            }
+            let (d0, d1, d2) = plan.dims;
+            let run_block = move |a: &[$elem], b: &[$elem], row0: usize, cnt: usize, o: &mut [$acc]| {
+                match plan.kind {
+                    MatKind::AB => $ab(a, b, row0, cnt, d1, d2, o),
+                    MatKind::ATB => $atb(a, b, d0, d1, d2, row0, cnt, o),
+                    MatKind::ABT => $abt(a, b, d1, d2, row0, cnt, o),
+                }
+            };
+            let p = pool();
+            if plan.macs() < PAR_THRESHOLD || p.threads() == 1 || rows == 1 {
+                run_block(a, b, 0, rows, out);
+                return;
+            }
+            let blocks = (p.threads() * BLOCKS_PER_THREAD).min(rows).max(1);
+            let rows_per = rows.div_ceil(blocks);
+            let blocks = rows.div_ceil(rows_per);
+            let optr = SendPtr(out.as_mut_ptr());
+            p.run(blocks, &|blk| {
+                let row0 = blk * rows_per;
+                let cnt = rows_per.min(rows - row0);
+                // Disjoint per-block output window (see SendPtr).
+                let o = unsafe {
+                    std::slice::from_raw_parts_mut(optr.0.add(row0 * width), cnt * width)
+                };
+                run_block(a, b, row0, cnt, o);
+            });
+        }
+    };
+}
+
+engine_gemm!(
+    gemm_i8,
+    i8,
+    i32,
+    gemm::kernel_ab_i8,
+    gemm::kernel_atb_i8,
+    gemm::kernel_abt_i8
+);
+engine_gemm!(
+    gemm_f32,
+    f32,
+    f32,
+    gemm::kernel_ab_f32,
+    gemm::kernel_atb_f32,
+    gemm::kernel_abt_f32
+);
+
+/// Return a [`crate::dfp::tensor::DfpTensor`]'s payload to the arena once
+/// the contraction that consumed it is done (quantization-staging reuse).
+pub fn recycle_dfp(t: crate::dfp::tensor::DfpTensor) {
+    arena::recycle_i8(t.payload);
+}
+
+/// Handle to the execution engine, threaded through [`crate::nn::Ctx`] so
+/// every layer reaches the same pool/arena/kernel substrate. Stateless
+/// today (the engine is process-global); the indirection is the seam where
+/// per-device or per-stream state lands later.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecCtx;
+
+impl ExecCtx {
+    /// Integer contraction on i8 payloads → i32 accumulators.
+    pub fn gemm_i8(&self, plan: GemmPlan, a: &[i8], b: &[i8], out: &mut [i32]) {
+        gemm_i8(plan, a, b, out)
+    }
+
+    /// Float contraction (the fp32 baseline path).
+    pub fn gemm_f32(&self, plan: GemmPlan, a: &[f32], b: &[f32], out: &mut [f32]) {
+        gemm_f32(plan, a, b, out)
+    }
+
+    /// Effective pool size.
+    pub fn threads(&self) -> usize {
+        pool().threads()
+    }
+
+    /// Borrow zeroed i32 scratch (accumulators) from the arena.
+    pub fn scratch_i32(&self, len: usize) -> ScratchI32 {
+        scratch_i32(len)
+    }
+
+    /// Borrow zeroed i8 scratch (im2col columns, payload staging).
+    pub fn scratch_i8(&self, len: usize) -> ScratchI8 {
+        scratch_i8(len)
+    }
+
+    /// Borrow zeroed f32 scratch.
+    pub fn scratch_f32(&self, len: usize) -> ScratchF32 {
+        scratch_f32(len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_shapes() {
+        let p = GemmPlan::new(MatKind::AB, (3, 4, 5));
+        assert_eq!((p.a_len(), p.b_len(), p.out_len(), p.macs()), (12, 20, 15, 60));
+        let p = GemmPlan::new(MatKind::ATB, (3, 4, 5));
+        assert_eq!((p.a_len(), p.b_len(), p.out_len()), (12, 15, 20));
+        let p = GemmPlan::new(MatKind::ABT, (3, 4, 5));
+        assert_eq!((p.a_len(), p.b_len(), p.out_len()), (12, 20, 15));
+    }
+
+    #[test]
+    fn engine_matches_reference_small() {
+        let a: Vec<i8> = (0..6).map(|i| i as i8 - 3).collect(); // 2×3
+        let b: Vec<i8> = (0..12).map(|i| (i as i8) - 5).collect(); // 3×4
+        let plan = GemmPlan::new(MatKind::AB, (2, 3, 4));
+        let mut got = vec![0i32; 8];
+        gemm_i8(plan, &a, &b, &mut got);
+        let mut want = vec![0i32; 8];
+        crate::dfp::gemm::igemm_ref(&a, &b, 2, 3, 4, &mut want);
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,240 @@
+//! Persistent worker pool for the integer execution engine.
+//!
+//! The pre-engine kernels spawned fresh `std::thread::scope` workers on
+//! every large GEMM — thread creation dominated the hot path the telemetry
+//! spans measure. This pool is spawned **once** (first parallel kernel),
+//! after which the steady-state training path performs **zero thread
+//! spawns**: a job is published as an item count plus a `Fn(usize)` task,
+//! and workers pull item indices from a shared atomic counter (panel-queue
+//! work stealing — fast threads automatically take more row blocks).
+//!
+//! Sizing: `PALLAS_THREADS` overrides; otherwise the full
+//! `available_parallelism` is used (the historical `.min(16)` cap is gone).
+//! The effective size is exported through the `exec/pool_threads` telemetry
+//! gauge and [`Pool::threads`].
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Total OS threads ever spawned by the engine pool. Steady-state training
+/// must not move this — asserted by `tests/test_exec.rs`.
+static SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of OS threads the engine has spawned since process start.
+pub fn spawn_count() -> usize {
+    SPAWNED.load(Ordering::Relaxed)
+}
+
+/// One published job: a task over `0..n` item indices. Workers clone the
+/// `Arc` and pull indices from `next`, so a straggler from an old job can
+/// never consume indices belonging to a newer one.
+struct Job {
+    /// Type-erased task pointer, transmuted to `'static`. Sound because
+    /// [`Pool::run`] does not return until `completed == n`, and no worker
+    /// dereferences the pointer after claiming an index `>= n`.
+    task: *const (dyn Fn(usize) + Sync),
+    n: usize,
+    next: AtomicUsize,
+    completed: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Pull and execute items until the queue is drained. Returns the
+    /// number of items this thread completed.
+    fn work(&self) -> usize {
+        let task = unsafe { &*self.task };
+        let mut done = 0usize;
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                return done;
+            }
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(i)));
+            if r.is_err() {
+                self.panicked.store(true, Ordering::Relaxed);
+            }
+            self.completed.fetch_add(1, Ordering::AcqRel);
+            done += 1;
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.completed.load(Ordering::Acquire) >= self.n
+    }
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+struct State {
+    /// Monotonically increasing job id; workers track the last id they
+    /// drained so a spurious wakeup never re-runs a finished job.
+    epoch: u64,
+    job: Option<Arc<Job>>,
+}
+
+/// The persistent worker pool. One global instance (see [`pool`]); the
+/// calling thread always participates, so `threads() == 1` means "no
+/// workers, run inline".
+pub struct Pool {
+    shared: Arc<Shared>,
+    threads: usize,
+}
+
+/// Resolve the pool size: `PALLAS_THREADS` (clamped to ≥ 1) wins, else the
+/// machine's full available parallelism.
+fn resolve_threads() -> usize {
+    if let Ok(v) = std::env::var("PALLAS_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+impl Pool {
+    fn new() -> Pool {
+        let threads = resolve_threads();
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { epoch: 0, job: None }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        for i in 1..threads {
+            let sh = shared.clone();
+            let b = std::thread::Builder::new().name(format!("pallas-worker-{i}"));
+            if b.spawn(move || worker_loop(&sh)).is_ok() {
+                SPAWNED.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        crate::telemetry::registry().gauge("exec/pool_threads").set(threads as f64);
+        Pool { shared, threads }
+    }
+
+    /// Effective pool size (workers + the participating caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `task(i)` for every `i in 0..n`, distributing items over the
+    /// pool. Items must write disjoint state. Blocks until all items
+    /// complete; the caller participates in the work.
+    pub fn run(&self, n: usize, task: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        if self.threads <= 1 || n == 1 {
+            for i in 0..n {
+                task(i);
+            }
+            return;
+        }
+        // Erase the task's lifetime: `run` owns the job's full lifecycle
+        // (see the safety note on `Job::task`).
+        let task: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(task) };
+        let job = Arc::new(Job {
+            task: task as *const _,
+            n,
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(job.clone());
+            self.shared.work_cv.notify_all();
+        }
+        job.work();
+        let mut st = self.shared.state.lock().unwrap();
+        while !job.is_done() {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+        drop(st);
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("engine pool: a worker task panicked");
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if let Some(j) = st.job.clone() {
+                        break j;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        job.work();
+        if job.is_done() {
+            // Hold the lock while notifying so the caller cannot miss the
+            // wakeup between its `is_done` check and `wait`.
+            let _st = shared.state.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// The process-wide engine pool, spawned on first use.
+pub fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(Pool::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_covers_every_item_exactly_once() {
+        let hits: Vec<AtomicU64> = (0..257).map(|_| AtomicU64::new(0)).collect();
+        pool().run(hits.len(), &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "item {i}");
+        }
+    }
+
+    #[test]
+    fn run_is_reusable_without_new_spawns() {
+        pool().run(64, &|_| {});
+        let spawned = spawn_count();
+        for _ in 0..50 {
+            pool().run(64, &|_| {});
+        }
+        assert_eq!(spawn_count(), spawned, "steady-state runs must not spawn threads");
+    }
+
+    #[test]
+    fn zero_and_single_item_jobs() {
+        pool().run(0, &|_| panic!("must not run"));
+        let hit = AtomicU64::new(0);
+        pool().run(1, &|i| {
+            assert_eq!(i, 0);
+            hit.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn threads_at_least_one() {
+        assert!(pool().threads() >= 1);
+    }
+}

@@ -9,13 +9,28 @@
 //! pass of a linear layer needs `Aᵀ·B` and `A·Bᵀ`; dedicated entry points
 //! avoid materializing transposes.
 //!
-//! The kernel is cache-blocked and optionally multithreaded over row
-//! panels (std::thread scoped threads; no external deps available).
+//! This module holds exactly two tiers of kernel, both consumed by the
+//! execution engine ([`super::exec`]):
+//!
+//! * **scalar reference kernels** (`*_ref`) — naive triple loops, the
+//!   ground truth the property tests compare against;
+//! * **blocked row kernels** (`kernel_*`) — cache-blocked, called per row
+//!   block by [`super::exec::gemm_i8`] / [`super::exec::gemm_f32`], which
+//!   own threading (persistent pool) and scratch (arena). Integer
+//!   accumulation is exact and order-independent, so the blocked kernels
+//!   are bit-identical to the references by construction.
+//!
+//! The public `igemm*` entry points below are thin wrappers over the
+//! engine, kept for API stability.
 
+use super::exec::{self, GemmPlan, MatKind};
 use super::tensor::DfpTensor;
 
 /// Output of an integer GEMM: int32 accumulators plus the scale exponent
 /// `k` such that `value = acc × 2^k` (exponents added per Figure 2).
+///
+/// The accumulator `Vec` is drawn from the engine arena; call sites that
+/// finish with it can hand it back via [`exec::recycle_i32`].
 pub struct IgemmOut {
     /// Row-major `m×n` accumulators.
     pub acc: Vec<i32>,
@@ -23,19 +38,12 @@ pub struct IgemmOut {
     pub scale_exp: i32,
 }
 
-/// Threshold (in MACs) above which the GEMM fans out over threads.
-const PAR_THRESHOLD: usize = 1 << 18;
-
-fn num_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
-}
-
 /// Plain integer GEMM: `C[m×n] = A[m×k] · B[k×n]`.
 pub fn igemm(a: &DfpTensor, b: &DfpTensor, m: usize, k: usize, n: usize) -> IgemmOut {
     assert_eq!(a.len(), m * k, "A payload size mismatch");
     assert_eq!(b.len(), k * n, "B payload size mismatch");
-    let mut acc = vec![0i32; m * n];
-    igemm_into(&a.payload, &b.payload, m, k, n, &mut acc);
+    let mut acc = exec::take_i32_vec(m * n);
+    exec::gemm_i8(GemmPlan::new(MatKind::AB, (m, k, n)), &a.payload, &b.payload, &mut acc);
     IgemmOut { acc, scale_exp: a.scale_exp() + b.scale_exp() }
 }
 
@@ -44,24 +52,8 @@ pub fn igemm(a: &DfpTensor, b: &DfpTensor, m: usize, k: usize, n: usize) -> Igem
 pub fn igemm_at_b(a: &DfpTensor, b: &DfpTensor, m_a: usize, k_a: usize, n: usize) -> IgemmOut {
     assert_eq!(a.len(), m_a * k_a);
     assert_eq!(b.len(), m_a * n);
-    let mut acc = vec![0i32; k_a * n];
-    // (Aᵀ·B)[i,j] = Σ_r A[r,i]·B[r,j] — iterate r outer for sequential reads.
-    let ap = &a.payload;
-    let bp = &b.payload;
-    for r in 0..m_a {
-        let arow = &ap[r * k_a..(r + 1) * k_a];
-        let brow = &bp[r * n..(r + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0 {
-                continue;
-            }
-            let av = av as i32;
-            let crow = &mut acc[i * n..(i + 1) * n];
-            for (c, &bv) in crow.iter_mut().zip(brow) {
-                *c += av * bv as i32;
-            }
-        }
-    }
+    let mut acc = exec::take_i32_vec(k_a * n);
+    exec::gemm_i8(GemmPlan::new(MatKind::ATB, (m_a, k_a, n)), &a.payload, &b.payload, &mut acc);
     IgemmOut { acc, scale_exp: a.scale_exp() + b.scale_exp() }
 }
 
@@ -70,67 +62,93 @@ pub fn igemm_at_b(a: &DfpTensor, b: &DfpTensor, m_a: usize, k_a: usize, n: usize
 pub fn igemm_a_bt(a: &DfpTensor, b: &DfpTensor, m: usize, n: usize, k_b: usize) -> IgemmOut {
     assert_eq!(a.len(), m * n);
     assert_eq!(b.len(), k_b * n);
-    let mut acc = vec![0i32; m * k_b];
-    let ap = &a.payload;
-    let bp = &b.payload;
-    for i in 0..m {
-        let arow = &ap[i * n..(i + 1) * n];
-        let crow = &mut acc[i * k_b..(i + 1) * k_b];
-        for (j, c) in crow.iter_mut().enumerate() {
-            let brow = &bp[j * n..(j + 1) * n];
-            let mut s = 0i32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                s += av as i32 * bv as i32;
-            }
-            *c = s;
-        }
-    }
+    let mut acc = exec::take_i32_vec(m * k_b);
+    exec::gemm_i8(GemmPlan::new(MatKind::ABT, (m, n, k_b)), &a.payload, &b.payload, &mut acc);
     IgemmOut { acc, scale_exp: a.scale_exp() + b.scale_exp() }
 }
 
-/// Raw payload GEMM into a caller buffer — the hot inner kernel.
-///
-/// Blocked over `k` in panels that keep one `B` panel resident in L1/L2,
-/// with the innermost loop written so the compiler auto-vectorizes the
-/// `i8×i8→i32` multiply-accumulate.
+/// Raw payload GEMM into a caller buffer (engine AB path).
 pub fn igemm_into(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
-    debug_assert_eq!(out.len(), m * n);
-    let macs = m * k * n;
-    let threads = num_threads();
-    if macs < PAR_THRESHOLD || threads == 1 || m == 1 {
-        igemm_rows(a, b, 0, m, k, n, out);
-        return;
-    }
-    // Split output rows across threads; each thread owns a disjoint panel.
-    let rows_per = m.div_ceil(threads);
-    std::thread::scope(|s| {
-        let mut rest = &mut out[..];
-        let mut row0 = 0usize;
-        while row0 < m {
-            let rows = rows_per.min(m - row0);
-            let (panel, tail) = rest.split_at_mut(rows * n);
-            rest = tail;
-            let r0 = row0;
-            s.spawn(move || {
-                igemm_rows(a, b, r0, rows, k, n, panel);
-            });
-            row0 += rows;
-        }
-    });
+    exec::gemm_i8(GemmPlan::new(MatKind::AB, (m, k, n)), a, b, out);
 }
 
-/// Compute `rows` output rows starting at `row0` into `out` (length rows·n).
+// ---------------------------------------------------------------------------
+// Scalar reference kernels — ground truth for the engine property tests.
+// ---------------------------------------------------------------------------
+
+/// Reference `C[m×n] = A[m×k]·B[k×n]`, naive triple loop.
+pub fn igemm_ref(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
+    assert_eq!(out.len(), m * n);
+    for o in out.iter_mut() {
+        *o = 0;
+    }
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk] as i32;
+            for j in 0..n {
+                out[i * n + j] += av * b[kk * n + j] as i32;
+            }
+        }
+    }
+}
+
+/// Reference `C[m×n] = Aᵀ·B` with `A[r×m]`, `B[r×n]`.
+pub fn igemm_at_b_ref(a: &[i8], b: &[i8], r: usize, m: usize, n: usize, out: &mut [i32]) {
+    assert_eq!(out.len(), m * n);
+    for o in out.iter_mut() {
+        *o = 0;
+    }
+    for i in 0..m {
+        for rr in 0..r {
+            let av = a[rr * m + i] as i32;
+            for j in 0..n {
+                out[i * n + j] += av * b[rr * n + j] as i32;
+            }
+        }
+    }
+}
+
+/// Reference `C[m×p] = A·Bᵀ` with `A[m×n]`, `B[p×n]`.
+pub fn igemm_a_bt_ref(a: &[i8], b: &[i8], m: usize, n: usize, p: usize, out: &mut [i32]) {
+    assert_eq!(out.len(), m * p);
+    for i in 0..m {
+        for j in 0..p {
+            let mut s = 0i32;
+            for t in 0..n {
+                s += a[i * n + t] as i32 * b[j * n + t] as i32;
+            }
+            out[i * p + j] = s;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocked engine kernels — compute `rows` output rows starting at `row0`
+// into `out` (a disjoint window of length rows × row-width). Threading is
+// the engine's job; these never spawn.
+// ---------------------------------------------------------------------------
+
+/// Blocked AB kernel.
 ///
 /// §Perf: the B k-panel is widened to i32 once per panel (amortized over
 /// all `rows`), so the inner multiply-accumulate is i32×i32 — the form
 /// LLVM auto-vectorizes — instead of a per-element i8 sign-extension that
 /// defeated vectorization (2.9 → ≈8 GMAC/s; see EXPERIMENTS.md §Perf).
-fn igemm_rows(a: &[i8], b: &[i8], row0: usize, rows: usize, k: usize, n: usize, out: &mut [i32]) {
+/// The widened panel is arena scratch, reused across calls per thread.
+pub(crate) fn kernel_ab_i8(
+    a: &[i8],
+    b: &[i8],
+    row0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
     const KB: usize = 128; // k-panel: widened panel (KB·n·4 B) stays in L2
     for o in out.iter_mut() {
         *o = 0;
     }
-    let mut bw = vec![0i32; KB.min(k) * n];
+    let mut bw = exec::take_i32_vec(KB.min(k) * n);
     let mut k0 = 0;
     while k0 < k {
         let kb = KB.min(k - k0);
@@ -170,6 +188,150 @@ fn igemm_rows(a: &[i8], b: &[i8], row0: usize, rows: usize, k: usize, n: usize, 
             }
         }
         k0 += kb;
+    }
+    exec::recycle_i32(bw);
+}
+
+/// Blocked ATB kernel: output rows `row0..row0+rows` of `Aᵀ·B`
+/// (`A[r×m]`, `B[r×n]`). The `r`-outer order keeps both operand reads
+/// sequential: for fixed `rr`, `A[rr, row0..row0+rows]` is contiguous.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn kernel_atb_i8(
+    a: &[i8],
+    b: &[i8],
+    r: usize,
+    m: usize,
+    n: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [i32],
+) {
+    for o in out.iter_mut() {
+        *o = 0;
+    }
+    for rr in 0..r {
+        let arow = &a[rr * m + row0..rr * m + row0 + rows];
+        let brow = &b[rr * n..(rr + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let crow = &mut out[i * n..(i + 1) * n];
+            for (c, &bv) in crow.iter_mut().zip(brow) {
+                *c += av * bv as i32;
+            }
+        }
+    }
+}
+
+/// Blocked ABT kernel: output rows `row0..row0+rows` of `A·Bᵀ`
+/// (`A[m×n]`, `B[p×n]`) — row-by-row dot products.
+pub(crate) fn kernel_abt_i8(
+    a: &[i8],
+    b: &[i8],
+    n: usize,
+    p: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [i32],
+) {
+    for i in 0..rows {
+        let arow = &a[(row0 + i) * n..(row0 + i + 1) * n];
+        let crow = &mut out[i * p..(i + 1) * p];
+        for (j, c) in crow.iter_mut().enumerate() {
+            let brow = &b[j * n..(j + 1) * n];
+            let mut s = 0i32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                s += av as i32 * bv as i32;
+            }
+            *c = s;
+        }
+    }
+}
+
+/// Blocked f32 AB kernel (fp32 baseline path). Per-row accumulation order
+/// matches the serial kernel, so row-parallel results are bit-stable.
+pub(crate) fn kernel_ab_f32(
+    a: &[f32],
+    b: &[f32],
+    row0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for i in 0..rows {
+        let arow = &a[(row0 + i) * k..(row0 + i) * k + k];
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..kk * n + n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// Blocked f32 ATB kernel (`A[r×m]`, `B[r×n]`), `rr`-ascending per output
+/// element — same accumulation order as the serial loop.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn kernel_atb_f32(
+    a: &[f32],
+    b: &[f32],
+    r: usize,
+    m: usize,
+    n: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for rr in 0..r {
+        let arow = &a[rr * m + row0..rr * m + row0 + rows];
+        let brow = &b[rr * n..(rr + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut out[i * n..(i + 1) * n];
+            for (c, &bv) in crow.iter_mut().zip(brow) {
+                *c += av * bv;
+            }
+        }
+    }
+}
+
+/// Blocked f32 ABT kernel (`A[m×n]`, `B[p×n]`) — row dot products in
+/// `t`-ascending order.
+pub(crate) fn kernel_abt_f32(
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    p: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    for i in 0..rows {
+        let arow = &a[(row0 + i) * n..(row0 + i + 1) * n];
+        let crow = &mut out[i * p..(i + 1) * p];
+        for (j, c) in crow.iter_mut().enumerate() {
+            let brow = &b[j * n..(j + 1) * n];
+            let mut s = 0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                s += av * bv;
+            }
+            *c = s;
+        }
     }
 }
 
@@ -236,14 +398,13 @@ mod tests {
     #[test]
     fn igemm_parallel_matches_serial() {
         let mut rng = Rng::new(8);
-        let (m, k, n) = (64, 128, 96); // above PAR_THRESHOLD
-        assert!(m * k * n >= super::PAR_THRESHOLD);
+        let (m, k, n) = (64, 128, 96); // above the engine's MAC threshold
         let a: Vec<i8> = (0..m * k).map(|_| (rng.next_u32() % 255) as i8).collect();
         let b: Vec<i8> = (0..k * n).map(|_| (rng.next_u32() % 255) as i8).collect();
         let mut par = vec![0i32; m * n];
         igemm_into(&a, &b, m, k, n, &mut par);
         let mut ser = vec![0i32; m * n];
-        igemm_rows(&a, &b, 0, m, k, n, &mut ser);
+        igemm_ref(&a, &b, m, k, n, &mut ser);
         assert_eq!(par, ser);
     }
 

@@ -97,17 +97,22 @@ pub fn quantize(xs: &[f32], pbits: u32, mode: RoundMode) -> DfpTensor {
 
 /// Mapping with a caller-supplied shared exponent (used when several
 /// tensors must share a scale, e.g. the aligned residual add).
+///
+/// The payload buffer is drawn from the engine arena, so a call site that
+/// is done with the tensor can hand it back via
+/// [`super::exec::recycle_dfp`] and the next mapping of a similar size
+/// reuses the allocation.
 pub fn quantize_with_emax(xs: &[f32], e_max: i32, pbits: u32, mode: RoundMode) -> DfpTensor {
-    let mut payload = Vec::with_capacity(xs.len());
+    let mut payload = super::exec::take_i8_vec(xs.len());
     match mode {
         RoundMode::Stochastic(seed) => {
-            for (i, &x) in xs.iter().enumerate() {
-                payload.push(map_one(x, e_max, pbits, mode, hash2(seed, i as u64) as u32));
+            for (i, (p, &x)) in payload.iter_mut().zip(xs.iter()).enumerate() {
+                *p = map_one(x, e_max, pbits, mode, hash2(seed, i as u64) as u32);
             }
         }
         RoundMode::Nearest => {
-            for &x in xs {
-                payload.push(map_one(x, e_max, pbits, mode, 0));
+            for (p, &x) in payload.iter_mut().zip(xs.iter()) {
+                *p = map_one(x, e_max, pbits, mode, 0);
             }
         }
     }

@@ -10,9 +10,12 @@
 //! * [`gemm`] — int8 GEMM with int32 accumulation (§3.3).
 //! * [`conv`] — integer conv2d via im2col.
 //! * [`ops`] — integer residual add, reductions, ReLU, renormalization.
+//! * [`exec`] — the execution engine: persistent worker pool, scratch
+//!   arena, and plan-dispatched kernels every layer routes through.
 
 pub mod bits;
 pub mod conv;
+pub mod exec;
 pub mod fixed;
 pub mod gemm;
 pub mod inverse;
@@ -23,6 +26,7 @@ pub mod round;
 pub mod tensor;
 
 pub use conv::{iconv2d, ConvShape};
+pub use exec::{ExecCtx, GemmPlan, MatKind};
 pub use gemm::{igemm, igemm_a_bt, igemm_at_b, IgemmOut};
 pub use inverse::{inverse_i32, inverse_i64};
 pub use map::{quantize, quantize16, quantize_with_emax, shared_exponent};

@@ -9,6 +9,7 @@ use super::linear::Linear;
 use super::qmat::{qgemm, MatKind};
 use super::softmax_ce::softmax_rows;
 use super::{Arith, Ctx, Layer, Param, Tensor};
+use crate::dfp::exec;
 
 /// Multi-head self-attention over `[B, T, D]` inputs.
 pub struct MultiHeadAttention {
@@ -60,11 +61,13 @@ impl Layer for MultiHeadAttention {
         let dh = self.dh();
         let scale = 1.0 / (dh as f32).sqrt();
         let qkv = self.qkv.forward(x, ctx); // [B,T,3D]
-        // Split into per-(batch,head) q/k/v panels [T × dh].
+        // Split into per-(batch,head) q/k/v panels [T × dh]. Arena-backed:
+        // the previous step's panels are recycled below, so steady-state
+        // training reuses these allocations.
         let nbh = b * self.heads;
-        let mut q = vec![0f32; nbh * t * dh];
-        let mut k = vec![0f32; nbh * t * dh];
-        let mut v = vec![0f32; nbh * t * dh];
+        let mut q = exec::take_f32_vec(nbh * t * dh);
+        let mut k = exec::take_f32_vec(nbh * t * dh);
+        let mut v = exec::take_f32_vec(nbh * t * dh);
         for bb in 0..b {
             for tt in 0..t {
                 let base = (bb * t + tt) * 3 * d;
@@ -79,7 +82,7 @@ impl Layer for MultiHeadAttention {
             }
         }
         // Attention per (batch, head).
-        let mut p_all = vec![0f32; nbh * t * t];
+        let mut p_all = exec::take_f32_vec(nbh * t * t);
         let mut o = vec![0f32; b * t * d];
         for bh in 0..nbh {
             let qs = &q[bh * t * dh..(bh + 1) * t * dh];
@@ -107,11 +110,16 @@ impl Layer for MultiHeadAttention {
             }
         }
         if ctx.train {
-            self.saved_q = q;
-            self.saved_k = k;
-            self.saved_v = v;
-            self.saved_p = p_all;
+            exec::recycle_f32(std::mem::replace(&mut self.saved_q, q));
+            exec::recycle_f32(std::mem::replace(&mut self.saved_k, k));
+            exec::recycle_f32(std::mem::replace(&mut self.saved_v, v));
+            exec::recycle_f32(std::mem::replace(&mut self.saved_p, p_all));
             self.saved_bt = (b, t);
+        } else {
+            exec::recycle_f32(q);
+            exec::recycle_f32(k);
+            exec::recycle_f32(v);
+            exec::recycle_f32(p_all);
         }
         self.proj.forward(&Tensor::new(o, vec![b, t, d]), ctx)
     }
@@ -124,11 +132,14 @@ impl Layer for MultiHeadAttention {
         let go_all = self.proj.backward(gy, ctx); // [B,T,D]
         let nbh = b * self.heads;
         let mut gqkv = vec![0f32; b * t * 3 * d];
+        // Per-head scratch hoisted out of the loop and arena-backed; both
+        // buffers are fully overwritten each iteration.
+        let mut go = exec::take_f32_vec(t * dh);
+        let mut gs = exec::take_f32_vec(t * t);
         for bh in 0..nbh {
             let bb = bh / self.heads;
             let h = bh % self.heads;
             // Gather this head's output gradient [T × dh].
-            let mut go = vec![0f32; t * dh];
             for tt in 0..t {
                 for c in 0..dh {
                     go[tt * dh + c] = go_all.data[(bb * t + tt) * d + h * dh + c];
@@ -142,7 +153,6 @@ impl Layer for MultiHeadAttention {
             let gp = qgemm(&self.arith, MatKind::ABT, &go, vs, (t, dh, t), ctx, true);
             let gv = qgemm(&self.arith, MatKind::ATB, p, &go, (t, t, dh), ctx, true);
             // Softmax backward (float): gS_ij = P_ij (gP_ij − Σ_k gP_ik P_ik).
-            let mut gs = vec![0f32; t * t];
             for i in 0..t {
                 let mut dot = 0f32;
                 for j in 0..t {
@@ -168,6 +178,8 @@ impl Layer for MultiHeadAttention {
                 }
             }
         }
+        exec::recycle_f32(go);
+        exec::recycle_f32(gs);
         self.qkv.backward(&Tensor::new(gqkv, vec![b, t, 3 * d]), ctx)
     }
 

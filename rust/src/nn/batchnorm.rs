@@ -21,6 +21,7 @@
 use super::qmat::int_mode;
 use super::{Arith, Ctx, Layer, Param, Tensor};
 use crate::dfp::bits::{exp2i64, unpack};
+use crate::dfp::exec;
 use crate::dfp::fixed::{fx_recip_int, fx_rsqrt, Fx};
 use crate::dfp::quantize;
 
@@ -173,7 +174,9 @@ impl BatchNorm2d {
         let inv_n = fx_recip_int(cnt);
         let train_stats = ctx.train && !self.frozen;
 
-        let mut diff = vec![0i32; x.len()];
+        // Arena-backed (q_i − μ) cache; handed to `saved_diff` in training
+        // (the previous step's cache is recycled) or returned in eval.
+        let mut diff = exec::take_i32_vec(x.len());
         let mut rs = vec![Fx::new(1, 0); self.ch];
         let mut y = vec![0f32; x.len()];
 
@@ -293,11 +296,14 @@ impl BatchNorm2d {
                 }
             }
         }
+        exec::recycle_dfp(qx);
         if ctx.train {
-            self.saved_diff = diff;
+            exec::recycle_i32(std::mem::replace(&mut self.saved_diff, diff));
             self.saved_kx = kx;
             self.saved_r = rs;
             self.saved_dims = (n, sp);
+        } else {
+            exec::recycle_i32(diff);
         }
         Tensor::new(y, x.shape.clone())
     }
@@ -368,6 +374,7 @@ impl BatchNorm2d {
                 }
             }
         }
+        exec::recycle_dfp(qg);
         Tensor::new(gx, gy.shape.clone())
     }
 

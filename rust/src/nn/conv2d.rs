@@ -9,6 +9,7 @@ use super::qmat::{int_mode, MatKind};
 use super::{Arith, Ctx, Layer, Param, Tensor};
 use crate::baselines::uniform::{clip_grad, uniform_dequant_scale, uniform_quantize};
 use crate::dfp::conv::{col2im_i32, im2col_i8, ConvShape};
+use crate::dfp::exec::{self, GemmPlan};
 use crate::dfp::{bits::exp2i64, quantize, DfpTensor};
 
 /// Convolution layer (NCHW).
@@ -102,8 +103,8 @@ impl Conv2d {
         let (ho, wo) = (s.h_out(), s.w_out());
         let pix = ho * wo;
         let mut y = vec![0f32; s.n * s.out_img()];
-        let mut col = vec![0i8; s.patch() * pix];
-        let mut acc = vec![0i32; s.c_out * pix];
+        let mut col = exec::scratch_i8(s.patch() * pix);
+        let mut acc = exec::scratch_i32(s.c_out * pix);
         for b in 0..s.n {
             let img = &qx.payload[b * s.in_img()..(b + 1) * s.in_img()];
             im2col_i8(img, s, &mut col);
@@ -161,20 +162,25 @@ impl Layer for Conv2d {
                     crate::telemetry::numeric::probe_dfp("conv2d/w", &qw);
                 }
                 let k = qx.scale_exp() + qw.scale_exp();
-                self.forward_payload(&qx, &qw, &s, exp2i64(k), Some((&qb, k)))
+                let y = self.forward_payload(&qx, &qw, &s, exp2i64(k), Some((&qb, k)));
+                exec::recycle_dfp(qx);
+                exec::recycle_dfp(qw);
+                exec::recycle_dfp(qb);
+                y
             }
             Arith::Float => {
                 let pix = ho * wo;
                 let mut y = vec![0f32; s.n * s.out_img()];
-                let mut col = vec![0f32; s.patch() * pix];
+                let mut col = exec::scratch_f32(s.patch() * pix);
+                let mut out = exec::scratch_f32(s.c_out * pix);
                 for b in 0..s.n {
                     let img = &x.data[b * s.in_img()..(b + 1) * s.in_img()];
                     Self::im2col_f32(img, &s, &mut col);
-                    let out = super::qmat::fgemm(
-                        MatKind::AB,
+                    ctx.exec.gemm_f32(
+                        GemmPlan::new(MatKind::AB, (s.c_out, s.patch(), pix)),
                         &self.w.data,
                         &col,
-                        (s.c_out, s.patch(), pix),
+                        &mut out,
                     );
                     let dst = &mut y[b * s.out_img()..(b + 1) * s.out_img()];
                     for c in 0..s.c_out {
@@ -192,6 +198,8 @@ impl Layer for Conv2d {
                 let qw = DfpTensor { payload: pw, e_max: 127, pbits: cfg.bits - 1 };
                 let sc = uniform_dequant_scale(sx, cfg) as f64 * uniform_dequant_scale(sw, cfg) as f64;
                 let mut y = self.forward_payload(&qx, &qw, &s, sc, None);
+                exec::recycle_dfp(qx);
+                exec::recycle_dfp(qw);
                 let pix = ho * wo;
                 for b in 0..s.n {
                     for c in 0..s.c_out {
@@ -256,31 +264,38 @@ impl Layer for Conv2d {
         let mut gw_acc = vec![0i64; s.c_out * s.patch()];
         let mut gb_acc = vec![0i64; s.c_out];
         let mut gx = vec![0f32; s.n * s.in_img()];
-        let mut col = vec![0i8; s.patch() * pix];
-        let mut dcol = vec![0i32; s.patch() * pix];
-        let mut gimg = vec![0i32; s.in_img()];
+        let mut col = exec::scratch_i8(s.patch() * pix);
+        let mut ow_acc = exec::scratch_i32(s.c_out * s.patch());
+        let mut dcol = exec::scratch_i32(s.patch() * pix);
+        let mut gimg = exec::scratch_i32(s.in_img());
         for b in 0..s.n {
-            let gslice = DfpTensor {
-                payload: qg.payload[b * s.c_out * pix..(b + 1) * s.c_out * pix].to_vec(),
-                e_max: qg.e_max,
-                pbits: qg.pbits,
-            };
+            // The engine works on raw payload slices: no per-image tensor
+            // copies, just plans over disjoint windows of Ĝ.
+            let gpay = &qg.payload[b * s.c_out * pix..(b + 1) * s.c_out * pix];
             // ∂L/∂W += Ĝ_b · col_bᵀ   ([c_out×pix]·[pix×patch])
             let img = &qx.payload[b * s.in_img()..(b + 1) * s.in_img()];
             im2col_i8(img, &s, &mut col);
-            let qcol = DfpTensor { payload: col.clone(), e_max: qx.e_max, pbits: qx.pbits };
-            let ow = crate::dfp::igemm_a_bt(&gslice, &qcol, s.c_out, pix, s.patch());
-            for (a, &v) in gw_acc.iter_mut().zip(&ow.acc) {
+            ctx.exec.gemm_i8(
+                GemmPlan::new(MatKind::ABT, (s.c_out, pix, s.patch())),
+                gpay,
+                &col,
+                &mut ow_acc,
+            );
+            for (a, &v) in gw_acc.iter_mut().zip(ow_acc.iter()) {
                 *a += v as i64;
             }
             // ∂L/∂x_b = col2im(Ŵᵀ·Ĝ_b)   ([patch×c_out]·[c_out×pix])
-            let od = crate::dfp::igemm_at_b(&qw, &gslice, s.c_out, s.patch(), pix);
-            dcol.copy_from_slice(&od.acc);
+            ctx.exec.gemm_i8(
+                GemmPlan::new(MatKind::ATB, (s.c_out, s.patch(), pix)),
+                &qw.payload,
+                gpay,
+                &mut dcol,
+            );
             gimg.iter_mut().for_each(|v| *v = 0);
             col2im_i32(&dcol, &s, &mut gimg);
             let sxg = sw * sg;
             let dst = &mut gx[b * s.in_img()..(b + 1) * s.in_img()];
-            for (o, &a) in dst.iter_mut().zip(&gimg) {
+            for (o, &a) in dst.iter_mut().zip(gimg.iter()) {
                 *o = (a as f64 * sxg) as f32;
             }
             // ∂L/∂b += channel sums of Ĝ_b (integer).
@@ -300,6 +315,9 @@ impl Layer for Conv2d {
         for (acc, &a) in self.b.grad.iter_mut().zip(&gb_acc) {
             *acc += (a as f64 * sg) as f32;
         }
+        exec::recycle_dfp(qg);
+        exec::recycle_dfp(qx);
+        exec::recycle_dfp(qw);
         Tensor::new(gx, vec![s.n, s.c_in, s.h, s.w])
     }
 
@@ -317,19 +335,30 @@ impl Conv2d {
         let (ho, wo) = (s.h_out(), s.w_out());
         let pix = ho * wo;
         let mut gx = vec![0f32; s.n * s.in_img()];
-        let mut col = vec![0f32; s.patch() * pix];
+        let mut col = exec::scratch_f32(s.patch() * pix);
+        let mut gw = exec::scratch_f32(s.c_out * s.patch());
+        let mut dcol = exec::scratch_f32(s.patch() * pix);
         for b in 0..s.n {
             let gslice = &gy.data[b * s.c_out * pix..(b + 1) * s.c_out * pix];
             let img = &self.saved_x[b * s.in_img()..(b + 1) * s.in_img()];
             Self::im2col_f32(img, s, &mut col);
             // ∂L/∂W += G·colᵀ
-            let gw = super::qmat::fgemm(MatKind::ABT, gslice, &col, (s.c_out, pix, s.patch()));
-            for (a, g) in self.w.grad.iter_mut().zip(&gw) {
+            exec::gemm_f32(
+                GemmPlan::new(MatKind::ABT, (s.c_out, pix, s.patch())),
+                gslice,
+                &col,
+                &mut gw,
+            );
+            for (a, g) in self.w.grad.iter_mut().zip(gw.iter()) {
                 *a += g;
             }
             // dcol = Wᵀ·G; gx = col2im(dcol)
-            let dcol =
-                super::qmat::fgemm(MatKind::ATB, &self.w.data, gslice, (s.c_out, s.patch(), pix));
+            exec::gemm_f32(
+                GemmPlan::new(MatKind::ATB, (s.c_out, s.patch(), pix)),
+                &self.w.data,
+                gslice,
+                &mut dcol,
+            );
             // col2im in f32:
             let dst = &mut gx[b * s.in_img()..(b + 1) * s.in_img()];
             let mut r = 0usize;

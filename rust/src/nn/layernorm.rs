@@ -8,6 +8,7 @@
 use super::qmat::int_mode;
 use super::{Arith, Ctx, Layer, Param, Tensor};
 use crate::dfp::bits::{exp2i64, unpack};
+use crate::dfp::exec;
 use crate::dfp::fixed::{fx_recip_int, fx_rsqrt, Fx};
 use crate::dfp::quantize;
 
@@ -86,7 +87,8 @@ impl LayerNorm {
         let qx = quantize(&x.data, cfg.pbits, int_mode(cfg, ctx, false));
         let kx = qx.scale_exp();
         let inv_n = fx_recip_int(self.dim);
-        let mut diff = vec![0i32; x.len()];
+        // Arena-backed (q_i − μ) cache, same lifecycle as batch-norm's.
+        let mut diff = exec::take_i32_vec(x.len());
         let mut rs = vec![Fx::new(1, 0); rows];
         let mut y = vec![0f32; x.len()];
         // Precompute γ/β payloads once (shared across rows).
@@ -130,11 +132,14 @@ impl LayerNorm {
                 y[base + i] = (v as f64 * exp2i64(out_exp)) as f32;
             }
         }
+        exec::recycle_dfp(qx);
         if ctx.train {
-            self.saved_diff = diff;
+            exec::recycle_i32(std::mem::replace(&mut self.saved_diff, diff));
             self.saved_kx = kx;
             self.saved_r = rs;
             self.saved_rows = rows;
+        } else {
+            exec::recycle_i32(diff);
         }
         Tensor::new(y, x.shape.clone())
     }
@@ -148,6 +153,9 @@ impl LayerNorm {
         let inv_n = fx_recip_int(d);
         let gqs: Vec<(i64, i32)> = self.gamma.data.iter().map(|&g| scalar15(g)).collect();
         let mut gx = vec![0f32; gy.len()];
+        // Per-row γĝ scratch, hoisted out of the row loop (fully
+        // overwritten each row).
+        let mut ggrow = vec![0i64; d];
         for r0 in 0..rows {
             let base = r0 * d;
             let r = self.saved_r[r0];
@@ -158,7 +166,6 @@ impl LayerNorm {
             let kgam = gqs.iter().map(|&(_, k)| k).max().unwrap_or(0);
             let mut sg = 0i64; // Σ γĝ at exp kg + kgam
             let mut sgx = 0i64; // Σ γĝ·x̂ at exp kg + kgam + kx + kr
-            let mut ggrow = vec![0i64; d];
             // r (and hence kr) varies per row, so the per-feature parameter
             // gradients cross the inverse mapping once per row — the same
             // boundary every integer op uses.
@@ -192,6 +199,7 @@ impl LayerNorm {
                 gx[base + i] = ((r15 * s) as f64 * out_scale) as f32;
             }
         }
+        exec::recycle_dfp(qg);
         Tensor::new(gx, gy.shape.clone())
     }
 

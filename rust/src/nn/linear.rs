@@ -11,7 +11,7 @@
 use super::qmat::{fgemm, igemm_kind, int_mode, MatKind};
 use super::{Arith, Ctx, Layer, Param, Tensor};
 use crate::baselines::uniform::{clip_grad, uniform_dequant_scale, uniform_quantize};
-use crate::dfp::{bits::exp2i64, quantize, DfpTensor};
+use crate::dfp::{bits::exp2i64, exec, quantize, DfpTensor};
 
 /// Fully-connected layer.
 pub struct Linear {
@@ -55,6 +55,8 @@ impl Linear {
             crate::telemetry::numeric::probe_dfp("linear/w", &qw);
         }
         let out = igemm_kind(MatKind::ABT, &qx, &qw, (rows, self.in_dim, self.out_dim));
+        exec::recycle_dfp(qx);
+        exec::recycle_dfp(qw);
         if crate::telemetry::enabled() {
             super::qmat::count_acc_saturation(&out.acc);
         }
@@ -68,24 +70,26 @@ impl Linear {
             for (o, &a) in y.iter_mut().zip(&out.acc) {
                 *o = (a as f64 * s) as f32;
             }
-            return y;
-        }
-        for r in 0..rows {
-            for c in 0..self.out_dim {
-                let acc = out.acc[r * self.out_dim + c] as i64;
-                let bv = qb.payload[c] as i64;
-                // Align the bias payload onto the accumulator grid: an
-                // integer shift (left for the common coarser-bias case;
-                // a negative shift means the bias is below one product ulp
-                // and its payload drops to the nearest grid point).
-                let acc = if shift >= 0 {
-                    if shift < 62 { acc + (bv << shift) } else { acc }
-                } else {
-                    acc + (bv >> (-shift).min(62))
-                };
-                y[r * self.out_dim + c] = (acc as f64 * s) as f32;
+        } else {
+            for r in 0..rows {
+                for c in 0..self.out_dim {
+                    let acc = out.acc[r * self.out_dim + c] as i64;
+                    let bv = qb.payload[c] as i64;
+                    // Align the bias payload onto the accumulator grid: an
+                    // integer shift (left for the common coarser-bias case;
+                    // a negative shift means the bias is below one product ulp
+                    // and its payload drops to the nearest grid point).
+                    let acc = if shift >= 0 {
+                        if shift < 62 { acc + (bv << shift) } else { acc }
+                    } else {
+                        acc + (bv >> (-shift).min(62))
+                    };
+                    y[r * self.out_dim + c] = (acc as f64 * s) as f32;
+                }
             }
         }
+        exec::recycle_i32(out.acc);
+        exec::recycle_dfp(qb);
         y
     }
 }
@@ -152,10 +156,14 @@ impl Layer for Linear {
                 }
                 // ∂L/∂x = Ĝ·Ŵ  — [rows×out]·[out×in]
                 let ox = igemm_kind(MatKind::AB, &qg, &qw, (rows, self.out_dim, self.in_dim));
+                exec::recycle_dfp(qw);
                 let gx = crate::dfp::inverse_i32(&ox.acc, ox.scale_exp);
+                exec::recycle_i32(ox.acc);
                 // ∂L/∂W = Ĝᵀ·X̂ — Eq. 15
                 let ow = igemm_kind(MatKind::ATB, &qg, &qx, (rows, self.out_dim, self.in_dim));
+                exec::recycle_dfp(qx);
                 let gw = crate::dfp::inverse_i32(&ow.acc, ow.scale_exp);
+                exec::recycle_i32(ow.acc);
                 // ∂L/∂b: integer column sum of the quantized gradient.
                 let mut gb = vec![0i64; self.out_dim];
                 for r in 0..rows {
@@ -164,6 +172,7 @@ impl Layer for Linear {
                     }
                 }
                 let sb = exp2i64(qg.scale_exp());
+                exec::recycle_dfp(qg);
                 let gb: Vec<f32> = gb.iter().map(|&v| (v as f64 * sb) as f32).collect();
                 (gx, gw, gb)
             }

@@ -140,17 +140,26 @@ pub struct Ctx {
     /// Override the batch-norm running-stat momentum for this pass (used
     /// by the trainer's post-training BN re-estimation pass).
     pub bn_momentum: Option<f32>,
+    /// Handle to the execution engine (persistent pool + scratch arena +
+    /// plan-dispatched kernels) every layer contracts through.
+    pub exec: crate::dfp::ExecCtx,
 }
 
 impl Ctx {
     /// Fresh context for a training step.
     pub fn train(seed: u64, step: u64) -> Ctx {
-        Ctx { seed: crate::dfp::rng::hash2(seed, step), counter: 0, train: true, bn_momentum: None }
+        Ctx {
+            seed: crate::dfp::rng::hash2(seed, step),
+            counter: 0,
+            train: true,
+            bn_momentum: None,
+            exec: crate::dfp::ExecCtx,
+        }
     }
 
     /// Fresh context for evaluation.
     pub fn eval(seed: u64) -> Ctx {
-        Ctx { seed, counter: 0, train: false, bn_momentum: None }
+        Ctx { seed, counter: 0, train: false, bn_momentum: None, exec: crate::dfp::ExecCtx }
     }
 
     /// Next per-site stochastic-rounding seed.

@@ -30,7 +30,15 @@ impl Layer for MaxPool2 {
         let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
         let (ho, wo) = (h / 2, w / 2);
         let mut y = vec![f32::NEG_INFINITY; n * c * ho * wo];
-        let mut am = vec![0usize; n * c * ho * wo];
+        // Reuse the saved argmax allocation across training steps instead
+        // of a fresh Vec per call (eval must not steal the saved state).
+        let mut am = if ctx.train {
+            std::mem::take(&mut self.argmax)
+        } else {
+            Vec::new()
+        };
+        am.clear();
+        am.resize(n * c * ho * wo, 0usize);
         for b in 0..n {
             for ch in 0..c {
                 let plane = (b * c + ch) * h * w;

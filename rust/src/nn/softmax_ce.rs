@@ -53,6 +53,9 @@ pub fn softmax_ce_pixels(logits: &Tensor, targets: &[usize]) -> (f32, Tensor) {
     let mut grad = Tensor::zeros(&logits.shape);
     let mut loss = 0f64;
     let mut count = 0usize;
+    // Per-pixel class column, hoisted out of the pixel loop and borrowed
+    // from the engine arena (fully overwritten each pixel).
+    let mut e = crate::dfp::exec::scratch_f32(c);
     for b in 0..n {
         for s in 0..sp {
             let t = targets[b * sp + s];
@@ -65,7 +68,6 @@ pub fn softmax_ce_pixels(logits: &Tensor, targets: &[usize]) -> (f32, Tensor) {
                 m = m.max(logits.data[(b * c + cl) * sp + s]);
             }
             let mut z = 0f32;
-            let mut e = vec![0f32; c];
             for cl in 0..c {
                 e[cl] = (logits.data[(b * c + cl) * sp + s] - m).exp();
                 z += e[cl];

@@ -17,9 +17,16 @@ pub struct BenchResult {
     pub p50_s: f64,
     /// 95th-percentile seconds/iter.
     pub p95_s: f64,
+    /// Multiply-accumulate count per iteration (engine benches) —
+    /// `Some` makes the report and JSON line carry a GMAC/s rate.
+    pub macs: Option<f64>,
 }
 
 impl BenchResult {
+    /// Throughput in giga-MACs per second, when a MAC count is attached.
+    pub fn gmacs(&self) -> Option<f64> {
+        self.macs.map(|m| m / self.mean_s / 1e9)
+    }
     /// One-line report, matching the style `cargo bench` users expect.
     pub fn report(&self) -> String {
         fn fmt(s: f64) -> String {
@@ -31,26 +38,33 @@ impl BenchResult {
                 format!("{:.3} µs", s * 1e6)
             }
         }
-        format!(
+        let mut line = format!(
             "{:<44} {:>12}/iter  (p50 {:>12}, p95 {:>12}, n={})",
             self.name,
             fmt(self.mean_s),
             fmt(self.p50_s),
             fmt(self.p95_s),
             self.iters
-        )
+        );
+        if let Some(g) = self.gmacs() {
+            line.push_str(&format!("  {g:.2} GMAC/s"));
+        }
+        line
     }
 
     /// Single JSON line for machine-readable perf tracking:
     /// `{"name":…,"mean_s":…,"p50_s":…,"p95_s":…,"iters":…}`.
     pub fn to_json_line(&self) -> String {
-        crate::telemetry::Event::new("bench")
+        let mut ev = crate::telemetry::Event::new("bench")
             .with("name", self.name.as_str())
             .with("mean_s", self.mean_s)
             .with("p50_s", self.p50_s)
             .with("p95_s", self.p95_s)
-            .with("iters", self.iters)
-            .to_json()
+            .with("iters", self.iters);
+        if let Some(g) = self.gmacs() {
+            ev = ev.with("gmacs", g);
+        }
+        ev.to_json()
     }
 }
 
@@ -62,7 +76,17 @@ fn bench_json() -> bool {
 
 /// Run `f` with warmup then timed iterations. Iteration count adapts so the
 /// whole measurement stays near `budget_s` seconds.
-pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
+pub fn bench<F: FnMut()>(name: &str, budget_s: f64, f: F) -> BenchResult {
+    run(name, budget_s, None, f)
+}
+
+/// [`bench`] with a known multiply-accumulate count per iteration — the
+/// engine microbenches use this so reports and JSON lines carry GMAC/s.
+pub fn bench_macs<F: FnMut()>(name: &str, budget_s: f64, macs: f64, f: F) -> BenchResult {
+    run(name, budget_s, Some(macs), f)
+}
+
+fn run<F: FnMut()>(name: &str, budget_s: f64, macs: Option<f64>, mut f: F) -> BenchResult {
     // Warmup + calibration.
     let t0 = Instant::now();
     f();
@@ -82,6 +106,7 @@ pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
         mean_s: mean,
         p50_s: times[times.len() / 2],
         p95_s: times[(times.len() * 95 / 100).min(times.len() - 1)],
+        macs,
     };
     if bench_json() {
         println!("{}", res.to_json_line());
@@ -125,6 +150,7 @@ mod tests {
             mean_s: 0.00125,
             p50_s: 0.0012,
             p95_s: 0.0015,
+            macs: None,
         };
         let line = r.to_json_line();
         let j = crate::telemetry::sink::parse_json(&line).unwrap();
@@ -133,5 +159,23 @@ mod tests {
         assert_eq!(j.get("p50_s").and_then(|v| v.as_f64()), Some(0.0012));
         assert_eq!(j.get("p95_s").and_then(|v| v.as_f64()), Some(0.0015));
         assert_eq!(j.get("iters").and_then(|v| v.as_f64()), Some(42.0));
+        assert!(j.get("gmacs").is_none());
+    }
+
+    #[test]
+    fn bench_result_gmacs_rate() {
+        let r = BenchResult {
+            name: "gemm".to_string(),
+            iters: 3,
+            mean_s: 0.001,
+            p50_s: 0.001,
+            p95_s: 0.001,
+            macs: Some(2.0e6),
+        };
+        // 2e6 MACs in 1 ms = 2 GMAC/s.
+        assert!((r.gmacs().unwrap() - 2.0).abs() < 1e-9);
+        assert!(r.report().contains("GMAC/s"));
+        let j = crate::telemetry::sink::parse_json(&r.to_json_line()).unwrap();
+        assert!((j.get("gmacs").and_then(|v| v.as_f64()).unwrap() - 2.0).abs() < 1e-9);
     }
 }

@@ -1,0 +1,158 @@
+//! Execution-engine property tests: the blocked/parallel kernels must be
+//! bit-identical to the scalar reference kernels for every contraction
+//! kind across degenerate, odd, and above-parallel-threshold shapes; the
+//! arena must actually reuse buffers; the pool must never spawn threads
+//! on the steady-state path.
+
+use intrain::dfp::conv::{iconv2d, im2col_i8, ConvShape};
+use intrain::dfp::exec::{self, GemmPlan, MatKind};
+use intrain::dfp::gemm::{igemm_a_bt_ref, igemm_at_b_ref, igemm_ref};
+use intrain::dfp::rng::Rng;
+use intrain::dfp::{quantize, RoundMode};
+
+fn randi8(n: usize, rng: &mut Rng) -> Vec<i8> {
+    (0..n).map(|_| (rng.next_u32() % 255) as i8).collect()
+}
+
+/// Engine output vs scalar reference for one (kind, dims) case.
+fn check_case(kind: MatKind, dims: (usize, usize, usize), rng: &mut Rng) {
+    let plan = GemmPlan::new(kind, dims);
+    let a = randi8(plan.a_len(), rng);
+    let b = randi8(plan.b_len(), rng);
+    let mut got = vec![0i32; plan.out_len()];
+    exec::gemm_i8(plan, &a, &b, &mut got);
+    let mut want = vec![0i32; plan.out_len()];
+    let (d0, d1, d2) = dims;
+    match kind {
+        MatKind::AB => igemm_ref(&a, &b, d0, d1, d2, &mut want),
+        MatKind::ATB => igemm_at_b_ref(&a, &b, d0, d1, d2, &mut want),
+        MatKind::ABT => igemm_a_bt_ref(&a, &b, d0, d1, d2, &mut want),
+    }
+    assert_eq!(got, want, "engine != reference for {kind:?} dims {dims:?}");
+}
+
+#[test]
+fn engine_bit_identical_to_reference_all_kinds_all_sizes() {
+    // 130 > the engine's row-block size for any pool width, and
+    // 130×130×130 ≈ 2.2M MACs is far above the parallel threshold, so
+    // these cases exercise the pooled multi-block path; 1 and 7 exercise
+    // the serial path and degenerate shapes.
+    let sizes = [1usize, 7, 33, 130];
+    let mut rng = Rng::new(42);
+    for kind in [MatKind::AB, MatKind::ATB, MatKind::ABT] {
+        for &d0 in &sizes {
+            for &d1 in &sizes {
+                for &d2 in &sizes {
+                    check_case(kind, (d0, d1, d2), &mut rng);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_f32_parallel_matches_serial_order() {
+    // The f32 kernels preserve per-element accumulation order, so the
+    // pooled path must be bit-equal to a naive serial AB loop.
+    let (m, k, n) = (130, 130, 130);
+    let mut rng = Rng::new(7);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.next_gaussian()).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.next_gaussian()).collect();
+    let plan = GemmPlan::new(MatKind::AB, (m, k, n));
+    let mut got = vec![0f32; m * n];
+    exec::gemm_f32(plan, &a, &b, &mut got);
+    let mut want = vec![0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                want[i * n + j] += av * b[kk * n + j];
+            }
+        }
+    }
+    assert_eq!(got, want);
+}
+
+#[test]
+fn conv_engine_path_matches_reference_gemm() {
+    // iconv2d = im2col + engine AB GEMM; the reference is im2col + scalar
+    // reference GEMM. Bit-identical accumulators required.
+    let s = ConvShape { n: 2, c_in: 3, h: 9, w: 9, c_out: 5, kh: 3, kw: 3, stride: 1, pad: 1 };
+    let mut rng = Rng::new(11);
+    let x: Vec<f32> = (0..s.n * s.in_img()).map(|_| rng.next_gaussian()).collect();
+    let w: Vec<f32> = (0..s.c_out * s.patch()).map(|_| rng.next_gaussian()).collect();
+    let qx = quantize(&x, 7, RoundMode::Nearest);
+    let qw = quantize(&w, 7, RoundMode::Nearest);
+    let got = iconv2d(&qx, &qw, &s);
+    let pix = s.h_out() * s.w_out();
+    let mut want = vec![0i32; s.n * s.out_img()];
+    let mut col = vec![0i8; s.patch() * pix];
+    for b in 0..s.n {
+        im2col_i8(&qx.payload[b * s.in_img()..(b + 1) * s.in_img()], &s, &mut col);
+        igemm_ref(
+            &qw.payload,
+            &col,
+            s.c_out,
+            s.patch(),
+            pix,
+            &mut want[b * s.out_img()..(b + 1) * s.out_img()],
+        );
+    }
+    assert_eq!(got.acc, want);
+    assert_eq!(got.scale_exp, qx.scale_exp() + qw.scale_exp());
+}
+
+#[test]
+fn arena_reuses_buffers_and_reset_clears() {
+    exec::arena::reset();
+    let before = exec::arena::stats();
+    // First checkout allocates; returning it and taking the same size
+    // again must reuse the identical buffer.
+    let v1 = exec::take_i32_vec(1000);
+    let p1 = v1.as_ptr();
+    exec::recycle_i32(v1);
+    let v2 = exec::take_i32_vec(1000);
+    assert_eq!(v2.as_ptr(), p1, "arena failed to reuse the recycled buffer");
+    assert!(v2.iter().all(|&x| x == 0), "reused scratch not re-zeroed");
+    let mid = exec::arena::stats();
+    assert_eq!(mid.i32c.allocs, before.i32c.allocs + 1);
+    assert_eq!(mid.i32c.reuses, before.i32c.reuses + 1);
+    assert!(mid.i32c.outstanding_bytes >= 4000);
+    exec::recycle_i32(v2);
+    let freed = exec::arena::stats();
+    assert_eq!(freed.i32c.outstanding_bytes, 0);
+    assert_eq!(freed.i32c.free, 1);
+    // RAII guards recycle on drop.
+    {
+        let _g = exec::scratch_i8(64);
+        assert!(exec::arena::stats().i8c.outstanding_bytes >= 64);
+    }
+    assert_eq!(exec::arena::stats().i8c.outstanding_bytes, 0);
+    // reset() drops every cached buffer and zeroes the counters.
+    exec::arena::reset();
+    let after = exec::arena::stats();
+    assert_eq!(after.i32c.free, 0);
+    assert_eq!(after.i32c.allocs, 0);
+    assert_eq!(after.i32c.hwm_bytes, 0);
+}
+
+#[test]
+fn steady_state_training_path_spawns_no_threads() {
+    // Warm the pool once, then hammer the engine: the spawn counter must
+    // not move (zero per-call thread spawns — the tentpole guarantee).
+    let plan = GemmPlan::new(MatKind::AB, (130, 130, 130));
+    let mut rng = Rng::new(3);
+    let a = randi8(plan.a_len(), &mut rng);
+    let b = randi8(plan.b_len(), &mut rng);
+    let mut out = vec![0i32; plan.out_len()];
+    exec::gemm_i8(plan, &a, &b, &mut out);
+    let spawned = exec::spawn_count();
+    for _ in 0..25 {
+        exec::gemm_i8(plan, &a, &b, &mut out);
+    }
+    assert_eq!(exec::spawn_count(), spawned, "engine spawned threads per call");
+    assert!(exec::pool().threads() >= 1);
+}
