@@ -49,14 +49,14 @@ pub fn cmd_e2e(args: &Args) -> Result<()> {
     };
     let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     let rec = run_e2e(&artifacts, &cfg)?;
-    println!(
+    telemetry::log(&format!(
         "e2e done: {} params, {} steps, {:.2} steps/s, loss {:.4} → {:.4}",
         rec.param_count,
         rec.losses.len(),
         rec.steps_per_sec,
         rec.losses.first().unwrap_or(&f32::NAN),
         rec.losses.last().unwrap_or(&f32::NAN)
-    );
+    ));
     Ok(())
 }
 
@@ -82,7 +82,10 @@ pub fn cmd_classify(args: &Args) -> Result<()> {
     };
     let rec =
         Trainer { model: &mut model, opt: opt.as_mut(), cfg, dense: false }.run(&train, &test);
-    println!("classify[{:?}] top1={:.4} top5={:.4}", arith, rec.final_top1, rec.final_top5);
+    telemetry::log(&format!(
+        "classify[{:?}] top1={:.4} top5={:.4}",
+        arith, rec.final_top1, rec.final_top5
+    ));
     Ok(())
 }
 
@@ -100,7 +103,7 @@ pub fn cmd_mlp(args: &Args) -> Result<()> {
     };
     let rec =
         Trainer { model: &mut model, opt: opt.as_mut(), cfg, dense: false }.run(&train, &test);
-    println!("mlp[{arith:?}] top1={:.4}", rec.final_top1);
+    telemetry::log(&format!("mlp[{arith:?}] top1={:.4}", rec.final_top1));
     Ok(())
 }
 
@@ -114,12 +117,12 @@ pub fn cmd_gap(args: &Args) -> Result<()> {
     };
     let rf = run_gap(&cfg, false);
     let ri = run_gap(&cfg, true);
-    println!(
+    telemetry::log(&format!(
         "optimality gap  float={:.4}  int8={:.4}  bound={:.4} (Theorem 1)",
         rf.gap,
         ri.gap,
         theoretical_gap(&cfg)
-    );
+    ));
     Ok(())
 }
 
@@ -134,12 +137,42 @@ pub fn cmd_train(args: &Args) -> Result<()> {
     }
 }
 
+/// `intrain profile` — run a `train` workload under the execution
+/// profiler: per-thread timelines (kernels tagged with `MatKind` + dims,
+/// pool task/idle attribution, arena alloc/HWM marks) exported as Chrome
+/// trace-event JSON to `--trace-out` (default `trace.json`), plus a kernel
+/// shape-histogram summary table. `--shadow-audit` additionally runs the
+/// f32 reference alongside the integer layers and streams per-layer drift
+/// metrics through the telemetry sinks.
+pub fn cmd_profile(args: &Args) -> Result<()> {
+    telemetry::profiler::enable(args.get_or("prof-buf", telemetry::profiler::DEFAULT_CAPACITY));
+    let result = cmd_train(args);
+    telemetry::profiler::disable();
+    // The training run has returned and the pool is quiescent — safe to
+    // drain the rings.
+    let traces = telemetry::profiler::snapshot();
+    let path = args.get_path("trace-out", "trace.json");
+    telemetry::chrome::write_trace(&path, &traces)
+        .with_context(|| format!("writing Chrome trace {}", path.display()))?;
+    telemetry::log(&telemetry::chrome::kernel_summary(&traces));
+    let events: usize = traces.iter().map(|t| t.events.len()).sum();
+    telemetry::log(&format!(
+        "profile: {events} events on {} thread tracks -> {} (open in Perfetto or chrome://tracing)",
+        traces.len(),
+        path.display()
+    ));
+    result
+}
+
 /// Wire the global telemetry flags: `--trace` enables collection (and a
 /// console sink when no JSONL path is given), `--metrics-out <path.jsonl>`
 /// streams events to a file, `--sample-every N` tunes the numeric-probe
-/// decimation. Returns true when telemetry was switched on.
+/// decimation, `--shadow-audit` turns on the float-shadow drift auditor.
+/// The `profile` command and `--shadow-audit` imply collection. Returns
+/// true when telemetry was switched on.
 pub fn init_telemetry(args: &Args) -> Result<bool> {
-    let trace = args.flag("trace");
+    let shadow = args.flag("shadow-audit");
+    let trace = args.flag("trace") || shadow || args.command.as_deref() == Some("profile");
     let metrics_out = args.get("metrics-out");
     if !trace && metrics_out.is_none() {
         return Ok(false);
@@ -153,14 +186,16 @@ pub fn init_telemetry(args: &Args) -> Result<bool> {
     }
     let period = args.get_or("sample-every", telemetry::numeric::DEFAULT_SAMPLE_PERIOD);
     telemetry::numeric::set_sample_period(period);
+    telemetry::numeric::set_shadow_audit(shadow);
     telemetry::set_enabled(true);
     Ok(true)
 }
 
-/// Flush sinks and print the end-of-run telemetry summary table.
+/// Emit the end-of-run telemetry summary table (through the sinks, like
+/// all other run output) and flush.
 pub fn finish_telemetry() {
+    telemetry::log(&telemetry::summary_table());
     telemetry::flush();
-    println!("{}", telemetry::summary_table());
 }
 
 /// Top-level dispatch.
@@ -171,10 +206,11 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Some("classify") => cmd_classify(args),
         Some("mlp") => cmd_mlp(args),
         Some("train") => cmd_train(args),
+        Some("profile") => cmd_profile(args),
         Some("gap") => cmd_gap(args),
         Some(other) => bail!("unknown command {other:?}; see --help"),
         None => {
-            println!("{}", HELP);
+            telemetry::log(HELP);
             Ok(())
         }
     };
@@ -193,6 +229,10 @@ USAGE: intrain <command> [--key value]...
 COMMANDS:
   train     train with telemetry (alias over mlp/resnet)
             --model {mlp,resnet} --arith ... --epochs N
+  profile   train under the execution profiler and export a Chrome trace
+            --model ... --trace-out PATH (default trace.json)
+            --prof-buf N (per-thread event-ring capacity)
+            view the JSON in Perfetto (ui.perfetto.dev) or chrome://tracing
   e2e       train the AOT transformer via PJRT (needs `make artifacts`)
             --steps N --lr F --arith {int8,fp32} --artifacts DIR
   classify  train ResNet-tiny on synthetic CIFAR
@@ -205,6 +245,9 @@ GLOBAL OPTIONS (all commands):
   --metrics-out PATH  stream telemetry events as JSONL to PATH (implies
                       collection; without it --trace prints to the console)
   --sample-every N    numeric-probe decimation period (default 8)
+  --shadow-audit      run an f32 reference alongside the integer layers and
+                      emit per-layer max/mean relative-drift metrics
+                      (implies collection)
 
 Benches reproducing every paper table/figure: `cargo bench`.
 Set BENCH_JSON=1 to emit one machine-readable JSON line per bench result.

@@ -61,11 +61,19 @@ struct ClassPool<T> {
     free: Vec<Vec<T>>,
     stats: ClassStats,
     gauge: &'static str,
+    /// Profiler instant names for fresh allocations / new high-water marks
+    /// (annotate the trace timeline at the moment memory grows).
+    alloc_event: &'static str,
+    hwm_event: &'static str,
 }
 
 impl<T: Default + Clone> ClassPool<T> {
-    fn new(gauge: &'static str) -> ClassPool<T> {
-        ClassPool { free: Vec::new(), stats: ClassStats::default(), gauge }
+    fn new(
+        gauge: &'static str,
+        alloc_event: &'static str,
+        hwm_event: &'static str,
+    ) -> ClassPool<T> {
+        ClassPool { free: Vec::new(), stats: ClassStats::default(), gauge, alloc_event, hwm_event }
     }
 
     fn take(&mut self, len: usize) -> Vec<T> {
@@ -87,7 +95,14 @@ impl<T: Default + Clone> ClassPool<T> {
             }
             None => {
                 self.stats.allocs += 1;
-                Vec::with_capacity(len.next_power_of_two().max(MIN_CAP))
+                let cap = len.next_power_of_two().max(MIN_CAP);
+                crate::telemetry::profiler::instant(
+                    self.alloc_event,
+                    "arena",
+                    &["bytes"],
+                    &[(cap * std::mem::size_of::<T>()) as u64],
+                );
+                Vec::with_capacity(cap)
             }
         };
         v.clear();
@@ -98,6 +113,12 @@ impl<T: Default + Clone> ClassPool<T> {
             if crate::telemetry::enabled() {
                 crate::telemetry::registry().gauge(self.gauge).set(self.stats.hwm_bytes as f64);
             }
+            crate::telemetry::profiler::instant(
+                self.hwm_event,
+                "arena",
+                &["bytes"],
+                &[self.stats.hwm_bytes as u64],
+            );
         }
         v
     }
@@ -130,9 +151,9 @@ struct Arena {
 impl Arena {
     fn new() -> Arena {
         Arena {
-            i8p: ClassPool::new("exec/arena_i8_hwm_bytes"),
-            i32p: ClassPool::new("exec/arena_i32_hwm_bytes"),
-            f32p: ClassPool::new("exec/arena_f32_hwm_bytes"),
+            i8p: ClassPool::new("exec/arena_i8_hwm_bytes", "arena/alloc_i8", "arena/hwm_i8"),
+            i32p: ClassPool::new("exec/arena_i32_hwm_bytes", "arena/alloc_i32", "arena/hwm_i32"),
+            f32p: ClassPool::new("exec/arena_f32_hwm_bytes", "arena/alloc_f32", "arena/hwm_f32"),
         }
     }
 }

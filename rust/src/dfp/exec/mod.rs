@@ -143,6 +143,18 @@ macro_rules! engine_gemm {
                 return;
             }
             let (d0, d1, d2) = plan.dims;
+            // Profiler kernel event: name carries kernel + MatKind, args
+            // carry the plan dims. Inert (one relaxed load) when off.
+            let _prof = crate::telemetry::profiler::span_args(
+                match plan.kind {
+                    MatKind::AB => concat!(stringify!($name), "/AB"),
+                    MatKind::ATB => concat!(stringify!($name), "/ATB"),
+                    MatKind::ABT => concat!(stringify!($name), "/ABT"),
+                },
+                "kernel",
+                &["d0", "d1", "d2"],
+                &[d0 as u64, d1 as u64, d2 as u64],
+            );
             let run_block = move |a: &[$elem], b: &[$elem], row0: usize, cnt: usize, o: &mut [$acc]| {
                 match plan.kind {
                     MatKind::AB => $ab(a, b, row0, cnt, d1, d2, o),

@@ -146,13 +146,18 @@ impl Pool {
             completed: AtomicUsize::new(0),
             panicked: AtomicBool::new(false),
         });
+        // Profiler: "pool/job" spans publish→drain on the caller's track;
+        // the caller's own share of the items is a "pool/task" like any
+        // worker's, so queue-drain progress is visible per thread.
+        let _job_span =
+            crate::telemetry::profiler::span_args("pool/job", "pool", &["n"], &[n as u64]);
         {
             let mut st = self.shared.state.lock().unwrap();
             st.epoch += 1;
             st.job = Some(job.clone());
             self.shared.work_cv.notify_all();
         }
-        job.work();
+        run_job_timed(&job);
         let mut st = self.shared.state.lock().unwrap();
         while !job.is_done() {
             st = self.shared.done_cv.wait(st).unwrap();
@@ -165,8 +170,37 @@ impl Pool {
     }
 }
 
+/// Drain `job` from the current thread, recording a `pool/task` event
+/// (items done / job size) on this thread's profiler track. Returns the
+/// number of items completed here.
+fn run_job_timed(job: &Job) -> usize {
+    use crate::telemetry::profiler;
+    let t0 = profiler::on().then(profiler::now_ns);
+    let done = job.work();
+    if let Some(t0) = t0 {
+        let end = profiler::now_ns();
+        profiler::complete(
+            "pool/task",
+            "pool",
+            t0,
+            end.saturating_sub(t0),
+            &["done", "n"],
+            &[done as u64, job.n as u64],
+        );
+    }
+    done
+}
+
 fn worker_loop(shared: &Shared) {
+    use crate::telemetry::profiler;
+    // Unconditional: registration is a ~100-byte entry (ring storage is
+    // lazy), and it guarantees every worker a named track in the exported
+    // trace even when the whole run stays below the parallel threshold.
+    profiler::register_thread();
     let mut seen = 0u64;
+    // Start of the current idle interval on the profiler clock; measured
+    // only while profiling so the steady-state wait takes no clock reads.
+    let mut idle_from: Option<u64> = None;
     loop {
         let job = {
             let mut st = shared.state.lock().unwrap();
@@ -177,10 +211,22 @@ fn worker_loop(shared: &Shared) {
                         break j;
                     }
                 }
+                if profiler::on() && idle_from.is_none() {
+                    idle_from = Some(profiler::now_ns());
+                }
                 st = shared.work_cv.wait(st).unwrap();
             }
         };
-        job.work();
+        if let Some(t0) = idle_from.take() {
+            let end = profiler::now_ns();
+            profiler::complete("pool/idle", "pool", t0, end.saturating_sub(t0), &[], &[]);
+        }
+        let done = run_job_timed(&job);
+        if done > 0 && crate::telemetry::enabled() {
+            // Items executed on workers rather than the publishing caller:
+            // the pool's steal count.
+            crate::telemetry::registry().counter("exec/pool_stolen_items").add(done as u64);
+        }
         if job.is_done() {
             // Hold the lock while notifying so the caller cannot miss the
             // wakeup between its `is_done` check and `wait`.

@@ -6,10 +6,11 @@ use intrain::util::cli::Args;
 fn main() {
     let args = Args::parse();
     if args.flag("help") {
-        println!("{}", driver::HELP);
+        intrain::telemetry::log(driver::HELP);
         return;
     }
     if let Err(e) = driver::dispatch(&args) {
+        // Fatal errors stay on stderr regardless of telemetry routing.
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }

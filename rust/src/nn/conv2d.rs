@@ -90,6 +90,32 @@ impl Conv2d {
         }
     }
 
+    /// Float forward (baseline path; also the `--shadow-audit` reference
+    /// for the integer path).
+    fn forward_f32(&self, x: &[f32], s: &ConvShape, ctx: &mut Ctx) -> Vec<f32> {
+        let pix = s.h_out() * s.w_out();
+        let mut y = vec![0f32; s.n * s.out_img()];
+        let mut col = exec::scratch_f32(s.patch() * pix);
+        let mut out = exec::scratch_f32(s.c_out * pix);
+        for b in 0..s.n {
+            let img = &x[b * s.in_img()..(b + 1) * s.in_img()];
+            Self::im2col_f32(img, s, &mut col);
+            ctx.exec.gemm_f32(
+                GemmPlan::new(MatKind::AB, (s.c_out, s.patch(), pix)),
+                &self.w.data,
+                &col,
+                &mut out,
+            );
+            let dst = &mut y[b * s.out_img()..(b + 1) * s.out_img()];
+            for c in 0..s.c_out {
+                for p in 0..pix {
+                    dst[c * pix + p] = out[c * pix + p] + self.b.data[c];
+                }
+            }
+        }
+        y
+    }
+
     /// Integer forward for one arithmetic payload pair; shared by Int and
     /// Uniform modes (they differ only in how payloads/scales were made).
     fn forward_payload(
@@ -166,31 +192,14 @@ impl Layer for Conv2d {
                 exec::recycle_dfp(qx);
                 exec::recycle_dfp(qw);
                 exec::recycle_dfp(qb);
-                y
-            }
-            Arith::Float => {
-                let pix = ho * wo;
-                let mut y = vec![0f32; s.n * s.out_img()];
-                let mut col = exec::scratch_f32(s.patch() * pix);
-                let mut out = exec::scratch_f32(s.c_out * pix);
-                for b in 0..s.n {
-                    let img = &x.data[b * s.in_img()..(b + 1) * s.in_img()];
-                    Self::im2col_f32(img, &s, &mut col);
-                    ctx.exec.gemm_f32(
-                        GemmPlan::new(MatKind::AB, (s.c_out, s.patch(), pix)),
-                        &self.w.data,
-                        &col,
-                        &mut out,
-                    );
-                    let dst = &mut y[b * s.out_img()..(b + 1) * s.out_img()];
-                    for c in 0..s.c_out {
-                        for p in 0..pix {
-                            dst[c * pix + p] = out[c * pix + p] + self.b.data[c];
-                        }
-                    }
+                if crate::telemetry::numeric::shadow_enabled() {
+                    // Float-shadow audit against the f32 baseline forward.
+                    let fref = self.forward_f32(&x.data, &s, ctx);
+                    crate::telemetry::numeric::shadow_audit("conv2d", &y, &fref);
                 }
                 y
             }
+            Arith::Float => self.forward_f32(&x.data, &s, ctx),
             Arith::Uniform(cfg) => {
                 let (px, sx) = uniform_quantize(&x.data, cfg, 0.0);
                 let (pw, sw) = uniform_quantize(&self.w.data, cfg, 0.0);

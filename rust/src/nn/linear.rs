@@ -90,6 +90,20 @@ impl Linear {
         }
         exec::recycle_i32(out.acc);
         exec::recycle_dfp(qb);
+        if crate::telemetry::numeric::shadow_enabled() {
+            // Float-shadow audit: replay the forward in f32 (GEMM + bias)
+            // and publish the integer path's deviation from it.
+            let mut fref =
+                fgemm(MatKind::ABT, x, &self.w.data, (rows, self.in_dim, self.out_dim));
+            if !self.b.data.is_empty() {
+                for r in 0..rows {
+                    for c in 0..self.out_dim {
+                        fref[r * self.out_dim + c] += self.b.data[c];
+                    }
+                }
+            }
+            crate::telemetry::numeric::shadow_audit("linear", &y, &fref);
+        }
         y
     }
 }

@@ -74,6 +74,17 @@ pub fn qgemm(
             }
             let out = inverse_i32(&acc, scale_exp);
             exec::recycle_i32(acc);
+            if crate::telemetry::numeric::shadow_enabled() {
+                // Float-shadow audit: same contraction in f32, deviation
+                // published per dispatch site (covers attention, which has
+                // no dedicated layer entry point of its own).
+                let site = match kind {
+                    MatKind::AB => "qmat/ab",
+                    MatKind::ATB => "qmat/atb",
+                    MatKind::ABT => "qmat/abt",
+                };
+                crate::telemetry::numeric::shadow_audit(site, &out, &fgemm(kind, a, b, dims));
+            }
             out
         }
         Arith::Uniform(cfg) => {

@@ -1,0 +1,273 @@
+//! Chrome trace-event JSON export for the [`super::profiler`].
+//!
+//! Emits the `{"traceEvents": [...]}` object format understood by
+//! Perfetto (<https://ui.perfetto.dev>) and `chrome://tracing`: one `"M"`
+//! metadata event naming each thread track, `"X"` complete events for
+//! spans (timestamps/durations in microseconds), and `"i"` instant events
+//! for point markers. JSON is assembled by hand like the rest of the
+//! telemetry layer — no serialization dependency.
+//!
+//! Also provides [`kernel_summary`]: a shape-histogram table aggregating
+//! kernel events by name and power-of-two dim bucket, plus pool/arena
+//! roll-ups, for the `profile` subcommand's end-of-run report.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+use super::profiler::{ProfEvent, ThreadTrace};
+
+/// Process id used for all tracks (single-process trace).
+const PID: u32 = 1;
+
+fn push_args(out: &mut String, ev: &ProfEvent) {
+    out.push_str(r#","args":{"#);
+    for i in 0..ev.nargs as usize {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, r#""{}":{}"#, super::sink::escape_json(ev.keys[i]), ev.args[i]);
+    }
+    out.push('}');
+}
+
+fn push_event(out: &mut String, tid: u32, ev: &ProfEvent) {
+    let ts_us = ev.t0_ns as f64 / 1000.0;
+    let _ = write!(
+        out,
+        r#"{{"name":"{}","cat":"{}","ph":"{}","pid":{},"tid":{},"ts":{:.3}"#,
+        super::sink::escape_json(ev.name),
+        super::sink::escape_json(ev.cat),
+        if ev.dur_ns > 0 { 'X' } else { 'i' },
+        PID,
+        tid,
+        ts_us,
+    );
+    if ev.dur_ns > 0 {
+        let _ = write!(out, r#","dur":{:.3}"#, ev.dur_ns as f64 / 1000.0);
+    } else {
+        // Thread-scoped instant: renders as a tick on the owning track.
+        out.push_str(r#","s":"t""#);
+    }
+    push_args(out, ev);
+    out.push('}');
+}
+
+/// Render drained thread timelines as a Chrome trace-event JSON document.
+pub fn trace_json(traces: &[ThreadTrace]) -> String {
+    let total: usize = traces.iter().map(|t| t.events.len()).sum();
+    let mut out = String::with_capacity(128 + total * 160);
+    out.push_str("{\"traceEvents\":[\n");
+    let mut first = true;
+    for t in traces {
+        // Name the track even when it recorded nothing (idle pool workers
+        // still show up, which is itself a finding).
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        let _ = write!(
+            out,
+            r#"{{"name":"thread_name","ph":"M","pid":{},"tid":{},"args":{{"name":"{}"}}}}"#,
+            PID,
+            t.tid,
+            super::sink::escape_json(&t.label),
+        );
+        let _ = write!(
+            out,
+            ",\n{{\"name\":\"thread_sort_index\",\"ph\":\"M\",\"pid\":{},\"tid\":{},\"args\":{{\"sort_index\":{}}}}}",
+            PID, t.tid, t.tid,
+        );
+        if t.dropped > 0 {
+            let _ = write!(
+                out,
+                ",\n{{\"name\":\"ring_dropped\",\"cat\":\"meta\",\"ph\":\"i\",\"pid\":{},\"tid\":{},\"ts\":0,\"s\":\"t\",\"args\":{{\"dropped\":{}}}}}",
+                PID, t.tid, t.dropped,
+            );
+        }
+        for ev in &t.events {
+            out.push_str(",\n");
+            push_event(&mut out, t.tid, ev);
+        }
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Write the Chrome trace JSON for `traces` to `path`.
+pub fn write_trace(path: &Path, traces: &[ThreadTrace]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(trace_json(traces).as_bytes())?;
+    f.flush()
+}
+
+fn pow2_bucket(v: u64) -> u64 {
+    v.max(1).next_power_of_two()
+}
+
+struct KernelAgg {
+    calls: u64,
+    total_ns: u64,
+    macs: u64,
+}
+
+fn fmt_dur_ms(ns: u64) -> String {
+    format!("{:.2}", ns as f64 / 1e6)
+}
+
+/// Shape-histogram summary of kernel events plus pool/arena roll-ups.
+///
+/// Kernel events are grouped by name and by the power-of-two bucket of
+/// each dim argument, so e.g. all `64×100×32` and `64×128×50` GEMMs land
+/// in the `≤64×≤128×≤64` row. GMAC/s is computed from the exact per-event
+/// dims (d0·d1·d2 MACs), not the buckets.
+pub fn kernel_summary(traces: &[ThreadTrace]) -> String {
+    let mut kernels: BTreeMap<(String, [u64; 3]), KernelAgg> = BTreeMap::new();
+    let mut tasks = 0u64;
+    let mut task_items = 0u64;
+    let mut worker_items = 0u64;
+    let mut idle_ns = 0u64;
+    let mut jobs = 0u64;
+    let mut allocs = 0u64;
+    let mut hwm_bytes = 0u64;
+    for t in traces {
+        let is_worker = t.label.starts_with("pallas-worker");
+        for ev in &t.events {
+            match ev.cat {
+                "kernel" => {
+                    let mut b = [0u64; 3];
+                    let n = (ev.nargs as usize).min(3);
+                    for i in 0..n {
+                        b[i] = pow2_bucket(ev.args[i]);
+                    }
+                    let agg = kernels
+                        .entry((ev.name.to_string(), b))
+                        .or_insert(KernelAgg { calls: 0, total_ns: 0, macs: 0 });
+                    agg.calls += 1;
+                    agg.total_ns += ev.dur_ns.max(1);
+                    if n == 3 {
+                        agg.macs += ev.args[0] * ev.args[1] * ev.args[2];
+                    }
+                }
+                "pool" => match ev.name {
+                    "pool/task" => {
+                        tasks += 1;
+                        task_items += ev.args[0];
+                        if is_worker {
+                            worker_items += ev.args[0];
+                        }
+                    }
+                    "pool/idle" => idle_ns += ev.dur_ns,
+                    "pool/job" => jobs += 1,
+                    _ => {}
+                },
+                "arena" => {
+                    if ev.name.starts_with("arena/alloc") {
+                        allocs += 1;
+                    } else {
+                        hwm_bytes = hwm_bytes.max(ev.args[0]);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str("kernel shape histogram (dims bucketed to powers of two):\n");
+    out.push_str("  kernel        shape bucket            calls   total ms   mean us    GMAC/s\n");
+    if kernels.is_empty() {
+        out.push_str("  (no kernel events recorded)\n");
+    }
+    for ((name, b), agg) in &kernels {
+        let shape = format!("<={}x<={}x<={}", b[0], b[1], b[2]);
+        let mean_us = agg.total_ns as f64 / agg.calls as f64 / 1e3;
+        let gmacs = if agg.macs > 0 {
+            format!("{:.2}", agg.macs as f64 / (agg.total_ns as f64 / 1e9) / 1e9)
+        } else {
+            "-".to_string()
+        };
+        let _ = writeln!(
+            out,
+            "  {name:<13} {shape:<22} {calls:>6} {total:>10} {mean_us:>9.1} {gmacs:>9}",
+            calls = agg.calls,
+            total = fmt_dur_ms(agg.total_ns),
+        );
+    }
+    let _ = writeln!(
+        out,
+        "pool: {jobs} parallel jobs, {tasks} task spans, {task_items} items ({worker_items} stolen by workers), {} ms worker idle",
+        fmt_dur_ms(idle_ns),
+    );
+    let _ = writeln!(out, "arena: {allocs} fresh allocations, peak hwm {hwm_bytes} bytes");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &'static str, cat: &'static str, t0: u64, dur: u64, args: [u64; 3], nargs: u8) -> ProfEvent {
+        ProfEvent { name, cat, t0_ns: t0, dur_ns: dur, args, keys: &["d0", "d1", "d2"], nargs }
+    }
+
+    fn sample_traces() -> Vec<ThreadTrace> {
+        vec![
+            ThreadTrace {
+                tid: 0,
+                label: "main".into(),
+                events: vec![
+                    ev("gemm_i8/ABT", "kernel", 1_000, 5_000, [64, 100, 32], 3),
+                    ev("gemm_i8/ABT", "kernel", 9_000, 4_000, [64, 128, 50], 3),
+                    ev("train/step", "mark", 10_000, 0, [1, 0, 0], 1),
+                ],
+                dropped: 0,
+            },
+            ThreadTrace {
+                tid: 1,
+                label: "pallas-worker-0".into(),
+                events: vec![ev("pool/task", "pool", 2_000, 3_000, [4, 8, 0], 2)],
+                dropped: 2,
+            },
+        ]
+    }
+
+    #[test]
+    fn trace_json_is_valid_and_has_tracks() {
+        let json = trace_json(&sample_traces());
+        let v = crate::telemetry::sink::parse_json(&json).expect("trace must parse");
+        let evs = v.get("traceEvents").and_then(|e| e.as_array()).expect("traceEvents array");
+        // 2 thread_name + 2 sort_index + 1 ring_dropped + 4 events.
+        assert_eq!(evs.len(), 9);
+        let names: Vec<&str> =
+            evs.iter().filter_map(|e| e.get("name").and_then(|n| n.as_str())).collect();
+        assert!(names.contains(&"thread_name"));
+        assert!(names.contains(&"gemm_i8/ABT"));
+        let x = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("gemm_i8/ABT"))
+            .unwrap();
+        assert_eq!(x.get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert_eq!(x.get("ts").and_then(|t| t.as_f64()), Some(1.0)); // 1000 ns = 1 us
+        assert_eq!(x.get("dur").and_then(|d| d.as_f64()), Some(5.0));
+        let args = x.get("args").unwrap();
+        assert_eq!(args.get("d0").and_then(|d| d.as_f64()), Some(64.0));
+        // Instant event keeps ph "i".
+        let mark = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("train/step"))
+            .unwrap();
+        assert_eq!(mark.get("ph").and_then(|p| p.as_str()), Some("i"));
+    }
+
+    #[test]
+    fn kernel_summary_buckets_shapes() {
+        let s = kernel_summary(&sample_traces());
+        // 100→128 and 128→128 share a bucket; 32→32 and 50→64 do not.
+        assert!(s.contains("<=64x<=128x<=32"), "summary:\n{s}");
+        assert!(s.contains("<=64x<=128x<=64"), "summary:\n{s}");
+        assert!(s.contains("0 parallel jobs, 1 task spans"), "summary:\n{s}");
+        assert!(s.contains("4 items (4 stolen by workers)"), "summary:\n{s}");
+    }
+}

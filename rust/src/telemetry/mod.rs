@@ -15,7 +15,10 @@
 //! Layout: [`metrics`] (counters / gauges / fixed-bucket histograms and the
 //! named [`metrics::Registry`]), [`trace`] (RAII spans with per-name
 //! aggregates), [`numeric`] (DFP saturation / zero-fraction / exponent
-//! probes with sampling decimation), [`sink`] (console, JSONL, in-memory).
+//! probes with sampling decimation, plus the `--shadow-audit` float-shadow
+//! drift auditor), [`sink`] (console, JSONL, in-memory), [`profiler`]
+//! (per-thread event rings for timeline capture), [`chrome`] (Chrome
+//! trace-event JSON export + kernel shape histograms).
 //!
 //! Typical wiring (the CLI does this for `--trace` / `--metrics-out`):
 //!
@@ -32,8 +35,10 @@
 //! println!("{}", telemetry::summary_table());
 //! ```
 
+pub mod chrome;
 pub mod metrics;
 pub mod numeric;
+pub mod profiler;
 pub mod sink;
 pub mod trace;
 

@@ -6,8 +6,14 @@
 //!
 //! Probes are decimated by a [`Sampler`] so per-layer inspection stays off
 //! the critical path: a disabled-telemetry tick is one relaxed atomic load.
+//!
+//! This module also hosts the float-shadow drift auditor (`--shadow-audit`):
+//! instrumented layers (linear / conv2d / attention via qmat) compute an
+//! f32 reference alongside their integer output and report per-layer
+//! max/mean relative deviation through [`shadow_audit`], turning the
+//! paper's "trajectory unchanged" claim into a monitored invariant.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use super::sink::Event;
 use crate::dfp::{Dfp16Tensor, DfpTensor};
@@ -155,6 +161,79 @@ pub fn probe_dfp16(site: &str, t: &Dfp16Tensor) {
         return;
     }
     publish(site, &dfp16_health(t));
+}
+
+static SHADOW: AtomicBool = AtomicBool::new(false);
+
+/// Is float-shadow drift auditing on? Instrumented layers check this
+/// single relaxed atomic load before computing any f32 reference.
+#[inline(always)]
+pub fn shadow_enabled() -> bool {
+    SHADOW.load(Ordering::Relaxed)
+}
+
+/// Turn float-shadow auditing on or off (`--shadow-audit`). Auditing also
+/// requires telemetry to be enabled, since results flow to the sinks.
+pub fn set_shadow_audit(on: bool) {
+    SHADOW.store(on, Ordering::Relaxed);
+}
+
+/// Deviation of an integer layer output from its f32 shadow reference.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DriftStat {
+    /// Elements compared.
+    pub n: usize,
+    /// Max relative deviation, normalized by the reference's max |value|.
+    pub max_rel: f64,
+    /// Mean relative deviation under the same normalization.
+    pub mean_rel: f64,
+}
+
+/// Element-wise deviation of `int_out` from `float_ref`, normalized by the
+/// reference tensor's max |value| (a per-element denominator would explode
+/// on near-zero entries and hide what matters: error relative to the
+/// tensor's dynamic range, which is what the shared-exponent grid bounds).
+pub fn drift(int_out: &[f32], float_ref: &[f32]) -> DriftStat {
+    let n = int_out.len().min(float_ref.len());
+    if n == 0 {
+        return DriftStat::default();
+    }
+    let scale = float_ref[..n].iter().fold(0f64, |m, &v| m.max((v as f64).abs())).max(1e-30);
+    let mut max_rel = 0f64;
+    let mut sum_rel = 0f64;
+    for i in 0..n {
+        let rel = ((int_out[i] as f64) - (float_ref[i] as f64)).abs() / scale;
+        max_rel = max_rel.max(rel);
+        sum_rel += rel;
+    }
+    DriftStat { n, max_rel, mean_rel: sum_rel / n as f64 }
+}
+
+/// Publish a shadow-audit comparison for `site` (e.g. `"linear"`,
+/// `"conv2d"`, `"qmat/abt"`): sets `shadow/{site}/drift_{max,mean}`
+/// gauges, folds into the run-wide `shadow/run_drift_max` gauge, and emits
+/// a `drift` event to the sinks. No-op unless both telemetry and
+/// [`shadow_enabled`] are on.
+pub fn shadow_audit(site: &str, int_out: &[f32], float_ref: &[f32]) {
+    if !shadow_enabled() || !super::enabled() {
+        return;
+    }
+    let d = drift(int_out, float_ref);
+    let reg = super::registry();
+    reg.gauge(&format!("shadow/{site}/drift_max")).set(d.max_rel);
+    reg.gauge(&format!("shadow/{site}/drift_mean")).set(d.mean_rel);
+    let run_max = reg.gauge("shadow/run_drift_max");
+    let prev = run_max.get();
+    if prev.is_nan() || d.max_rel > prev {
+        run_max.set(d.max_rel);
+    }
+    super::emit(
+        Event::new("drift")
+            .with("layer", site)
+            .with("n", d.n)
+            .with("max_rel", d.max_rel)
+            .with("mean_rel", d.mean_rel),
+    );
 }
 
 #[cfg(test)]

@@ -1,0 +1,399 @@
+//! Deep execution profiler: timestamped begin/end events recorded into
+//! per-thread ring buffers, exported as Chrome trace-event JSON by
+//! [`super::chrome`] for Perfetto / `chrome://tracing`.
+//!
+//! Relationship to [`super::trace`]: spans aggregate *statistics* per name
+//! (count/total/mean/max) and are cheap enough to stay on in any `--trace`
+//! run; the profiler records the *individual* events with wall-clock
+//! placement, which is what a timeline needs and what aggregates destroy.
+//! Both share the same hot-path discipline:
+//!
+//! * **Off by default, near-zero when off.** Every instrumented site
+//!   guards on [`on`] — a single relaxed atomic load — and constructs
+//!   nothing else (no clock read, no buffer touch).
+//! * **No locks on the record path.** Each thread owns a fixed-capacity
+//!   ring ([`ThreadBuf`]): the owning thread is the only writer, publishing
+//!   with a release store of the head index. When the ring fills, the
+//!   oldest events are overwritten (the drop count is reported in the
+//!   export) — profiling never blocks or reallocates mid-run.
+//! * **Quiescent drain.** [`snapshot`] reads rings from the exporting
+//!   thread; call it only after [`disable`], once in-flight kernels have
+//!   finished (the CLI `profile` command drains after training returns,
+//!   when the pool is idle).
+//!
+//! Event identity is allocation-free: names, categories, and argument keys
+//! are `&'static str`, argument values are up to three `u64`s. The engine
+//! tags kernel events `gemm_i8/AB` … with their (d0, d1, d2) dims; the
+//! pool tags `pool/task` / `pool/idle` per worker; the arena tags
+//! allocations and high-water marks.
+
+use std::cell::{OnceCell, UnsafeCell};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Default per-thread ring capacity (events). 64 Ki events ≈ 4 MiB/thread.
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+static PROFILING: AtomicBool = AtomicBool::new(false);
+static CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_CAPACITY);
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+
+/// Is the profiler recording? Instrumented hot paths check this single
+/// relaxed atomic load before doing any other work.
+#[inline(always)]
+pub fn on() -> bool {
+    PROFILING.load(Ordering::Relaxed)
+}
+
+/// Start recording. `capacity` is the per-thread ring size in events
+/// (rounded up to a power of two; applies to rings whose storage has not
+/// been allocated yet — a ring sizes itself at its first recorded event).
+pub fn enable(capacity: usize) {
+    CAPACITY.store(capacity.next_power_of_two().max(64), Ordering::Relaxed);
+    let _ = epoch();
+    PROFILING.store(true, Ordering::Relaxed);
+}
+
+/// Stop recording. Call before [`snapshot`] so writers quiesce.
+pub fn disable() {
+    PROFILING.store(false, Ordering::Relaxed);
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the profiler was first enabled (event timestamps).
+#[inline]
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// One recorded event. `dur_ns == 0` marks an instant event.
+#[derive(Clone, Copy, Debug)]
+pub struct ProfEvent {
+    /// Event name (e.g. `"gemm_i8/ABT"`, `"pool/task"`, `"forward"`).
+    pub name: &'static str,
+    /// Category for trace-viewer filtering: `"kernel"`, `"pool"`,
+    /// `"arena"`, `"phase"`, `"mark"`.
+    pub cat: &'static str,
+    /// Begin timestamp, ns since profiler epoch.
+    pub t0_ns: u64,
+    /// Duration in ns (0 = instant event).
+    pub dur_ns: u64,
+    /// Argument values; only the first `nargs` are meaningful.
+    pub args: [u64; 3],
+    /// Argument key names, parallel to `args`.
+    pub keys: &'static [&'static str],
+    /// Number of meaningful arguments (≤ 3).
+    pub nargs: u8,
+}
+
+struct Slot(UnsafeCell<ProfEvent>);
+
+/// Per-thread event ring. Registration is cheap (the pool registers every
+/// worker at spawn so idle workers still get named tracks); the slot array
+/// is allocated lazily on the first push, so threads that never record
+/// while profiling cost ~nothing. The owning thread is the only writer;
+/// readers ([`snapshot`]) must run while the owner is quiescent (profiler
+/// disabled, no kernel in flight).
+pub struct ThreadBuf {
+    tid: u32,
+    label: String,
+    /// Total events ever written (monotonic); `head % cap` is the next slot.
+    head: AtomicU64,
+    /// Ring storage, sized from [`CAPACITY`] at first push (power of two).
+    slots: OnceLock<Box<[Slot]>>,
+}
+
+// SAFETY: slots are written only by the owning thread; cross-thread reads
+// happen only at quiescent drain (documented contract of `snapshot`).
+unsafe impl Sync for ThreadBuf {}
+unsafe impl Send for ThreadBuf {}
+
+impl ThreadBuf {
+    fn new(tid: u32, label: String) -> ThreadBuf {
+        ThreadBuf { tid, label, head: AtomicU64::new(0), slots: OnceLock::new() }
+    }
+
+    #[inline]
+    fn push(&self, ev: ProfEvent) {
+        let slots = self.slots.get_or_init(|| {
+            let cap = CAPACITY.load(Ordering::Relaxed);
+            let zero = ProfEvent {
+                name: "",
+                cat: "",
+                t0_ns: 0,
+                dur_ns: 0,
+                args: [0; 3],
+                keys: &[],
+                nargs: 0,
+            };
+            (0..cap).map(|_| Slot(UnsafeCell::new(zero))).collect()
+        });
+        let h = self.head.load(Ordering::Relaxed);
+        let idx = (h as usize) & (slots.len() - 1);
+        // SAFETY: only the owning thread writes (see type-level contract).
+        unsafe { *slots[idx].0.get() = ev };
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Copy out the retained events (oldest first) and the overwrite count.
+    fn drain_copy(&self) -> (Vec<ProfEvent>, u64) {
+        let Some(slots) = self.slots.get() else { return (Vec::new(), 0) };
+        let h = self.head.load(Ordering::Acquire) as usize;
+        let n = h.min(slots.len());
+        let mut out = Vec::with_capacity(n);
+        for i in (h - n)..h {
+            // SAFETY: quiescent-drain contract; see `snapshot`.
+            out.push(unsafe { *slots[i & (slots.len() - 1)].0.get() });
+        }
+        (out, (h - n) as u64)
+    }
+}
+
+fn buf_registry() -> &'static Mutex<Vec<Arc<ThreadBuf>>> {
+    static REG: OnceLock<Mutex<Vec<Arc<ThreadBuf>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL: OnceCell<Arc<ThreadBuf>> = const { OnceCell::new() };
+}
+
+fn with_local<R>(f: impl FnOnce(&ThreadBuf) -> R) -> R {
+    LOCAL.with(|cell| {
+        let buf = cell.get_or_init(|| {
+            let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            let label = std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("thread-{tid}"));
+            let buf = Arc::new(ThreadBuf::new(tid, label));
+            buf_registry().lock().unwrap().push(buf.clone());
+            buf
+        });
+        f(buf)
+    })
+}
+
+/// Register the calling thread with the profiler so it gets a named track
+/// in the exported trace even before (or without) recording any event.
+/// The engine worker pool calls this at worker spawn.
+pub fn register_thread() {
+    with_local(|_| {});
+}
+
+fn push_event(
+    name: &'static str,
+    cat: &'static str,
+    t0_ns: u64,
+    dur_ns: u64,
+    keys: &'static [&'static str],
+    vals: &[u64],
+) {
+    let nargs = vals.len().min(keys.len()).min(3);
+    let mut args = [0u64; 3];
+    args[..nargs].copy_from_slice(&vals[..nargs]);
+    with_local(|b| b.push(ProfEvent { name, cat, t0_ns, dur_ns, args, keys, nargs: nargs as u8 }));
+}
+
+/// Record an instant event (a point marker on this thread's track).
+/// No-op unless the profiler is [`on`].
+#[inline]
+pub fn instant(name: &'static str, cat: &'static str, keys: &'static [&'static str], vals: &[u64]) {
+    if !on() {
+        return;
+    }
+    push_event(name, cat, now_ns(), 0, keys, vals);
+}
+
+/// Record a complete (begin+duration) event with explicit timestamps.
+/// No-op unless the profiler is [`on`].
+#[inline]
+pub fn complete(
+    name: &'static str,
+    cat: &'static str,
+    t0_ns: u64,
+    dur_ns: u64,
+    keys: &'static [&'static str],
+    vals: &[u64],
+) {
+    if !on() {
+        return;
+    }
+    push_event(name, cat, t0_ns, dur_ns.max(1), keys, vals);
+}
+
+/// Live profiler span: records a complete event over its scope on drop.
+/// Inert (no clock read, nothing recorded) when the profiler is off.
+#[must_use = "a profiler span measures the scope it is bound to"]
+pub struct ProfSpan {
+    name: &'static str,
+    cat: &'static str,
+    keys: &'static [&'static str],
+    args: [u64; 3],
+    nargs: u8,
+    t0_ns: u64,
+    active: bool,
+}
+
+impl Drop for ProfSpan {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let dur = now_ns().saturating_sub(self.t0_ns).max(1);
+        with_local(|b| {
+            b.push(ProfEvent {
+                name: self.name,
+                cat: self.cat,
+                t0_ns: self.t0_ns,
+                dur_ns: dur,
+                args: self.args,
+                keys: self.keys,
+                nargs: self.nargs,
+            })
+        });
+    }
+}
+
+/// Open a profiler span with no arguments.
+#[inline]
+pub fn span(name: &'static str, cat: &'static str) -> ProfSpan {
+    span_args(name, cat, &[], &[])
+}
+
+/// Open a profiler span carrying up to three named `u64` arguments
+/// (e.g. GEMM dims). Inert when the profiler is off.
+#[inline]
+pub fn span_args(
+    name: &'static str,
+    cat: &'static str,
+    keys: &'static [&'static str],
+    vals: &[u64],
+) -> ProfSpan {
+    if !on() {
+        return ProfSpan { name, cat, keys: &[], args: [0; 3], nargs: 0, t0_ns: 0, active: false };
+    }
+    let nargs = vals.len().min(keys.len()).min(3);
+    let mut args = [0u64; 3];
+    args[..nargs].copy_from_slice(&vals[..nargs]);
+    ProfSpan { name, cat, keys, args, nargs: nargs as u8, t0_ns: now_ns(), active: true }
+}
+
+/// One thread's drained timeline.
+#[derive(Clone, Debug)]
+pub struct ThreadTrace {
+    /// Stable per-thread id (chrome `tid`).
+    pub tid: u32,
+    /// Thread name at registration (e.g. `"main"`, `"pallas-worker-3"`).
+    pub label: String,
+    /// Retained events, oldest first.
+    pub events: Vec<ProfEvent>,
+    /// Events overwritten by ring wrap-around (0 = complete timeline).
+    pub dropped: u64,
+}
+
+/// Copy every registered thread's ring out, sorted by thread id. Call
+/// only while recording is [`disable`]d and no instrumented code is
+/// running (e.g. after the training run returns) — rings are drained
+/// without synchronizing with their owning threads.
+pub fn snapshot() -> Vec<ThreadTrace> {
+    let bufs = buf_registry().lock().unwrap().clone();
+    let mut out: Vec<ThreadTrace> = bufs
+        .iter()
+        .map(|b| {
+            let (events, dropped) = b.drain_copy();
+            ThreadTrace { tid: b.tid, label: b.label.clone(), events, dropped }
+        })
+        .collect();
+    out.sort_by_key(|t| t.tid);
+    out
+}
+
+/// Clear all recorded events (ring heads rewind to empty). Same
+/// quiescence contract as [`snapshot`]; thread registrations are kept.
+pub fn reset() {
+    for b in buf_registry().lock().unwrap().iter() {
+        b.head.store(0, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex as StdMutex;
+
+    // Profiler globals are process-wide; unit tests serialize here.
+    static TEST_LOCK: StdMutex<()> = StdMutex::new(());
+
+    #[test]
+    fn off_profiler_records_nothing_and_span_is_inert() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        disable();
+        reset();
+        let s = span("pt_inert", "kernel");
+        assert!(!s.active);
+        drop(s);
+        instant("pt_inert_i", "mark", &[], &[]);
+        let mine = snapshot()
+            .iter()
+            .flat_map(|t| &t.events)
+            .filter(|e| e.name.starts_with("pt_inert"))
+            .count();
+        assert_eq!(mine, 0, "disabled profiler must not record");
+    }
+
+    #[test]
+    fn span_and_instant_round_trip() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        reset();
+        enable(1 << 8);
+        {
+            let _s = span_args("pt_k", "kernel", &["d0", "d1", "d2"], &[2, 3, 4]);
+            instant("pt_mark", "mark", &["step"], &[7]);
+        }
+        disable();
+        let snap = snapshot();
+        let events: Vec<&ProfEvent> =
+            snap.iter().flat_map(|t| &t.events).filter(|e| e.name.starts_with("pt_")).collect();
+        let k = events.iter().find(|e| e.name == "pt_k").expect("kernel span recorded");
+        assert_eq!(&k.args[..k.nargs as usize], &[2, 3, 4]);
+        assert!(k.dur_ns >= 1);
+        let m = events.iter().find(|e| e.name == "pt_mark").expect("instant recorded");
+        assert_eq!(m.dur_ns, 0);
+        assert_eq!(&m.args[..m.nargs as usize], &[7]);
+        // Instant fired inside the span's interval.
+        assert!(m.t0_ns >= k.t0_ns && m.t0_ns <= k.t0_ns + k.dur_ns);
+        reset();
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        reset();
+        enable(64);
+        std::thread::Builder::new()
+            .name("pt-wrap".into())
+            .spawn(|| {
+                for i in 0..200u64 {
+                    instant("pt_wrap", "mark", &["i"], &[i]);
+                }
+            })
+            .unwrap()
+            .join()
+            .unwrap();
+        disable();
+        let snap = snapshot();
+        let t = snap.iter().find(|t| t.label == "pt-wrap").expect("wrap thread registered");
+        assert_eq!(t.events.len(), 64, "ring retains exactly its capacity");
+        assert_eq!(t.dropped, 200 - 64);
+        // Oldest retained event is #136 (200 written, 64 kept).
+        assert_eq!(t.events[0].args[0], 136);
+        assert_eq!(t.events.last().unwrap().args[0], 199);
+        reset();
+    }
+}

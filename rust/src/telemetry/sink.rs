@@ -178,6 +178,14 @@ impl Event {
     }
 }
 
+/// Escape a string for embedding inside a JSON string literal (quotes not
+/// included). Shared by the sinks and the Chrome trace exporter.
+pub fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    json_escape_into(&mut out, s);
+    out
+}
+
 fn json_escape_into(out: &mut String, s: &str) {
     for c in s.chars() {
         match c {
@@ -301,6 +309,14 @@ impl Json {
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Element slice, if this is an array.
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
             _ => None,
         }
     }

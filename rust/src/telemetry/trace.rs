@@ -102,6 +102,20 @@ impl Drop for SpanGuard {
         let dur = t0.elapsed().as_secs_f64();
         DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
         record(self.name, dur);
+        if super::profiler::on() {
+            // Mirror the span onto this thread's profiler timeline so the
+            // pipeline phases frame the kernel events in the trace view.
+            let dur_ns = (dur * 1e9) as u64;
+            let end_ns = super::profiler::now_ns();
+            super::profiler::complete(
+                self.name,
+                "phase",
+                end_ns.saturating_sub(dur_ns),
+                dur_ns,
+                &["depth"],
+                &[self.depth as u64],
+            );
+        }
         super::emit(
             Event::new("span")
                 .with("name", self.name)

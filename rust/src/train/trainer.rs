@@ -104,6 +104,14 @@ impl<'a> Trainer<'a> {
             let mut batches =
                 BatchIter::new(train_ds, self.cfg.batch, self.cfg.seed, epoch as u64, true);
             loop {
+                // Step boundary tick on the profiler timeline: frames the
+                // phase spans and kernel events for trace navigation.
+                telemetry::profiler::instant(
+                    "train/step",
+                    "mark",
+                    &["step", "epoch"],
+                    &[step, epoch as u64],
+                );
                 let step_t0 = if telem { Some(std::time::Instant::now()) } else { None };
                 let b = {
                     let _s = trace::span("data_load");

@@ -109,23 +109,26 @@ fn run<F: FnMut()>(name: &str, budget_s: f64, macs: Option<f64>, mut f: F) -> Be
         macs,
     };
     if bench_json() {
+        // Raw stdout on purpose: these lines are the machine-readable
+        // protocol consumed by scripts/bench_compare.py and the committed
+        // BENCH_*.json baselines, independent of telemetry routing.
         println!("{}", res.to_json_line());
     } else {
-        println!("{}", res.report());
+        crate::telemetry::log(&res.report());
     }
     res
 }
 
 /// Print a section header in bench output.
 pub fn section(title: &str) {
-    println!("\n=== {title} ===");
+    crate::telemetry::log(&format!("\n=== {title} ==="));
 }
 
 /// Print a table row of `(label, value)` pairs — used by the experiment
 /// benches to emit the same rows the paper's tables report.
 pub fn row(cols: &[(&str, String)]) {
     let line: Vec<String> = cols.iter().map(|(k, v)| format!("{k}={v}")).collect();
-    println!("  {}", line.join("  "));
+    crate::telemetry::log(&format!("  {}", line.join("  ")));
 }
 
 #[cfg(test)]

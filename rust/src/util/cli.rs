@@ -56,6 +56,11 @@ impl Args {
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
+
+    /// Path option with default (e.g. `--trace-out trace.json`).
+    pub fn get_path(&self, key: &str, default: &str) -> std::path::PathBuf {
+        std::path::PathBuf::from(self.get(key).unwrap_or(default))
+    }
 }
 
 #[cfg(test)]
@@ -83,5 +88,12 @@ mod tests {
         let a = Args::parse_from(toks("bench"));
         assert_eq!(a.get_or("epochs", 7usize), 7);
         assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn path_option_with_default() {
+        let a = Args::parse_from(toks("profile --trace-out out/run.json"));
+        assert_eq!(a.get_path("trace-out", "trace.json"), std::path::PathBuf::from("out/run.json"));
+        assert_eq!(a.get_path("metrics-out", "m.jsonl"), std::path::PathBuf::from("m.jsonl"));
     }
 }

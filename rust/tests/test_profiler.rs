@@ -1,0 +1,196 @@
+//! Integration tests for the execution profiler: a real training run must
+//! produce per-thread timelines with kernel / pool / phase attribution
+//! that export as valid Chrome trace-event JSON, and the float-shadow
+//! auditor must stream per-layer drift metrics through the sinks.
+//!
+//! These tests share process-global profiler and telemetry state, so every
+//! test serializes on `LOCK` and tears down what it set up.
+
+use intrain::data::blobs::Blobs;
+use intrain::models::mlp;
+use intrain::nn::Arith;
+use intrain::optim::IntSgd;
+use intrain::telemetry::sink::{parse_json, Json, MemorySink};
+use intrain::telemetry::{self, chrome, numeric, profiler};
+use intrain::train::trainer::{TrainConfig, TrainRecord, Trainer};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    // A panicking test must not wedge the rest of the suite.
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A two-epoch int8 MLP run on a tiny blob dataset — the same workload the
+/// CLI `profile --model mlp` command drives.
+fn run_tiny(seed: u64) -> TrainRecord {
+    let train = Blobs::new_split(120, 3, 8, 0.3, 1, 10);
+    let test = Blobs::new_split(60, 3, 8, 0.3, 1, 20);
+    let mut model = mlp(&[8, 16, 3], Arith::int8(), 3);
+    let mut opt = IntSgd::new(0.9, 0.0, seed);
+    let cfg = TrainConfig { epochs: 2, batch: 32, ..Default::default() };
+    Trainer { model: &mut model, opt: &mut opt, cfg, dense: false }.run(&train, &test)
+}
+
+fn teardown() {
+    profiler::disable();
+    profiler::reset();
+    numeric::set_shadow_audit(false);
+    telemetry::set_enabled(false);
+    telemetry::clear_sinks();
+}
+
+#[test]
+fn profiled_run_records_kernels_phases_and_worker_tracks() {
+    let _g = lock();
+    telemetry::clear_sinks();
+    profiler::reset();
+    // Telemetry on so the trainer's phase spans mirror onto the profiler.
+    telemetry::set_enabled(true);
+    profiler::enable(profiler::DEFAULT_CAPACITY);
+    run_tiny(7);
+    profiler::disable();
+    telemetry::set_enabled(false);
+    let traces = profiler::snapshot();
+
+    // The engine tags every GEMM with kind and dims: an MLP training step
+    // exercises at least forward ABT plus backward AB and ATB.
+    let mut kernels: Vec<&str> = traces
+        .iter()
+        .flat_map(|t| &t.events)
+        .filter(|e| e.cat == "kernel")
+        .map(|e| e.name)
+        .collect();
+    kernels.sort_unstable();
+    kernels.dedup();
+    assert!(kernels.len() >= 3, "expected >=3 distinct kernel event names, got {kernels:?}");
+    assert!(kernels.iter().all(|n| n.starts_with("gemm_")), "{kernels:?}");
+
+    let k = traces.iter().flat_map(|t| &t.events).find(|e| e.cat == "kernel").unwrap();
+    assert_eq!(k.keys, &["d0", "d1", "d2"][..]);
+    assert_eq!(k.nargs, 3);
+    assert!(k.args.iter().all(|&d| d > 0), "kernel event missing dims: {k:?}");
+    assert!(k.dur_ns >= 1);
+
+    // Pipeline phases from trace::span frame the kernels on the timeline,
+    // and the trainer drops a step marker per iteration.
+    let names: Vec<&str> = traces.iter().flat_map(|t| &t.events).map(|e| e.name).collect();
+    for phase in ["forward", "backward", "optimizer_step"] {
+        assert!(names.contains(&phase), "missing phase event {phase}");
+    }
+    assert!(
+        traces
+            .iter()
+            .flat_map(|t| &t.events)
+            .any(|e| e.name == "train/step" && e.dur_ns == 0 && e.cat == "mark"),
+        "missing train/step instant markers"
+    );
+
+    // Every pool worker owns a named track even though this workload stays
+    // below the parallel threshold (idle workers register at spawn).
+    let workers = traces.iter().filter(|t| t.label.starts_with("pallas-worker")).count();
+    let expected = intrain::dfp::exec::pool().threads().saturating_sub(1);
+    assert_eq!(workers, expected, "one profiler track per pool worker");
+
+    // The Chrome export is valid JSON with named tracks and span events.
+    let json = chrome::trace_json(&traces);
+    let j = parse_json(&json).expect("trace JSON parses");
+    let evs = j.get("traceEvents").and_then(Json::as_array).expect("traceEvents array");
+    let meta_names: Vec<&str> = evs
+        .iter()
+        .filter(|e| {
+            e.get("ph").and_then(Json::as_str) == Some("M")
+                && e.get("name").and_then(Json::as_str) == Some("thread_name")
+        })
+        .filter_map(|e| e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str))
+        .collect();
+    assert_eq!(meta_names.len(), traces.len(), "every track gets thread_name metadata");
+    assert!(meta_names.iter().any(|n| n.starts_with("pallas-worker")) || expected == 0);
+    assert!(
+        evs.iter().any(|e| e.get("ph").and_then(Json::as_str) == Some("X")
+            && e.get("dur").and_then(Json::as_f64).is_some_and(|d| d > 0.0)),
+        "no complete events in export"
+    );
+
+    // The kernel summary table attributes time to the integer GEMMs.
+    let summary = chrome::kernel_summary(&traces);
+    assert!(summary.contains("gemm_i8"), "summary should list integer kernels:\n{summary}");
+    assert!(summary.contains("GMAC/s"), "{summary}");
+
+    teardown();
+}
+
+#[test]
+fn disabled_profiler_stays_silent_during_training() {
+    let _g = lock();
+    profiler::disable();
+    profiler::reset();
+    let before: usize = profiler::snapshot().iter().map(|t| t.events.len()).sum();
+    run_tiny(5);
+    let after: usize = profiler::snapshot().iter().map(|t| t.events.len()).sum();
+    assert_eq!(before, after, "training with the profiler off must record nothing");
+    teardown();
+}
+
+#[test]
+fn shadow_audit_streams_per_layer_drift() {
+    let _g = lock();
+    telemetry::clear_sinks();
+    let sink = Arc::new(MemorySink::new());
+    telemetry::add_sink(sink.clone());
+    telemetry::set_enabled(true);
+    numeric::set_shadow_audit(true);
+    run_tiny(9);
+    numeric::set_shadow_audit(false);
+    telemetry::set_enabled(false);
+
+    let drifts: Vec<Json> = sink
+        .lines()
+        .iter()
+        .map(|l| parse_json(l).unwrap())
+        .filter(|j| j.get("ev").and_then(Json::as_str) == Some("drift"))
+        .collect();
+    assert!(!drifts.is_empty(), "shadow audit must emit drift events");
+    assert!(
+        drifts.iter().any(|j| j.get("layer").and_then(Json::as_str) == Some("linear")),
+        "MLP shadow audit should cover the linear layers"
+    );
+    for j in &drifts {
+        let max = j.get("max_rel").and_then(Json::as_f64).expect("max_rel");
+        let mean = j.get("mean_rel").and_then(Json::as_f64).expect("mean_rel");
+        let n = j.get("n").and_then(Json::as_f64).expect("n");
+        assert!(n > 0.0);
+        assert!(mean >= 0.0 && max >= mean, "max {max} < mean {mean}");
+        assert!(max < 1.0, "int8 drift should stay well inside the reference range: {max}");
+    }
+
+    // Per-site and run-wide gauges were tracked alongside the events.
+    let gauges = telemetry::registry().gauges_snapshot();
+    let get = |name: &str| gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v);
+    let linear_max = get("shadow/linear/drift_max").expect("per-site gauge");
+    let run_max = get("shadow/run_drift_max").expect("run-wide gauge");
+    assert!(linear_max >= 0.0);
+    assert!(run_max >= linear_max, "run max folds over every site");
+    teardown();
+}
+
+#[test]
+fn drift_stat_math() {
+    // scale = max |ref| = 4 → per-element relative deviation [0, 0, 0.025].
+    let d = numeric::drift(&[1.0, 2.0, 3.9], &[1.0, 2.0, 4.0]);
+    assert_eq!(d.n, 3);
+    assert!((d.max_rel - 0.025).abs() < 1e-9, "{}", d.max_rel);
+    assert!((d.mean_rel - 0.025 / 3.0).abs() < 1e-9, "{}", d.mean_rel);
+
+    // Length mismatch compares the common prefix.
+    let d = numeric::drift(&[1.0, 5.0], &[1.0]);
+    assert_eq!(d.n, 1);
+    assert_eq!(d.max_rel, 0.0);
+
+    // Empty input is a clean zero, not NaN.
+    let d = numeric::drift(&[], &[]);
+    assert_eq!(d.n, 0);
+    assert_eq!(d.max_rel, 0.0);
+    assert_eq!(d.mean_rel, 0.0);
+}

@@ -152,6 +152,87 @@ fn jsonl_sink_streams_a_parseable_run() {
 }
 
 #[test]
+fn histogram_quantile_edge_cases() {
+    use intrain::telemetry::metrics::Histogram;
+
+    // Empty histogram: every quantile is 0.
+    let h = Histogram::new(&[1.0, 2.0, 4.0]);
+    assert_eq!(h.quantile(0.0), 0.0);
+    assert_eq!(h.quantile(0.5), 0.0);
+    assert_eq!(h.quantile(1.0), 0.0);
+
+    // Single bucket: every observation lands in it, so every quantile
+    // reports its upper bound.
+    let h = Histogram::new(&[10.0]);
+    for v in [0.5, 3.0, 9.99] {
+        h.observe(v);
+    }
+    assert_eq!(h.count(), 3);
+    assert_eq!(h.quantile(0.01), 10.0);
+    assert_eq!(h.quantile(0.5), 10.0);
+    assert_eq!(h.quantile(1.0), 10.0);
+
+    // Values above the top bound land in the overflow bucket, which
+    // reports the last finite bound rather than +inf.
+    let h = Histogram::new(&[1.0, 2.0]);
+    h.observe(100.0);
+    h.observe(200.0);
+    assert_eq!(h.quantile(0.5), 2.0);
+    assert_eq!(h.quantile(1.0), 2.0);
+    // Mixed: one in-range value pulls the low quantile back to bucket 0,
+    // the overflow tail still caps at the top bound.
+    h.observe(0.5);
+    assert_eq!(h.quantile(0.1), 1.0);
+    assert_eq!(h.quantile(1.0), 2.0);
+    // Out-of-range q clamps to [0, 1] (and q=0 still targets one sample).
+    assert_eq!(h.quantile(-1.0), 1.0);
+    assert_eq!(h.quantile(2.0), 2.0);
+
+    // Degenerate boundless histogram: everything overflows, quantiles
+    // report +inf (there is no finite bound to name).
+    let h = Histogram::new(&[]);
+    h.observe(5.0);
+    assert!(h.quantile(0.5).is_infinite());
+}
+
+#[test]
+fn span_guard_nests_and_resets_across_threads() {
+    let _g = lock();
+    telemetry::clear_sinks();
+    telemetry::trace::reset();
+    telemetry::set_enabled(true);
+    let threads: Vec<_> = (0..4)
+        .map(|_| {
+            std::thread::spawn(|| {
+                for _ in 0..8 {
+                    let outer = telemetry::trace::span("tt_conc_outer");
+                    assert!(outer.active());
+                    assert_eq!(outer.depth(), 0, "fresh thread opens at depth 0");
+                    let inner = telemetry::trace::span("tt_conc_inner");
+                    assert_eq!(inner.depth(), 1, "depth counters are per-thread");
+                    drop(inner);
+                    let sibling = telemetry::trace::span("tt_conc_inner");
+                    assert_eq!(sibling.depth(), 1, "depth unwinds when a span closes");
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    telemetry::set_enabled(false);
+    let stats = telemetry::trace::stats();
+    let count =
+        |name: &str| stats.iter().find(|(n, _)| n == name).map(|(_, s)| s.count).unwrap_or(0);
+    assert_eq!(count("tt_conc_outer"), 4 * 8);
+    assert_eq!(count("tt_conc_inner"), 4 * 8 * 2);
+    telemetry::trace::reset();
+    let stats = telemetry::trace::stats();
+    assert!(stats.iter().all(|(n, _)| !n.starts_with("tt_conc")), "reset clears span aggregates");
+    teardown();
+}
+
+#[test]
 fn verbose_progress_routes_through_sink() {
     let _g = lock();
     telemetry::clear_sinks();

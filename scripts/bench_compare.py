@@ -1,0 +1,137 @@
+#!/usr/bin/env python3
+"""Compare a BENCH_JSON=1 bench run against a committed baseline.
+
+Usage:
+    bench_compare.py CURRENT BASELINE [--threshold 0.15] [--warn-only]
+
+Both files hold JSON lines as emitted by the bench harness
+(`BENCH_JSON=1 cargo bench --bench bench_engine`): one object per bench
+with at least {"ev":"bench","name":...} plus "gmacs" (throughput,
+higher is better) and/or "mean_s" (latency, lower is better).
+Non-JSON lines (cargo chatter, section headers) are ignored, so raw
+captured stdout works unmodified.
+
+A baseline containing an {"ev":"bench_baseline","status":
+"pending-first-ci-run"} stub (committed when no toolchain was available
+to generate real numbers) compares as trivially passing, with a notice
+telling the maintainer how to regenerate it.
+
+Exit status: 1 when any bench regresses by more than --threshold
+(default 15%), 0 otherwise. --warn-only always exits 0 (used on PRs,
+where noisy shared runners should flag, not block).
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_benches(path):
+    """Parse bench JSON lines from *path*.
+
+    Returns (benches, stub_note): a dict name -> record for every
+    ``ev == "bench"`` line, and the note string of a pending-baseline
+    stub if one was found (else None).
+    """
+    benches = {}
+    stub_note = None
+    with open(path, "r", encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line.startswith("{"):
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            ev = rec.get("ev")
+            if ev == "bench" and "name" in rec:
+                benches[rec["name"]] = rec
+            elif ev == "bench_baseline" and rec.get("status") == "pending-first-ci-run":
+                stub_note = rec.get("note", "baseline pending first CI run")
+    return benches, stub_note
+
+
+def compare_one(name, cur, base, threshold):
+    """Return (delta_str, regressed) for one bench present in both runs.
+
+    Prefers GMAC/s (higher is better) and falls back to mean seconds
+    per iteration (lower is better).
+    """
+    if "gmacs" in cur and "gmacs" in base and base["gmacs"] > 0:
+        ratio = cur["gmacs"] / base["gmacs"]
+        delta = ratio - 1.0
+        desc = "%s: %.2f -> %.2f GMAC/s (%+.1f%%)" % (
+            name, base["gmacs"], cur["gmacs"], delta * 100.0)
+        return desc, delta < -threshold
+    if "mean_s" in cur and "mean_s" in base and base["mean_s"] > 0:
+        ratio = cur["mean_s"] / base["mean_s"]
+        delta = ratio - 1.0
+        desc = "%s: %.3g -> %.3g s/iter (%+.1f%%)" % (
+            name, base["mean_s"], cur["mean_s"], delta * 100.0)
+        return desc, delta > threshold
+    return "%s: no comparable metric (need gmacs or mean_s)" % name, False
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", help="bench JSONL from this run")
+    ap.add_argument("baseline", help="committed baseline JSONL (e.g. BENCH_8.json)")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="relative regression tolerance (default 0.15 = 15%%)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but always exit 0")
+    args = ap.parse_args(argv)
+
+    try:
+        current, cur_stub = load_benches(args.current)
+        baseline, base_stub = load_benches(args.baseline)
+    except OSError as e:
+        print("bench_compare: cannot read input: %s" % e)
+        return 0 if args.warn_only else 1
+
+    if cur_stub and not current:
+        print("bench_compare: current run %r is a pending stub; nothing to compare" %
+              args.current)
+        return 0
+    if base_stub and not baseline:
+        print("bench_compare: baseline %r is pending its first CI run -- skipping "
+              "comparison." % args.baseline)
+        print("bench_compare: to pin a real baseline: %s" % base_stub)
+        return 0
+    if not current:
+        print("bench_compare: no bench lines found in %r (was BENCH_JSON=1 set?)" %
+              args.current)
+        return 0 if args.warn_only else 1
+    if not baseline:
+        print("bench_compare: no bench lines found in baseline %r" % args.baseline)
+        return 0
+
+    regressions = []
+    for name in sorted(baseline):
+        if name not in current:
+            print("  MISSING  %s (in baseline, not in this run)" % name)
+            continue
+        desc, regressed = compare_one(name, current[name], baseline[name],
+                                      args.threshold)
+        tag = "REGRESS" if regressed else "ok"
+        print("  %-8s %s" % (tag, desc))
+        if regressed:
+            regressions.append(name)
+    for name in sorted(set(current) - set(baseline)):
+        print("  NEW      %s (not in baseline)" % name)
+
+    if regressions:
+        print("bench_compare: %d bench(es) regressed beyond %.0f%%: %s" %
+              (len(regressions), args.threshold * 100.0, ", ".join(regressions)))
+        if args.warn_only:
+            print("bench_compare: --warn-only set; not failing the build")
+            return 0
+        return 1
+    print("bench_compare: %d bench(es) within %.0f%% of baseline" %
+          (len(baseline), args.threshold * 100.0))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
