@@ -18,7 +18,11 @@ fn randi8(n: usize, seed: u64) -> Vec<i8> {
 }
 
 fn main() {
-    section(&format!("engine GEMM int8×int8→int32 ({} threads)", exec::pool().threads()));
+    section(&format!(
+        "engine GEMM int8×int8→int32 ({} threads, {} microkernel)",
+        exec::pool().threads(),
+        exec::packed::micro_kernel_name()
+    ));
     for (m, k, n) in [(128, 128, 128), (256, 256, 256), (512, 512, 512)] {
         for kind in [MatKind::AB, MatKind::ATB, MatKind::ABT] {
             let plan = GemmPlan::new(kind, (m, k, n));
@@ -57,6 +61,31 @@ fn main() {
             );
             row(&[("GMAC/s", format!("{:.2}", r.gmacs().unwrap_or(0.0)))]);
         }
+    }
+
+    section("packed vs reference dispatch (int8 AB, per-path)");
+    {
+        let (m, k, n) = (256, 256, 256);
+        let plan = GemmPlan::new(MatKind::AB, (m, k, n));
+        let a = randi8(plan.a_len(), 8);
+        let b = randi8(plan.b_len(), 9);
+        let mut out = vec![0i32; plan.out_len()];
+        for (label, path) in
+            [("packed", exec::KernelPath::Packed), ("ref", exec::KernelPath::Reference)]
+        {
+            exec::set_kernel_path(path);
+            let r = bench_macs(
+                &format!("engine/gemm_i8/path_{label}/{m}x{k}x{n}"),
+                0.4,
+                plan.macs() as f64,
+                || {
+                    exec::gemm_i8(plan, &a, &b, &mut out);
+                    std::hint::black_box(&out);
+                },
+            );
+            row(&[("GMAC/s", format!("{:.2}", r.gmacs().unwrap_or(0.0)))]);
+        }
+        exec::set_kernel_path(exec::KernelPath::Packed);
     }
 
     section("engine im2col conv2d (int8)");

@@ -77,6 +77,18 @@ impl<T: Default + Clone> ClassPool<T> {
     }
 
     fn take(&mut self, len: usize) -> Vec<T> {
+        self.take_inner(len, true)
+    }
+
+    /// Like [`ClassPool::take`] but without the zeroing pass: recycled
+    /// contents are left in place (stale data!) and only growth past the
+    /// buffer's previous length is default-filled. For call sites that
+    /// fully overwrite the buffer before reading it (GEMM pack panels).
+    fn take_dirty(&mut self, len: usize) -> Vec<T> {
+        self.take_inner(len, false)
+    }
+
+    fn take_inner(&mut self, len: usize, zeroed: bool) -> Vec<T> {
         // Smallest free buffer that fits; else allocate at the size class.
         let mut best: Option<usize> = None;
         for (i, b) in self.free.iter().enumerate() {
@@ -105,7 +117,11 @@ impl<T: Default + Clone> ClassPool<T> {
                 Vec::with_capacity(cap)
             }
         };
-        v.clear();
+        if zeroed {
+            v.clear();
+        } else {
+            v.truncate(len);
+        }
         v.resize(len, T::default());
         self.stats.outstanding_bytes += v.capacity() * std::mem::size_of::<T>();
         if self.stats.outstanding_bytes > self.stats.hwm_bytes {
@@ -186,10 +202,15 @@ pub fn reset() {
 }
 
 macro_rules! arena_class {
-    ($t:ty, $field:ident, $guard:ident, $scratch:ident, $take:ident, $recycle:ident, $doc:expr) => {
+    ($t:ty, $field:ident, $guard:ident, $scratch:ident, $take:ident, $take_dirty:ident, $recycle:ident, $doc:expr) => {
         #[doc = concat!("Check a zeroed `", stringify!($t), "` buffer (", $doc, ") out of the arena as a plain `Vec`; pair with [`", stringify!($recycle), "`].")]
         pub fn $take(len: usize) -> Vec<$t> {
             ARENA.with(|a| a.borrow_mut().$field.take(len))
+        }
+
+        #[doc = concat!("Check a `", stringify!($t), "` buffer out of the arena **without zeroing**: recycled contents are left in place, so the caller must fully overwrite the buffer before reading it. Skips the clear pass on the GEMM packing hot path; pair with [`", stringify!($recycle), "`].")]
+        pub fn $take_dirty(len: usize) -> Vec<$t> {
+            ARENA.with(|a| a.borrow_mut().$field.take_dirty(len))
         }
 
         #[doc = concat!("Return a `Vec<", stringify!($t), ">` to the arena free list.")]
@@ -232,11 +253,30 @@ arena_class!(
     ScratchI8,
     scratch_i8,
     take_i8_vec,
+    take_i8_vec_dirty,
     recycle_i8,
     "im2col columns, payload staging"
 );
-arena_class!(i32, i32p, ScratchI32, scratch_i32, take_i32_vec, recycle_i32, "GEMM accumulators");
-arena_class!(f32, f32p, ScratchF32, scratch_f32, take_f32_vec, recycle_f32, "float staging");
+arena_class!(
+    i32,
+    i32p,
+    ScratchI32,
+    scratch_i32,
+    take_i32_vec,
+    take_i32_vec_dirty,
+    recycle_i32,
+    "GEMM accumulators"
+);
+arena_class!(
+    f32,
+    f32p,
+    ScratchF32,
+    scratch_f32,
+    take_f32_vec,
+    take_f32_vec_dirty,
+    recycle_f32,
+    "float staging"
+);
 
 #[cfg(test)]
 mod tests {
@@ -278,6 +318,33 @@ mod tests {
         assert_eq!(st.i8c.hwm_bytes, hwm, "hwm persists after release");
         reset();
         assert_eq!(stats().i8c.hwm_bytes, 0);
+    }
+
+    #[test]
+    fn dirty_take_reuses_without_zeroing() {
+        reset();
+        let mut v = take_i32_vec(200);
+        v.iter_mut().for_each(|x| *x = 7);
+        let p = v.as_ptr();
+        recycle_i32(v);
+        // Dirty checkout of the same class: stale contents survive within
+        // the recycled length, growth past it is default-filled, and the
+        // allocation is reused (that's the whole point).
+        let d = take_i32_vec_dirty(100);
+        assert_eq!(d.as_ptr(), p, "dirty take should reuse the recycled buffer");
+        assert_eq!(d.len(), 100);
+        assert!(d.iter().all(|&x| x == 7), "dirty take must skip the zeroing pass");
+        recycle_i32(d);
+        let g = take_i32_vec_dirty(200);
+        assert_eq!(g.len(), 200);
+        assert!(g[100..].iter().all(|&x| x == 0), "growth past old len is default-filled");
+        let st = stats();
+        assert_eq!(st.i32c.allocs, 1, "both dirty takes served from the free list");
+        assert_eq!(st.i32c.reuses, 2);
+        // A fresh class still hands out defaults (no uninitialized memory).
+        let f = take_f32_vec_dirty(64);
+        assert!(f.iter().all(|&x| x == 0.0));
+        reset();
     }
 
     #[test]

@@ -6,15 +6,21 @@
 //! resources they were each reinventing:
 //!
 //! * **[`pool`]** — a persistent worker pool (spawned once, panel-queue
-//!   work stealing over row blocks, `PALLAS_THREADS` override). Zero
-//!   per-call thread spawns on the steady-state training path.
+//!   work stealing, `PALLAS_THREADS` override). Zero per-call thread
+//!   spawns on the steady-state training path.
 //! * **[`arena`]** — size-classed reusable scratch (int32 accumulators,
-//!   i8 im2col columns, quantization staging) with high-water-mark gauges.
+//!   i8 im2col columns, quantization staging, GEMM pack panels) with
+//!   high-water-mark gauges.
 //! * **plan dispatch** — layers describe *what* to contract
-//!   ([`GemmPlan`]: a [`MatKind`] plus dims); the engine owns blocking,
-//!   threading and memory. The blocked kernels live in
-//!   [`crate::dfp::gemm`] next to the scalar reference kernels they are
-//!   bit-identical to (integer accumulation is exact under any order).
+//!   ([`GemmPlan`]: a [`MatKind`] plus dims); the engine owns packing,
+//!   threading and memory. Contractions at or above [`PACKED_THRESHOLD`]
+//!   MACs run the packed register-blocked microkernels in [`packed`];
+//!   smaller ones (and everything under `PALLAS_GEMM=ref`) run the scalar
+//!   reference kernels in [`crate::dfp::gemm`]. The two paths are
+//!   bit-identical — for i8 because integer accumulation is exact under
+//!   any order, for f32 because the packed path preserves the reference
+//!   accumulation order (see [`packed`]) — which
+//!   `tests/test_gemm_conformance.rs` locks in.
 //!
 //! Layers reach the engine through the [`ExecCtx`] handle threaded through
 //! [`crate::nn::Ctx`], so alternate backends (e.g. a real
@@ -22,15 +28,18 @@
 //! code.
 
 pub mod arena;
+pub mod packed;
 pub mod pool;
 
 pub use arena::{
     recycle_f32, recycle_i32, recycle_i8, scratch_f32, scratch_i32, scratch_i8, take_f32_vec,
-    take_i32_vec, take_i8_vec, ArenaStats, ScratchF32, ScratchI32, ScratchI8,
+    take_f32_vec_dirty, take_i32_vec, take_i32_vec_dirty, take_i8_vec, take_i8_vec_dirty,
+    ArenaStats, ScratchF32, ScratchI32, ScratchI8,
 };
 pub use pool::{pool, spawn_count, Pool};
 
 use crate::dfp::gemm;
+use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Which contraction to perform (avoids materializing transposes):
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -57,7 +66,7 @@ impl MatKind {
 }
 
 /// A contraction described as data: the layer states *what* to multiply,
-/// the engine decides blocking and threading.
+/// the engine decides packing and threading.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct GemmPlan {
     /// Contraction kind.
@@ -93,23 +102,14 @@ impl GemmPlan {
         self.kind.out_len(self.dims)
     }
 
-    /// Multiply-accumulate count — the engine's parallelism threshold.
+    /// Multiply-accumulate count — the engine's dispatch/parallelism
+    /// threshold.
     pub fn macs(&self) -> usize {
         let (d0, d1, d2) = self.dims;
         d0 * d1 * d2
     }
 
-    /// Parallel decomposition: (output rows to split, row width).
-    fn par_shape(&self) -> (usize, usize) {
-        let (d0, d1, d2) = self.dims;
-        match self.kind {
-            MatKind::AB => (d0, d2),
-            MatKind::ATB => (d1, d2),
-            MatKind::ABT => (d0, d2),
-        }
-    }
-
-    fn check(&self, a_len: usize, b_len: usize, out_len: usize) {
+    pub(crate) fn check(&self, a_len: usize, b_len: usize, out_len: usize) {
         assert_eq!(a_len, self.a_len(), "A operand size mismatch for {:?}", self);
         assert_eq!(b_len, self.b_len(), "B operand size mismatch for {:?}", self);
         assert_eq!(out_len, self.out_len(), "output size mismatch for {:?}", self);
@@ -117,69 +117,116 @@ impl GemmPlan {
 }
 
 /// MAC threshold above which a contraction fans out over the pool.
-const PAR_THRESHOLD: usize = 1 << 18;
+pub(crate) const PAR_THRESHOLD: usize = 1 << 18;
 
-/// Row blocks per pool thread: finer than one block per thread so the
+/// Work chunks per pool thread: finer than one chunk per thread so the
 /// panel queue can rebalance uneven progress (work stealing).
-const BLOCKS_PER_THREAD: usize = 4;
+pub(crate) const BLOCKS_PER_THREAD: usize = 4;
 
-/// Raw output pointer shared across pool workers. Sound because each row
-/// block writes a disjoint `[row0·width, (row0+rows)·width)` window.
+/// MAC threshold below which packing overhead outweighs the microkernel
+/// win; such contractions run on the scalar reference kernels instead
+/// (bit-identical, so the cutoff is purely a perf knob).
+pub const PACKED_THRESHOLD: usize = 1 << 13;
+
+/// Which GEMM implementation the engine dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Scalar reference kernels in [`crate::dfp::gemm`] — serial ground
+    /// truth, the conformance baseline.
+    Reference,
+    /// Packed register-blocked microkernels in [`packed`] (default).
+    Packed,
+}
+
+// 0 = unresolved, 1 = packed, 2 = reference.
+static KERNEL_PATH: AtomicU8 = AtomicU8::new(0);
+
+/// Parse a `PALLAS_GEMM` value: `ref` / `reference` / `scalar` select the
+/// scalar reference kernels; anything else (or unset) the packed path.
+fn kernel_path_from(v: Option<&str>) -> KernelPath {
+    match v.map(str::trim) {
+        Some("ref") | Some("reference") | Some("scalar") => KernelPath::Reference,
+        _ => KernelPath::Packed,
+    }
+}
+
+/// The engine's active GEMM dispatch path. Resolved from the `PALLAS_GEMM`
+/// env var on first query and cached; override at runtime with
+/// [`set_kernel_path`].
+pub fn kernel_path() -> KernelPath {
+    match KERNEL_PATH.load(Ordering::Relaxed) {
+        1 => KernelPath::Packed,
+        2 => KernelPath::Reference,
+        _ => {
+            let p = kernel_path_from(std::env::var("PALLAS_GEMM").ok().as_deref());
+            set_kernel_path(p);
+            p
+        }
+    }
+}
+
+/// Force the engine's dispatch path (overrides `PALLAS_GEMM`). The
+/// conformance tests flip this to diff whole trajectories ref-vs-packed
+/// in one process; both paths are bit-identical, so flipping it is always
+/// behavior-preserving.
+pub fn set_kernel_path(p: KernelPath) {
+    let v = match p {
+        KernelPath::Packed => 1,
+        KernelPath::Reference => 2,
+    };
+    KERNEL_PATH.store(v, Ordering::Relaxed);
+}
+
+/// Raw output pointer shared across pool workers. Sound because each work
+/// item writes a disjoint window of the output.
 #[derive(Clone, Copy)]
-struct SendPtr<T>(*mut T);
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
 macro_rules! engine_gemm {
-    ($name:ident, $elem:ty, $acc:ty, $ab:path, $atb:path, $abt:path) => {
+    ($name:ident, $elem:ty, $acc:ty, $ab:path, $atb:path, $abt:path, $packed:path) => {
         /// Execute a contraction plan on raw payloads into a caller (or
-        /// arena) output buffer. Blocked; runs on the persistent pool above
-        /// the MAC threshold. Bit-identical to the scalar reference
-        /// kernels in [`crate::dfp::gemm`].
+        /// arena) output buffer. Dispatches to the packed microkernels
+        /// above [`PACKED_THRESHOLD`] MACs (unless [`kernel_path`] says
+        /// otherwise), to the scalar references below it; the two are
+        /// bit-identical for every shape and thread count.
         pub fn $name(plan: GemmPlan, a: &[$elem], b: &[$elem], out: &mut [$acc]) {
             plan.check(a.len(), b.len(), out.len());
-            let (rows, width) = plan.par_shape();
-            if rows == 0 || width == 0 {
+            if plan.out_len() == 0 {
                 return;
             }
             let (d0, d1, d2) = plan.dims;
-            // Profiler kernel event: name carries kernel + MatKind, args
-            // carry the plan dims. Inert (one relaxed load) when off.
+            let packed =
+                plan.macs() >= PACKED_THRESHOLD && kernel_path() == KernelPath::Packed;
+            // Profiler kernel event: name carries kernel + MatKind + path,
+            // args carry the plan dims plus the packed flag. Inert (one
+            // relaxed load) when off.
             let _prof = crate::telemetry::profiler::span_args(
-                match plan.kind {
-                    MatKind::AB => concat!(stringify!($name), "/AB"),
-                    MatKind::ATB => concat!(stringify!($name), "/ATB"),
-                    MatKind::ABT => concat!(stringify!($name), "/ABT"),
+                match (plan.kind, packed) {
+                    (MatKind::AB, true) => concat!(stringify!($name), "/AB/packed"),
+                    (MatKind::ATB, true) => concat!(stringify!($name), "/ATB/packed"),
+                    (MatKind::ABT, true) => concat!(stringify!($name), "/ABT/packed"),
+                    (MatKind::AB, false) => concat!(stringify!($name), "/AB/ref"),
+                    (MatKind::ATB, false) => concat!(stringify!($name), "/ATB/ref"),
+                    (MatKind::ABT, false) => concat!(stringify!($name), "/ABT/ref"),
                 },
                 "kernel",
-                &["d0", "d1", "d2"],
-                &[d0 as u64, d1 as u64, d2 as u64],
+                &["d0", "d1", "d2", "packed"],
+                &[d0 as u64, d1 as u64, d2 as u64, packed as u64],
             );
-            let run_block = move |a: &[$elem], b: &[$elem], row0: usize, cnt: usize, o: &mut [$acc]| {
-                match plan.kind {
-                    MatKind::AB => $ab(a, b, row0, cnt, d1, d2, o),
-                    MatKind::ATB => $atb(a, b, d0, d1, d2, row0, cnt, o),
-                    MatKind::ABT => $abt(a, b, d1, d2, row0, cnt, o),
+            if packed {
+                if crate::telemetry::enabled() {
+                    crate::telemetry::hot::PACKED_GEMMS.inc();
                 }
-            };
-            let p = pool();
-            if plan.macs() < PAR_THRESHOLD || p.threads() == 1 || rows == 1 {
-                run_block(a, b, 0, rows, out);
-                return;
+                $packed(plan, a, b, out);
+            } else {
+                match plan.kind {
+                    MatKind::AB => $ab(a, b, d0, d1, d2, out),
+                    MatKind::ATB => $atb(a, b, d0, d1, d2, out),
+                    MatKind::ABT => $abt(a, b, d0, d1, d2, out),
+                }
             }
-            let blocks = (p.threads() * BLOCKS_PER_THREAD).min(rows).max(1);
-            let rows_per = rows.div_ceil(blocks);
-            let blocks = rows.div_ceil(rows_per);
-            let optr = SendPtr(out.as_mut_ptr());
-            p.run(blocks, &|blk| {
-                let row0 = blk * rows_per;
-                let cnt = rows_per.min(rows - row0);
-                // Disjoint per-block output window (see SendPtr).
-                let o = unsafe {
-                    std::slice::from_raw_parts_mut(optr.0.add(row0 * width), cnt * width)
-                };
-                run_block(a, b, row0, cnt, o);
-            });
         }
     };
 }
@@ -188,17 +235,19 @@ engine_gemm!(
     gemm_i8,
     i8,
     i32,
-    gemm::kernel_ab_i8,
-    gemm::kernel_atb_i8,
-    gemm::kernel_abt_i8
+    gemm::igemm_ref,
+    gemm::igemm_at_b_ref,
+    gemm::igemm_a_bt_ref,
+    packed::gemm_i8
 );
 engine_gemm!(
     gemm_f32,
     f32,
     f32,
-    gemm::kernel_ab_f32,
-    gemm::kernel_atb_f32,
-    gemm::kernel_abt_f32
+    gemm::fgemm_ab_ref,
+    gemm::fgemm_at_b_ref,
+    gemm::fgemm_a_bt_ref,
+    packed::gemm_f32
 );
 
 /// Return a [`crate::dfp::tensor::DfpTensor`]'s payload to the arena once
@@ -261,7 +310,18 @@ mod tests {
     }
 
     #[test]
+    fn kernel_path_parsing() {
+        assert_eq!(kernel_path_from(None), KernelPath::Packed);
+        assert_eq!(kernel_path_from(Some("")), KernelPath::Packed);
+        assert_eq!(kernel_path_from(Some("packed")), KernelPath::Packed);
+        assert_eq!(kernel_path_from(Some("ref")), KernelPath::Reference);
+        assert_eq!(kernel_path_from(Some(" reference ")), KernelPath::Reference);
+        assert_eq!(kernel_path_from(Some("scalar")), KernelPath::Reference);
+    }
+
+    #[test]
     fn engine_matches_reference_small() {
+        // Below PACKED_THRESHOLD: exercises the reference dispatch arm.
         let a: Vec<i8> = (0..6).map(|i| i as i8 - 3).collect(); // 2×3
         let b: Vec<i8> = (0..12).map(|i| (i as i8) - 5).collect(); // 3×4
         let plan = GemmPlan::new(MatKind::AB, (2, 3, 4));
@@ -269,6 +329,27 @@ mod tests {
         gemm_i8(plan, &a, &b, &mut got);
         let mut want = vec![0i32; 8];
         crate::dfp::gemm::igemm_ref(&a, &b, 2, 3, 4, &mut want);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn engine_matches_reference_above_packed_threshold() {
+        // 32³ = 32768 MACs ≥ PACKED_THRESHOLD: whichever path the global
+        // dispatch picks (another test may have flipped it), the result
+        // must equal the scalar reference bit for bit.
+        let mut x = 7u32;
+        let mut rnd = || {
+            x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+            (x >> 24) as i8
+        };
+        let a: Vec<i8> = (0..32 * 32).map(|_| rnd()).collect();
+        let b: Vec<i8> = (0..32 * 32).map(|_| rnd()).collect();
+        let plan = GemmPlan::new(MatKind::AB, (32, 32, 32));
+        assert!(plan.macs() >= PACKED_THRESHOLD);
+        let mut got = vec![0i32; 32 * 32];
+        gemm_i8(plan, &a, &b, &mut got);
+        let mut want = vec![0i32; 32 * 32];
+        crate::dfp::gemm::igemm_ref(&a, &b, 32, 32, 32, &mut want);
         assert_eq!(got, want);
     }
 }

@@ -1,0 +1,576 @@
+//! Packed, register-blocked GEMM microkernels — the engine's fast path.
+//!
+//! Classic GotoBLAS/BLIS structure, specialized to the integer training
+//! workload:
+//!
+//! 1. **Pack** the operands: `A` into `MR`-row panels, `B` into `NR`-column
+//!    panels, both laid out k-major so the microkernel streams them
+//!    linearly. Packing folds the three [`MatKind`] layouts (AB, ATB, ABT)
+//!    into one canonical `M×K · K×N` form — the transposes live in the
+//!    pack strides ([`View`]), so there is exactly one microkernel.
+//!    int8 payloads are widened to `i32` during packing (once per element,
+//!    amortized over the whole panel reuse) so the inner loop is an
+//!    i32×i32 multiply-accumulate.
+//! 2. **Microkernel**: an `MR×NR` register tile with a fixed-width
+//!    accumulator array the compiler keeps in vector registers. The scalar
+//!    form auto-vectorizes; with the `simd` cargo feature an
+//!    AVX2 / NEON intrinsic tile is runtime-dispatched on top
+//!    ([`select_micro_i32`]).
+//! 3. **Parallelism**: B panels are packed once (fanned out over the
+//!    worker pool when large), then A row-panels are distributed over the
+//!    pool. Each job writes a disjoint set of output rows, so the result
+//!    is identical for any thread count.
+//!
+//! Bit-exactness contract (locked in by `tests/test_gemm_conformance.rs`):
+//!
+//! * **i8 → i32** accumulation is exact and associative, so any packing,
+//!   blocking, or threading is bit-identical to the scalar references in
+//!   [`crate::dfp::gemm`] by construction.
+//! * **f32** addition is *not* associative, so the f32 path keeps every
+//!   output element's accumulation a single ascending-k chain: panels span
+//!   the **full k extent** (no KC split — a split would reassociate the
+//!   adds) and the f32 microkernel accumulates k-ascending per element,
+//!   matching the reference order fadd for fadd. Only the integer
+//!   microkernel gets intrinsics; reordering SIMD horizontal sums would
+//!   break f32 bit-stability, and the shadow path is not the hot loop.
+//!
+//! Packing buffers are arena scratch ([`arena::take_i32_vec_dirty`] — the
+//! pack fully overwrites them, so the zeroing pass is skipped).
+
+use super::arena;
+use super::pool::pool;
+use super::{GemmPlan, MatKind, SendPtr, BLOCKS_PER_THREAD, PAR_THRESHOLD};
+use std::sync::OnceLock;
+
+/// Microkernel tile rows (A-panel height).
+pub const MR: usize = 4;
+/// Microkernel tile columns (B-panel width). 16 i32 lanes = two AVX2 or
+/// four NEON vectors per tile row.
+pub const NR: usize = 16;
+
+/// Operand-element threshold (`k·n`) above which B-panel packing itself
+/// fans out over the pool.
+const PACK_PAR_THRESHOLD: usize = 1 << 16;
+
+/// One canonical `C[m×n] = A[m×k]·B[k×n]` view of a contraction: the
+/// [`MatKind`] transposes are encoded as element strides, so packing (and
+/// everything after it) is layout-agnostic. `A[i, kk]` lives at
+/// `i·a_rs + kk·a_ks`; `B[kk, j]` at `kk·b_ks + j·b_cs`.
+struct View {
+    m: usize,
+    k: usize,
+    n: usize,
+    a_rs: usize,
+    a_ks: usize,
+    b_ks: usize,
+    b_cs: usize,
+}
+
+impl View {
+    fn of(plan: &GemmPlan) -> View {
+        let (d0, d1, d2) = plan.dims;
+        match plan.kind {
+            // C[d0×d2] = A[d0×d1]·B[d1×d2], both row-major.
+            MatKind::AB => View { m: d0, k: d1, n: d2, a_rs: d1, a_ks: 1, b_ks: d2, b_cs: 1 },
+            // C[d1×d2] = Aᵀ·B with A stored [d0×d1]: logical row i of Aᵀ
+            // walks A's column i, so the row stride is 1 and the k stride
+            // is A's leading dimension.
+            MatKind::ATB => View { m: d1, k: d0, n: d2, a_rs: 1, a_ks: d1, b_ks: d2, b_cs: 1 },
+            // C[d0×d2] = A·Bᵀ with B stored [d2×d1]: logical column j of
+            // Bᵀ is stored row j of B.
+            MatKind::ABT => View { m: d0, k: d1, n: d2, a_rs: d1, a_ks: 1, b_ks: 1, b_cs: d1 },
+        }
+    }
+}
+
+/// Pack A-panel `panel` (rows `panel·MR ..`) into `dst[k·MR]`, k-major
+/// (`dst[kk·MR + r]`), converting elements with `cvt` and padding rows
+/// past `m` with the default (zero) so the microkernel never branches on
+/// the tile edge.
+fn pack_a<S, D>(a: &[S], v: &View, panel: usize, dst: &mut [D], cvt: fn(S) -> D)
+where
+    S: Copy,
+    D: Copy + Default,
+{
+    let row0 = panel * MR;
+    let rows = MR.min(v.m - row0);
+    debug_assert_eq!(dst.len(), v.k * MR);
+    if v.a_ks == 1 {
+        // Operand rows are contiguous (AB, ABT): stream each row once,
+        // scattering into the k-major panel.
+        if rows < MR {
+            dst.iter_mut().for_each(|o| *o = D::default());
+        }
+        for r in 0..rows {
+            let arow = &a[(row0 + r) * v.a_rs..(row0 + r) * v.a_rs + v.k];
+            for (kk, &av) in arow.iter().enumerate() {
+                dst[kk * MR + r] = cvt(av);
+            }
+        }
+    } else {
+        // Transposed operand (ATB): for fixed kk the panel's MR source
+        // elements are contiguous, so the panel is written front to back.
+        for kk in 0..v.k {
+            let base = kk * v.a_ks + row0 * v.a_rs;
+            let tile = &mut dst[kk * MR..kk * MR + MR];
+            for (r, o) in tile.iter_mut().enumerate() {
+                *o = if r < rows { cvt(a[base + r * v.a_rs]) } else { D::default() };
+            }
+        }
+    }
+}
+
+/// Pack B-panel `panel` (columns `panel·NR ..`) into `dst[k·NR]`, k-major
+/// (`dst[kk·NR + j]`), padding columns past `n` with the default.
+fn pack_b<S, D>(b: &[S], v: &View, panel: usize, dst: &mut [D], cvt: fn(S) -> D)
+where
+    S: Copy,
+    D: Copy + Default,
+{
+    let col0 = panel * NR;
+    let cols = NR.min(v.n - col0);
+    debug_assert_eq!(dst.len(), v.k * NR);
+    if v.b_cs == 1 {
+        // Row-major B (AB, ATB): each panel row is a contiguous slice.
+        for kk in 0..v.k {
+            let src = &b[kk * v.b_ks + col0..kk * v.b_ks + col0 + cols];
+            let tile = &mut dst[kk * NR..(kk + 1) * NR];
+            for (j, o) in tile.iter_mut().enumerate() {
+                *o = if j < cols { cvt(src[j]) } else { D::default() };
+            }
+        }
+    } else {
+        // Transposed B (ABT): logical column j is stored row `col0 + j`.
+        if cols < NR {
+            dst.iter_mut().for_each(|o| *o = D::default());
+        }
+        for j in 0..cols {
+            let src = &b[(col0 + j) * v.b_cs..(col0 + j) * v.b_cs + v.k];
+            for (kk, &bv) in src.iter().enumerate() {
+                dst[kk * NR + j] = cvt(bv);
+            }
+        }
+    }
+}
+
+/// Scalar `MR×NR` i32 microkernel: overwrites `acc` with
+/// `Apanel·Bpanel` over `k` steps. Fixed-width rows and `zip`ped slices
+/// keep the inner loop bounds-check-free and auto-vectorizable; the
+/// zero-skip pays off on quantized payloads (exactness is unaffected —
+/// integer adds of zero are identity).
+fn micro_i32(apanel: &[i32], bpanel: &[i32], k: usize, acc: &mut [i32; MR * NR]) {
+    acc.fill(0);
+    for kk in 0..k {
+        let a4 = &apanel[kk * MR..kk * MR + MR];
+        let b16 = &bpanel[kk * NR..kk * NR + NR];
+        for (r, &av) in a4.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let row = &mut acc[r * NR..(r + 1) * NR];
+            for (c, &bv) in row.iter_mut().zip(b16) {
+                *c += av * bv;
+            }
+        }
+    }
+}
+
+/// Scalar `MR×NR` f32 microkernel. No zero-skip and no intrinsics: every
+/// output element accumulates strictly k-ascending so the result is
+/// bit-identical to the scalar reference order.
+fn micro_f32(apanel: &[f32], bpanel: &[f32], k: usize, acc: &mut [f32; MR * NR]) {
+    acc.fill(0.0);
+    for kk in 0..k {
+        let a4 = &apanel[kk * MR..kk * MR + MR];
+        let b16 = &bpanel[kk * NR..kk * NR + NR];
+        for (r, &av) in a4.iter().enumerate() {
+            let row = &mut acc[r * NR..(r + 1) * NR];
+            for (c, &bv) in row.iter_mut().zip(b16) {
+                *c += av * bv;
+            }
+        }
+    }
+}
+
+/// Signature shared by the scalar and intrinsic i32 microkernels.
+type MicroI32 = fn(&[i32], &[i32], usize, &mut [i32; MR * NR]);
+
+/// The i32 microkernel the integer path runs: AVX2 / NEON intrinsics when
+/// the `simd` feature is enabled and the CPU supports them (checked once),
+/// the scalar tile otherwise. Integer accumulation is order-independent,
+/// so every candidate is bit-identical.
+fn select_micro_i32() -> MicroI32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    fn select() -> MicroI32 {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            simd::micro_i32_avx2
+        } else {
+            micro_i32
+        }
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    fn select() -> MicroI32 {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            simd::micro_i32_neon
+        } else {
+            micro_i32
+        }
+    }
+    #[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    fn select() -> MicroI32 {
+        micro_i32
+    }
+    static SEL: OnceLock<MicroI32> = OnceLock::new();
+    *SEL.get_or_init(select)
+}
+
+/// Name of the active i32 microkernel (`"avx2"`, `"neon"`, or
+/// `"scalar"`) — surfaced by the engine benches so a perf number is never
+/// read without knowing which tile produced it.
+pub fn micro_kernel_name() -> &'static str {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    fn name() -> &'static str {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            "avx2"
+        } else {
+            "scalar"
+        }
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    fn name() -> &'static str {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            "neon"
+        } else {
+            "scalar"
+        }
+    }
+    #[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    fn name() -> &'static str {
+        "scalar"
+    }
+    name()
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd {
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    // The intrinsic tile hard-codes its register allocation to 4×16.
+    const _: () = assert!(MR == 4 && NR == 16, "AVX2 microkernel is specialized to 4x16");
+
+    /// Safe wrapper: [`super::select_micro_i32`] only hands this out after
+    /// `is_x86_feature_detected!("avx2")` passed.
+    pub(super) fn micro_i32_avx2(a: &[i32], b: &[i32], k: usize, acc: &mut [i32; MR * NR]) {
+        debug_assert!(a.len() >= k * MR && b.len() >= k * NR);
+        unsafe { micro_i32_avx2_imp(a, b, k, acc) }
+    }
+
+    /// 4×16 tile as 8 × `__m256i` accumulators (two per row): per k step,
+    /// two B loads and four broadcast-multiply-adds.
+    #[target_feature(enable = "avx2")]
+    unsafe fn micro_i32_avx2_imp(a: &[i32], b: &[i32], k: usize, acc: &mut [i32; MR * NR]) {
+        let mut c = [_mm256_setzero_si256(); 2 * MR];
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        for kk in 0..k {
+            let b0 = _mm256_loadu_si256(bp.add(kk * NR) as *const __m256i);
+            let b1 = _mm256_loadu_si256(bp.add(kk * NR + 8) as *const __m256i);
+            for r in 0..MR {
+                let av = _mm256_set1_epi32(*ap.add(kk * MR + r));
+                c[2 * r] = _mm256_add_epi32(c[2 * r], _mm256_mullo_epi32(av, b0));
+                c[2 * r + 1] = _mm256_add_epi32(c[2 * r + 1], _mm256_mullo_epi32(av, b1));
+            }
+        }
+        let cp = acc.as_mut_ptr();
+        for r in 0..MR {
+            _mm256_storeu_si256(cp.add(r * NR) as *mut __m256i, c[2 * r]);
+            _mm256_storeu_si256(cp.add(r * NR + 8) as *mut __m256i, c[2 * r + 1]);
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod simd {
+    use super::{MR, NR};
+    use std::arch::aarch64::*;
+
+    const _: () = assert!(MR == 4 && NR == 16, "NEON microkernel is specialized to 4x16");
+
+    /// Safe wrapper: [`super::select_micro_i32`] only hands this out after
+    /// `is_aarch64_feature_detected!("neon")` passed.
+    pub(super) fn micro_i32_neon(a: &[i32], b: &[i32], k: usize, acc: &mut [i32; MR * NR]) {
+        debug_assert!(a.len() >= k * MR && b.len() >= k * NR);
+        unsafe { micro_i32_neon_imp(a, b, k, acc) }
+    }
+
+    /// 4×16 tile as 16 × `int32x4_t` accumulators (four per row) fed by
+    /// `vmlaq_s32` multiply-accumulates.
+    #[target_feature(enable = "neon")]
+    unsafe fn micro_i32_neon_imp(a: &[i32], b: &[i32], k: usize, acc: &mut [i32; MR * NR]) {
+        let mut c = [vdupq_n_s32(0); 4 * MR];
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        for kk in 0..k {
+            let b0 = vld1q_s32(bp.add(kk * NR));
+            let b1 = vld1q_s32(bp.add(kk * NR + 4));
+            let b2 = vld1q_s32(bp.add(kk * NR + 8));
+            let b3 = vld1q_s32(bp.add(kk * NR + 12));
+            for r in 0..MR {
+                let av = vdupq_n_s32(*ap.add(kk * MR + r));
+                c[4 * r] = vmlaq_s32(c[4 * r], av, b0);
+                c[4 * r + 1] = vmlaq_s32(c[4 * r + 1], av, b1);
+                c[4 * r + 2] = vmlaq_s32(c[4 * r + 2], av, b2);
+                c[4 * r + 3] = vmlaq_s32(c[4 * r + 3], av, b3);
+            }
+        }
+        let cp = acc.as_mut_ptr();
+        for r in 0..MR {
+            for q in 0..4 {
+                vst1q_s32(cp.add(r * NR + 4 * q), c[4 * r + q]);
+            }
+        }
+    }
+}
+
+/// Generic packed driver: pack B once (parallel over column panels when
+/// large), then fan A row-panels out over the pool. Every job owns its
+/// A-panel scratch and writes a disjoint output-row window, so the result
+/// is independent of the thread count and schedule.
+#[allow(clippy::too_many_arguments)]
+fn run_packed<S, D>(
+    v: &View,
+    a: &[S],
+    b: &[S],
+    out: &mut [D],
+    cvt: fn(S) -> D,
+    micro: fn(&[D], &[D], usize, &mut [D; MR * NR]),
+    take: fn(usize) -> Vec<D>,
+    recycle: fn(Vec<D>),
+) where
+    S: Copy + Sync,
+    D: Copy + Default + Send + Sync,
+{
+    let (m, k, n) = (v.m, v.k, v.n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        // Empty contraction: the references define C = 0.
+        out.iter_mut().for_each(|o| *o = D::default());
+        return;
+    }
+    let apanels = m.div_ceil(MR);
+    let bpanels = n.div_ceil(NR);
+    let p = pool();
+
+    // Full-k B panels (see the module doc: a KC split would reassociate
+    // the f32 adds). The pack overwrites every slot, so take dirty.
+    let mut bpack = take(bpanels * k * NR);
+    if p.threads() > 1 && bpanels > 1 && k * n >= PACK_PAR_THRESHOLD {
+        let bptr = SendPtr(bpack.as_mut_ptr());
+        p.run(bpanels, &|q| {
+            // Disjoint per-panel window of the shared pack buffer.
+            let dst = unsafe { std::slice::from_raw_parts_mut(bptr.0.add(q * k * NR), k * NR) };
+            pack_b(b, v, q, dst, cvt);
+        });
+    } else {
+        for q in 0..bpanels {
+            pack_b(b, v, q, &mut bpack[q * k * NR..(q + 1) * k * NR], cvt);
+        }
+    }
+
+    let jobs = if m * k * n >= PAR_THRESHOLD && p.threads() > 1 {
+        (p.threads() * BLOCKS_PER_THREAD).min(apanels).max(1)
+    } else {
+        1
+    };
+    let per = apanels.div_ceil(jobs);
+    let jobs = apanels.div_ceil(per);
+    let optr = SendPtr(out.as_mut_ptr());
+    {
+        let bpack = &bpack;
+        let worker = |job: usize| {
+            let p0 = job * per;
+            let p1 = (p0 + per).min(apanels);
+            let mut apack = take(k * MR);
+            let mut acc = [D::default(); MR * NR];
+            for pi in p0..p1 {
+                pack_a(a, v, pi, &mut apack, cvt);
+                let row0 = pi * MR;
+                let rows = MR.min(m - row0);
+                for q in 0..bpanels {
+                    let col0 = q * NR;
+                    let cols = NR.min(n - col0);
+                    micro(&apack, &bpack[q * k * NR..(q + 1) * k * NR], k, &mut acc);
+                    for r in 0..rows {
+                        // Disjoint per-row-panel output window (SendPtr
+                        // soundness); edge padding is discarded here.
+                        let dst = unsafe {
+                            std::slice::from_raw_parts_mut(optr.0.add((row0 + r) * n + col0), cols)
+                        };
+                        dst.copy_from_slice(&acc[r * NR..r * NR + cols]);
+                    }
+                }
+            }
+            recycle(apack);
+        };
+        if jobs == 1 {
+            worker(0);
+        } else {
+            p.run(jobs, &worker);
+        }
+    }
+    recycle(bpack);
+}
+
+/// Packed integer contraction: i8 payloads widened to i32 panels, i32
+/// microkernel (intrinsics under `--features simd`). Bit-identical to the
+/// scalar references in [`crate::dfp::gemm`] for every shape and thread
+/// count.
+pub fn gemm_i8(plan: GemmPlan, a: &[i8], b: &[i8], out: &mut [i32]) {
+    plan.check(a.len(), b.len(), out.len());
+    run_packed(
+        &View::of(&plan),
+        a,
+        b,
+        out,
+        |x| x as i32,
+        select_micro_i32(),
+        arena::take_i32_vec_dirty,
+        arena::recycle_i32,
+    );
+}
+
+/// Packed f32 contraction (fp32 baseline / shadow path). Scalar
+/// microkernel in reference accumulation order — bit-identical to the
+/// scalar references for every shape and thread count.
+pub fn gemm_f32(plan: GemmPlan, a: &[f32], b: &[f32], out: &mut [f32]) {
+    plan.check(a.len(), b.len(), out.len());
+    run_packed(
+        &View::of(&plan),
+        a,
+        b,
+        out,
+        |x| x,
+        micro_f32,
+        arena::take_f32_vec_dirty,
+        arena::recycle_f32,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfp::gemm::{
+        fgemm_a_bt_ref, fgemm_ab_ref, fgemm_at_b_ref, igemm_a_bt_ref, igemm_at_b_ref, igemm_ref,
+    };
+    use crate::dfp::rng::Rng;
+
+    fn randi8(len: usize, rng: &mut Rng) -> Vec<i8> {
+        (0..len).map(|_| (rng.next_u32() % 255) as i8).collect()
+    }
+
+    #[test]
+    fn pack_a_layout_is_k_major_with_zero_padded_rows() {
+        // 3×2 row-major A, one partial panel (3 < MR rows).
+        let v = View { m: 3, k: 2, n: 1, a_rs: 2, a_ks: 1, b_ks: 1, b_cs: 1 };
+        let a: [i8; 6] = [1, 2, 3, 4, 5, 6];
+        let mut dst = vec![-9i32; v.k * MR];
+        pack_a(&a, &v, 0, &mut dst, |x: i8| x as i32);
+        assert_eq!(dst, vec![1, 3, 5, 0, 2, 4, 6, 0]);
+        // Same matrix viewed transposed (ATB strides): logical A is 2×3.
+        let vt = View { m: 2, k: 3, n: 1, a_rs: 1, a_ks: 2, b_ks: 1, b_cs: 1 };
+        let mut dt = vec![-9i32; vt.k * MR];
+        pack_a(&a, &vt, 0, &mut dt, |x: i8| x as i32);
+        assert_eq!(dt, vec![1, 2, 0, 0, 3, 4, 0, 0, 5, 6, 0, 0]);
+    }
+
+    #[test]
+    fn pack_b_layout_is_k_major_with_zero_padded_cols() {
+        // 2×5 row-major B, one partial panel (5 < NR columns).
+        let v = View { m: 1, k: 2, n: 5, a_rs: 1, a_ks: 1, b_ks: 5, b_cs: 1 };
+        let b: Vec<i8> = vec![10, 11, 12, 13, 14, 20, 21, 22, 23, 24];
+        let mut dst = vec![-9i32; v.k * NR];
+        pack_b(&b, &v, 0, &mut dst, |x: i8| x as i32);
+        let mut want = vec![0i32; 2 * NR];
+        want[..5].copy_from_slice(&[10, 11, 12, 13, 14]);
+        want[NR..NR + 5].copy_from_slice(&[20, 21, 22, 23, 24]);
+        assert_eq!(dst, want);
+    }
+
+    #[test]
+    fn selected_micro_matches_scalar_tile() {
+        let k = 37;
+        let mut rng = Rng::new(5);
+        let a: Vec<i32> = (0..k * MR).map(|_| (rng.next_u32() % 301) as i32 - 150).collect();
+        let b: Vec<i32> = (0..k * NR).map(|_| (rng.next_u32() % 301) as i32 - 150).collect();
+        let mut want = [0i32; MR * NR];
+        micro_i32(&a, &b, k, &mut want);
+        let mut got = [99i32; MR * NR]; // pre-poisoned: the tile must overwrite
+        select_micro_i32()(&a, &b, k, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn packed_i8_bit_identical_to_reference_all_kinds() {
+        let mut rng = Rng::new(31);
+        // Shapes straddle the panel sizes: below/at/above MR and NR,
+        // non-multiples, and a multi-panel case.
+        for dims in [(1, 1, 1), (3, 5, 17), (4, 16, 16), (5, 33, 19), (37, 41, 53)] {
+            for kind in [MatKind::AB, MatKind::ATB, MatKind::ABT] {
+                let plan = GemmPlan::new(kind, dims);
+                let a = randi8(plan.a_len(), &mut rng);
+                let b = randi8(plan.b_len(), &mut rng);
+                let mut got = vec![-7i32; plan.out_len()];
+                gemm_i8(plan, &a, &b, &mut got);
+                let mut want = vec![0i32; plan.out_len()];
+                let (d0, d1, d2) = dims;
+                match kind {
+                    MatKind::AB => igemm_ref(&a, &b, d0, d1, d2, &mut want),
+                    MatKind::ATB => igemm_at_b_ref(&a, &b, d0, d1, d2, &mut want),
+                    MatKind::ABT => igemm_a_bt_ref(&a, &b, d0, d1, d2, &mut want),
+                }
+                assert_eq!(got, want, "packed != ref for {kind:?} {dims:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_f32_bit_identical_to_reference_all_kinds() {
+        let mut rng = Rng::new(32);
+        for dims in [(3, 5, 17), (5, 33, 19), (20, 24, 40)] {
+            for kind in [MatKind::AB, MatKind::ATB, MatKind::ABT] {
+                let plan = GemmPlan::new(kind, dims);
+                let a: Vec<f32> = (0..plan.a_len()).map(|_| rng.next_gaussian()).collect();
+                let b: Vec<f32> = (0..plan.b_len()).map(|_| rng.next_gaussian()).collect();
+                let mut got = vec![f32::NAN; plan.out_len()];
+                gemm_f32(plan, &a, &b, &mut got);
+                let mut want = vec![0f32; plan.out_len()];
+                let (d0, d1, d2) = dims;
+                match kind {
+                    MatKind::AB => fgemm_ab_ref(&a, &b, d0, d1, d2, &mut want),
+                    MatKind::ATB => fgemm_at_b_ref(&a, &b, d0, d1, d2, &mut want),
+                    MatKind::ABT => fgemm_a_bt_ref(&a, &b, d0, d1, d2, &mut want),
+                }
+                let gb: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+                let wb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(gb, wb, "packed f32 != ref bits for {kind:?} {dims:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_k_yields_zero_output() {
+        let plan = GemmPlan::new(MatKind::AB, (3, 0, 4));
+        let (a, b): (Vec<i8>, Vec<i8>) = (vec![], vec![]);
+        let mut out = vec![55i32; 12];
+        gemm_i8(plan, &a, &b, &mut out);
+        assert_eq!(out, vec![0i32; 12]);
+    }
+
+    #[test]
+    fn micro_kernel_name_is_known() {
+        assert!(["scalar", "avx2", "neon"].contains(&micro_kernel_name()));
+    }
+}

@@ -149,8 +149,12 @@ impl Pool {
         // Profiler: "pool/job" spans publish→drain on the caller's track;
         // the caller's own share of the items is a "pool/task" like any
         // worker's, so queue-drain progress is visible per thread.
-        let _job_span =
-            crate::telemetry::profiler::span_args("pool/job", "pool", &["n"], &[n as u64]);
+        let _job_span = crate::telemetry::profiler::span_args(
+            "pool/job",
+            "pool",
+            &["n", "threads"],
+            &[n as u64, self.threads as u64],
+        );
         {
             let mut st = self.shared.state.lock().unwrap();
             st.epoch += 1;

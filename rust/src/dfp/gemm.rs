@@ -9,16 +9,15 @@
 //! pass of a linear layer needs `Aᵀ·B` and `A·Bᵀ`; dedicated entry points
 //! avoid materializing transposes.
 //!
-//! This module holds exactly two tiers of kernel, both consumed by the
-//! execution engine ([`super::exec`]):
-//!
-//! * **scalar reference kernels** (`*_ref`) — naive triple loops, the
-//!   ground truth the property tests compare against;
-//! * **blocked row kernels** (`kernel_*`) — cache-blocked, called per row
-//!   block by [`super::exec::gemm_i8`] / [`super::exec::gemm_f32`], which
-//!   own threading (persistent pool) and scratch (arena). Integer
-//!   accumulation is exact and order-independent, so the blocked kernels
-//!   are bit-identical to the references by construction.
+//! This module holds the **scalar reference kernels** (`*_ref`, i8 and
+//! f32): naive loops in a fixed, documented accumulation order
+//! (k-ascending per output element). They are the ground truth the
+//! conformance suite compares against, and the path the engine
+//! ([`super::exec`]) dispatches to for small contractions or under
+//! `PALLAS_GEMM=ref`. The fast path — packed, register-blocked
+//! microkernels — lives in [`super::exec::packed`] and is bit-identical
+//! to these references: exactly for i8 (integer accumulation is
+//! order-independent), by order-preservation for f32.
 //!
 //! The public `igemm*` entry points below are thin wrappers over the
 //! engine, kept for API stability.
@@ -123,214 +122,53 @@ pub fn igemm_a_bt_ref(a: &[i8], b: &[i8], m: usize, n: usize, p: usize, out: &mu
 }
 
 // ---------------------------------------------------------------------------
-// Blocked engine kernels — compute `rows` output rows starting at `row0`
-// into `out` (a disjoint window of length rows × row-width). Threading is
-// the engine's job; these never spawn.
+// Scalar f32 reference kernels — same loop orders as the i8 references.
+// Every output element accumulates strictly k-ascending; this order is the
+// bitwise contract the packed f32 path reproduces, so keep it fixed.
 // ---------------------------------------------------------------------------
 
-/// Blocked AB kernel.
-///
-/// §Perf: the B k-panel is widened to i32 once per panel (amortized over
-/// all `rows`), so the inner multiply-accumulate is i32×i32 — the form
-/// LLVM auto-vectorizes — instead of a per-element i8 sign-extension that
-/// defeated vectorization (2.9 → ≈8 GMAC/s; see EXPERIMENTS.md §Perf).
-/// The widened panel is arena scratch, reused across calls per thread.
-pub(crate) fn kernel_ab_i8(
-    a: &[i8],
-    b: &[i8],
-    row0: usize,
-    rows: usize,
-    k: usize,
-    n: usize,
-    out: &mut [i32],
-) {
-    const KB: usize = 128; // k-panel: widened panel (KB·n·4 B) stays in L2
-    for o in out.iter_mut() {
-        *o = 0;
-    }
-    let mut bw = exec::take_i32_vec(KB.min(k) * n);
-    let mut k0 = 0;
-    while k0 < k {
-        let kb = KB.min(k - k0);
-        let panel = &mut bw[..kb * n];
-        for (w, &v) in panel.iter_mut().zip(&b[k0 * n..(k0 + kb) * n]) {
-            *w = v as i32;
-        }
-        for i in 0..rows {
-            let arow = &a[(row0 + i) * k + k0..(row0 + i) * k + k0 + kb];
-            let crow = &mut out[i * n..(i + 1) * n];
-            // Two k-steps per iteration: one load of each C element feeds
-            // two fused multiply-adds (halves the C-row traffic, which is
-            // the bottleneck once the multiply vectorizes).
-            let mut kk = 0;
-            while kk + 1 < kb {
-                let av0 = arow[kk] as i32;
-                let av1 = arow[kk + 1] as i32;
-                if av0 == 0 && av1 == 0 {
-                    kk += 2;
-                    continue;
-                }
-                let b0 = &panel[kk * n..kk * n + n];
-                let b1 = &panel[(kk + 1) * n..(kk + 1) * n + n];
-                for ((c, &v0), &v1) in crow.iter_mut().zip(b0).zip(b1) {
-                    *c += av0 * v0 + av1 * v1;
-                }
-                kk += 2;
-            }
-            if kk < kb {
-                let av = arow[kk] as i32;
-                if av != 0 {
-                    let brow = &panel[kk * n..kk * n + n];
-                    for (c, &bv) in crow.iter_mut().zip(brow) {
-                        *c += av * bv;
-                    }
-                }
-            }
-        }
-        k0 += kb;
-    }
-    exec::recycle_i32(bw);
-}
-
-/// Blocked ATB kernel: output rows `row0..row0+rows` of `Aᵀ·B`
-/// (`A[r×m]`, `B[r×n]`). The `r`-outer order keeps both operand reads
-/// sequential: for fixed `rr`, `A[rr, row0..row0+rows]` is contiguous.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn kernel_atb_i8(
-    a: &[i8],
-    b: &[i8],
-    r: usize,
-    m: usize,
-    n: usize,
-    row0: usize,
-    rows: usize,
-    out: &mut [i32],
-) {
-    for o in out.iter_mut() {
-        *o = 0;
-    }
-    for rr in 0..r {
-        let arow = &a[rr * m + row0..rr * m + row0 + rows];
-        let brow = &b[rr * n..(rr + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0 {
-                continue;
-            }
-            let av = av as i32;
-            let crow = &mut out[i * n..(i + 1) * n];
-            for (c, &bv) in crow.iter_mut().zip(brow) {
-                *c += av * bv as i32;
-            }
-        }
-    }
-}
-
-/// Blocked ABT kernel: output rows `row0..row0+rows` of `A·Bᵀ`
-/// (`A[m×n]`, `B[p×n]`) — row-by-row dot products.
-pub(crate) fn kernel_abt_i8(
-    a: &[i8],
-    b: &[i8],
-    n: usize,
-    p: usize,
-    row0: usize,
-    rows: usize,
-    out: &mut [i32],
-) {
-    for i in 0..rows {
-        let arow = &a[(row0 + i) * n..(row0 + i + 1) * n];
-        let crow = &mut out[i * p..(i + 1) * p];
-        for (j, c) in crow.iter_mut().enumerate() {
-            let brow = &b[j * n..(j + 1) * n];
-            let mut s = 0i32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                s += av as i32 * bv as i32;
-            }
-            *c = s;
-        }
-    }
-}
-
-/// Blocked f32 AB kernel (fp32 baseline path). Per-row accumulation order
-/// matches the serial kernel, so row-parallel results are bit-stable.
-pub(crate) fn kernel_ab_f32(
-    a: &[f32],
-    b: &[f32],
-    row0: usize,
-    rows: usize,
-    k: usize,
-    n: usize,
-    out: &mut [f32],
-) {
+/// Reference f32 `C[m×n] = A[m×k]·B[k×n]`.
+pub fn fgemm_ab_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), m * n);
     for o in out.iter_mut() {
         *o = 0.0;
     }
-    for i in 0..rows {
-        let arow = &a[(row0 + i) * k..(row0 + i) * k + k];
-        let crow = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..kk * n + n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            for j in 0..n {
+                out[i * n + j] += av * b[kk * n + j];
             }
         }
     }
 }
 
-/// Blocked f32 ATB kernel (`A[r×m]`, `B[r×n]`), `rr`-ascending per output
-/// element — same accumulation order as the serial loop.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn kernel_atb_f32(
-    a: &[f32],
-    b: &[f32],
-    r: usize,
-    m: usize,
-    n: usize,
-    row0: usize,
-    rows: usize,
-    out: &mut [f32],
-) {
+/// Reference f32 `C[m×n] = Aᵀ·B` with `A[r×m]`, `B[r×n]`.
+pub fn fgemm_at_b_ref(a: &[f32], b: &[f32], r: usize, m: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), m * n);
     for o in out.iter_mut() {
         *o = 0.0;
     }
-    for rr in 0..r {
-        let arow = &a[rr * m + row0..rr * m + row0 + rows];
-        let brow = &b[rr * n..(rr + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut out[i * n..(i + 1) * n];
-            for (c, &bv) in crow.iter_mut().zip(brow) {
-                *c += av * bv;
+    for i in 0..m {
+        for rr in 0..r {
+            let av = a[rr * m + i];
+            for j in 0..n {
+                out[i * n + j] += av * b[rr * n + j];
             }
         }
     }
 }
 
-/// Blocked f32 ABT kernel (`A[m×n]`, `B[p×n]`) — row dot products in
-/// `t`-ascending order.
-pub(crate) fn kernel_abt_f32(
-    a: &[f32],
-    b: &[f32],
-    n: usize,
-    p: usize,
-    row0: usize,
-    rows: usize,
-    out: &mut [f32],
-) {
-    for i in 0..rows {
-        let arow = &a[(row0 + i) * n..(row0 + i + 1) * n];
-        let crow = &mut out[i * p..(i + 1) * p];
-        for (j, c) in crow.iter_mut().enumerate() {
-            let brow = &b[j * n..(j + 1) * n];
+/// Reference f32 `C[m×p] = A·Bᵀ` with `A[m×n]`, `B[p×n]`.
+pub fn fgemm_a_bt_ref(a: &[f32], b: &[f32], m: usize, n: usize, p: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), m * p);
+    for i in 0..m {
+        for j in 0..p {
             let mut s = 0f32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                s += av * bv;
+            for t in 0..n {
+                s += a[i * n + t] * b[j * n + t];
             }
-            *c = s;
+            out[i * p + j] = s;
         }
     }
 }

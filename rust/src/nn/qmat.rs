@@ -7,7 +7,11 @@
 //! arithmetic mode demands, describes the contraction as a
 //! [`GemmPlan`], and hands execution to the engine
 //! ([`crate::dfp::exec`]) via the [`super::Ctx`]'s `exec` handle — the
-//! engine owns blocking, the persistent pool, and arena scratch.
+//! engine owns kernel selection (packed microkernels vs scalar
+//! references), the persistent pool, and arena scratch. Because the two
+//! engine paths are bit-identical, nothing at this layer depends on which
+//! one runs — locked in by `qgemm_ref_and_packed_paths_bit_identical`
+//! below.
 
 use super::{Arith, Ctx};
 use crate::baselines::uniform::{uniform_dequant_scale, uniform_quantize};
@@ -117,7 +121,7 @@ pub fn igemm_kind(
 }
 
 /// Float GEMM dispatch (the fp32 baseline path) — same engine, f32
-/// kernels; cache-blocked and pool-threaded for large problems.
+/// kernels; packed and pool-threaded for large problems.
 pub fn fgemm(kind: MatKind, a: &[f32], b: &[f32], d: (usize, usize, usize)) -> Vec<f32> {
     let plan = GemmPlan::new(kind, d);
     let mut c = vec![0f32; plan.out_len()];
@@ -235,6 +239,32 @@ mod tests {
             let mean = s / trials as f64;
             assert!((mean - f as f64).abs() < 6e-3, "mean={mean} want={f}");
         }
+    }
+
+    #[test]
+    fn qgemm_ref_and_packed_paths_bit_identical() {
+        // Layer-level conformance: the same quantized contraction through
+        // the packed microkernels and the scalar references must agree to
+        // the bit, including the f32 dequantized boundary. Fresh Ctx per
+        // run → identical rounding seeds, so the only variable is the
+        // engine path.
+        use crate::dfp::exec::{set_kernel_path, KernelPath};
+        let mut rng = Rng::new(9);
+        let dims = (48, 64, 40); // ≥ PACKED_THRESHOLD MACs for every kind
+        for kind in [MatKind::AB, MatKind::ATB, MatKind::ABT] {
+            let plan = GemmPlan::new(kind, dims);
+            let a: Vec<f32> = (0..plan.a_len()).map(|_| rng.next_gaussian()).collect();
+            let b: Vec<f32> = (0..plan.b_len()).map(|_| rng.next_gaussian() * 0.1).collect();
+            set_kernel_path(KernelPath::Packed);
+            let mut ctx = Ctx::train(5, 1);
+            let cp = qgemm(&Arith::int8(), kind, &a, &b, dims, &mut ctx, false);
+            set_kernel_path(KernelPath::Reference);
+            let mut ctx = Ctx::train(5, 1);
+            let cr = qgemm(&Arith::int8(), kind, &a, &b, dims, &mut ctx, false);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&cp), bits(&cr), "path mismatch for {kind:?}");
+        }
+        set_kernel_path(KernelPath::Packed);
     }
 
     #[test]

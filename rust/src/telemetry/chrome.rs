@@ -121,7 +121,10 @@ fn fmt_dur_ms(ns: u64) -> String {
 /// Kernel events are grouped by name and by the power-of-two bucket of
 /// each dim argument, so e.g. all `64×100×32` and `64×128×50` GEMMs land
 /// in the `≤64×≤128×≤64` row. GMAC/s is computed from the exact per-event
-/// dims (d0·d1·d2 MACs), not the buckets.
+/// dims (d0·d1·d2 MACs), not the buckets. Only the first three args (the
+/// dims) participate in bucketing — the engine's fourth `packed` arg is
+/// already encoded in the event name (`gemm_i8/AB/packed` vs `…/ref`),
+/// so folding it into the shape key would double every row.
 pub fn kernel_summary(traces: &[ThreadTrace]) -> String {
     let mut kernels: BTreeMap<(String, [u64; 3]), KernelAgg> = BTreeMap::new();
     let mut tasks = 0u64;
@@ -208,8 +211,16 @@ pub fn kernel_summary(traces: &[ThreadTrace]) -> String {
 mod tests {
     use super::*;
 
-    fn ev(name: &'static str, cat: &'static str, t0: u64, dur: u64, args: [u64; 3], nargs: u8) -> ProfEvent {
-        ProfEvent { name, cat, t0_ns: t0, dur_ns: dur, args, keys: &["d0", "d1", "d2"], nargs }
+    fn ev(name: &'static str, cat: &'static str, t0: u64, dur: u64, args: [u64; 4], nargs: u8) -> ProfEvent {
+        ProfEvent {
+            name,
+            cat,
+            t0_ns: t0,
+            dur_ns: dur,
+            args,
+            keys: &["d0", "d1", "d2", "packed"],
+            nargs,
+        }
     }
 
     fn sample_traces() -> Vec<ThreadTrace> {
@@ -218,16 +229,16 @@ mod tests {
                 tid: 0,
                 label: "main".into(),
                 events: vec![
-                    ev("gemm_i8/ABT", "kernel", 1_000, 5_000, [64, 100, 32], 3),
-                    ev("gemm_i8/ABT", "kernel", 9_000, 4_000, [64, 128, 50], 3),
-                    ev("train/step", "mark", 10_000, 0, [1, 0, 0], 1),
+                    ev("gemm_i8/ABT", "kernel", 1_000, 5_000, [64, 100, 32, 1], 4),
+                    ev("gemm_i8/ABT", "kernel", 9_000, 4_000, [64, 128, 50, 1], 4),
+                    ev("train/step", "mark", 10_000, 0, [1, 0, 0, 0], 1),
                 ],
                 dropped: 0,
             },
             ThreadTrace {
                 tid: 1,
                 label: "pallas-worker-0".into(),
-                events: vec![ev("pool/task", "pool", 2_000, 3_000, [4, 8, 0], 2)],
+                events: vec![ev("pool/task", "pool", 2_000, 3_000, [4, 8, 0, 0], 2)],
                 dropped: 2,
             },
         ]

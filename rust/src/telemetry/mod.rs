@@ -147,6 +147,10 @@ pub mod hot {
     pub static ACC_SATURATION: Counter = Counter::new();
     /// Integer GEMM invocations.
     pub static GEMM_CALLS: Counter = Counter::new();
+    /// Engine contractions executed on the packed-microkernel path (the
+    /// complement of `GEMM_CALLS` minus this is the reference/fallback
+    /// path: small shapes or `PALLAS_GEMM=ref`).
+    pub static PACKED_GEMMS: Counter = Counter::new();
     /// int16 payloads clamped by `renorm16` in the integer SGD update.
     pub static ISGD_CLAMP: Counter = Counter::new();
     /// Stochastic-rounding tensor quantizations performed.
@@ -158,6 +162,7 @@ pub mod hot {
             ("dfp/map_saturation", MAP_SATURATION.get()),
             ("gemm/acc_saturation", ACC_SATURATION.get()),
             ("gemm/calls", GEMM_CALLS.get()),
+            ("gemm/packed_calls", PACKED_GEMMS.get()),
             ("isgd/clamp", ISGD_CLAMP.get()),
             ("dfp/sr_maps", SR_MAPS.get()),
         ]
@@ -168,6 +173,7 @@ pub mod hot {
         MAP_SATURATION.reset();
         ACC_SATURATION.reset();
         GEMM_CALLS.reset();
+        PACKED_GEMMS.reset();
         ISGD_CLAMP.reset();
         SR_MAPS.reset();
     }

@@ -22,10 +22,11 @@
 //!   when the pool is idle).
 //!
 //! Event identity is allocation-free: names, categories, and argument keys
-//! are `&'static str`, argument values are up to three `u64`s. The engine
-//! tags kernel events `gemm_i8/AB` … with their (d0, d1, d2) dims; the
-//! pool tags `pool/task` / `pool/idle` per worker; the arena tags
-//! allocations and high-water marks.
+//! are `&'static str`, argument values are up to four `u64`s. The engine
+//! tags kernel events `gemm_i8/AB/packed` … with their (d0, d1, d2) dims
+//! plus a `packed` flag selecting the packed-microkernel vs reference
+//! path; the pool tags `pool/task` / `pool/idle` per worker; the arena
+//! tags allocations and high-water marks.
 
 use std::cell::{OnceCell, UnsafeCell};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
@@ -84,10 +85,10 @@ pub struct ProfEvent {
     /// Duration in ns (0 = instant event).
     pub dur_ns: u64,
     /// Argument values; only the first `nargs` are meaningful.
-    pub args: [u64; 3],
+    pub args: [u64; 4],
     /// Argument key names, parallel to `args`.
     pub keys: &'static [&'static str],
-    /// Number of meaningful arguments (≤ 3).
+    /// Number of meaningful arguments (≤ 4).
     pub nargs: u8,
 }
 
@@ -127,7 +128,7 @@ impl ThreadBuf {
                 cat: "",
                 t0_ns: 0,
                 dur_ns: 0,
-                args: [0; 3],
+                args: [0; 4],
                 keys: &[],
                 nargs: 0,
             };
@@ -194,8 +195,8 @@ fn push_event(
     keys: &'static [&'static str],
     vals: &[u64],
 ) {
-    let nargs = vals.len().min(keys.len()).min(3);
-    let mut args = [0u64; 3];
+    let nargs = vals.len().min(keys.len()).min(4);
+    let mut args = [0u64; 4];
     args[..nargs].copy_from_slice(&vals[..nargs]);
     with_local(|b| b.push(ProfEvent { name, cat, t0_ns, dur_ns, args, keys, nargs: nargs as u8 }));
 }
@@ -234,7 +235,7 @@ pub struct ProfSpan {
     name: &'static str,
     cat: &'static str,
     keys: &'static [&'static str],
-    args: [u64; 3],
+    args: [u64; 4],
     nargs: u8,
     t0_ns: u64,
     active: bool,
@@ -266,8 +267,9 @@ pub fn span(name: &'static str, cat: &'static str) -> ProfSpan {
     span_args(name, cat, &[], &[])
 }
 
-/// Open a profiler span carrying up to three named `u64` arguments
-/// (e.g. GEMM dims). Inert when the profiler is off.
+/// Open a profiler span carrying up to four named `u64` arguments
+/// (e.g. GEMM dims plus the packed-path flag). Inert when the profiler
+/// is off.
 #[inline]
 pub fn span_args(
     name: &'static str,
@@ -276,10 +278,10 @@ pub fn span_args(
     vals: &[u64],
 ) -> ProfSpan {
     if !on() {
-        return ProfSpan { name, cat, keys: &[], args: [0; 3], nargs: 0, t0_ns: 0, active: false };
+        return ProfSpan { name, cat, keys: &[], args: [0; 4], nargs: 0, t0_ns: 0, active: false };
     }
-    let nargs = vals.len().min(keys.len()).min(3);
-    let mut args = [0u64; 3];
+    let nargs = vals.len().min(keys.len()).min(4);
+    let mut args = [0u64; 4];
     args[..nargs].copy_from_slice(&vals[..nargs]);
     ProfSpan { name, cat, keys, args, nargs: nargs as u8, t0_ns: now_ns(), active: true }
 }

@@ -1,8 +1,10 @@
-//! Execution-engine property tests: the blocked/parallel kernels must be
-//! bit-identical to the scalar reference kernels for every contraction
+//! Execution-engine property tests: whatever path the engine dispatches
+//! to (packed microkernels above the cutoff, scalar references below it)
+//! must be bit-identical to the reference kernels for every contraction
 //! kind across degenerate, odd, and above-parallel-threshold shapes; the
 //! arena must actually reuse buffers; the pool must never spawn threads
-//! on the steady-state path.
+//! on the steady-state path. (The dedicated packed-vs-ref sweep lives in
+//! `test_gemm_conformance.rs`.)
 
 use intrain::dfp::conv::{iconv2d, im2col_i8, ConvShape};
 use intrain::dfp::exec::{self, GemmPlan, MatKind};

@@ -1,0 +1,205 @@
+//! GEMM conformance suite: the packed, register-blocked microkernels must
+//! be **bit-identical** to the scalar reference kernels for every
+//! [`MatKind`], both element types, and every shape class — empty dims,
+//! single elements, non-multiples of the MR×NR tile, single- and
+//! multi-panel, and shapes large enough to fan out over the worker pool.
+//!
+//! For i8 → i32 the contract holds because integer accumulation is exact
+//! under any order; for f32 because the packed path preserves the
+//! reference accumulation order (full-k panels, k-ascending microkernel).
+//! These tests are the lock on that contract: any future blocking change
+//! that reassociates the f32 adds, or any indexing bug at a tile edge,
+//! fails here before it can silently skew a training trajectory.
+
+use intrain::dfp::exec::{self, packed, GemmPlan, KernelPath, MatKind, PACKED_THRESHOLD};
+use intrain::dfp::gemm::{
+    fgemm_a_bt_ref, fgemm_ab_ref, fgemm_at_b_ref, igemm_a_bt_ref, igemm_at_b_ref, igemm_ref,
+};
+use intrain::dfp::rng::Rng;
+
+const KINDS: [MatKind; 3] = [MatKind::AB, MatKind::ATB, MatKind::ABT];
+
+/// Shape classes the microkernels must survive: zero dims, scalars,
+/// sub-tile, exact-tile, tile-edge-plus-one, odd multi-panel, and (last
+/// two) shapes above the packed and pool-parallel thresholds.
+const SHAPES: [(usize, usize, usize); 13] = [
+    (0, 5, 7),
+    (5, 0, 7),
+    (5, 7, 0),
+    (1, 1, 1),
+    (1, 7, 1),
+    (3, 2, 15),
+    (4, 8, 16),
+    (8, 16, 32),
+    (5, 9, 17),
+    (7, 129, 31),
+    (13, 37, 47),
+    (64, 64, 64),
+    (72, 73, 65),
+];
+
+/// Full-range i8 payload (includes −128 and 127 so the widening path sees
+/// the extremes, not just well-behaved quantizer output).
+fn rand_i8(len: usize, rng: &mut Rng) -> Vec<i8> {
+    let mut v: Vec<i8> = (0..len).map(|_| (rng.next_u32() % 256) as u8 as i8).collect();
+    if len >= 2 {
+        v[0] = -128;
+        v[1] = 127;
+    }
+    v
+}
+
+/// Gaussian f32 payload with exact zeros injected: the scalar reference
+/// tiles skip zero multiplicands on the i8 path, and the f32 contract must
+/// hold on data where such skips would trigger if anyone reintroduced them.
+fn rand_f32(len: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..len)
+        .map(|i| if i % 7 == 3 { 0.0 } else { rng.next_gaussian() })
+        .collect()
+}
+
+fn ref_i8(plan: GemmPlan, a: &[i8], b: &[i8]) -> Vec<i32> {
+    let (d0, d1, d2) = plan.dims;
+    let mut out = vec![0i32; plan.out_len()];
+    match plan.kind {
+        MatKind::AB => igemm_ref(a, b, d0, d1, d2, &mut out),
+        MatKind::ATB => igemm_at_b_ref(a, b, d0, d1, d2, &mut out),
+        MatKind::ABT => igemm_a_bt_ref(a, b, d0, d1, d2, &mut out),
+    }
+    out
+}
+
+fn ref_f32(plan: GemmPlan, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let (d0, d1, d2) = plan.dims;
+    let mut out = vec![0f32; plan.out_len()];
+    match plan.kind {
+        MatKind::AB => fgemm_ab_ref(a, b, d0, d1, d2, &mut out),
+        MatKind::ATB => fgemm_at_b_ref(a, b, d0, d1, d2, &mut out),
+        MatKind::ABT => fgemm_a_bt_ref(a, b, d0, d1, d2, &mut out),
+    }
+    out
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn packed_i8_bit_identical_to_reference_for_all_kinds_and_shapes() {
+    let mut rng = Rng::new(101);
+    for &dims in &SHAPES {
+        for kind in KINDS {
+            let plan = GemmPlan::new(kind, dims);
+            let a = rand_i8(plan.a_len(), &mut rng);
+            let b = rand_i8(plan.b_len(), &mut rng);
+            // Poisoned output: the packed path must fully overwrite.
+            let mut got = vec![i32::MIN; plan.out_len()];
+            packed::gemm_i8(plan, &a, &b, &mut got);
+            assert_eq!(got, ref_i8(plan, &a, &b), "i8 {kind:?} {dims:?}");
+        }
+    }
+}
+
+#[test]
+fn packed_f32_bit_identical_to_reference_for_all_kinds_and_shapes() {
+    let mut rng = Rng::new(102);
+    for &dims in &SHAPES {
+        for kind in KINDS {
+            let plan = GemmPlan::new(kind, dims);
+            let a = rand_f32(plan.a_len(), &mut rng);
+            let b = rand_f32(plan.b_len(), &mut rng);
+            let mut got = vec![f32::NAN; plan.out_len()];
+            packed::gemm_f32(plan, &a, &b, &mut got);
+            let want = ref_f32(plan, &a, &b);
+            assert_eq!(bits(&got), bits(&want), "f32 bits {kind:?} {dims:?}");
+        }
+    }
+}
+
+#[test]
+fn engine_dispatch_is_bit_identical_under_both_paths() {
+    // The engine-level entry points (what the layers actually call) must
+    // produce the same bits whichever path the global dispatch selects.
+    let mut rng = Rng::new(103);
+    for &dims in &[(13, 37, 47), (64, 64, 64)] {
+        for kind in KINDS {
+            let plan = GemmPlan::new(kind, dims);
+            assert!(plan.macs() >= PACKED_THRESHOLD, "shape must reach the packed cutoff");
+            let a = rand_i8(plan.a_len(), &mut rng);
+            let b = rand_i8(plan.b_len(), &mut rng);
+            exec::set_kernel_path(KernelPath::Packed);
+            let mut got_p = vec![0i32; plan.out_len()];
+            exec::gemm_i8(plan, &a, &b, &mut got_p);
+            exec::set_kernel_path(KernelPath::Reference);
+            let mut got_r = vec![0i32; plan.out_len()];
+            exec::gemm_i8(plan, &a, &b, &mut got_r);
+            exec::set_kernel_path(KernelPath::Packed);
+            assert_eq!(got_p, got_r, "engine paths diverge for {kind:?} {dims:?}");
+            assert_eq!(got_p, ref_i8(plan, &a, &b), "engine != ref for {kind:?} {dims:?}");
+        }
+    }
+}
+
+#[test]
+fn pool_parallel_shape_bit_identical() {
+    // 72·73·65 = 341_640 MACs ≥ the pool fan-out threshold (2^18): the
+    // multi-threaded packed path must still match the serial reference to
+    // the bit, for both element types.
+    let dims = (72, 73, 65);
+    let mut rng = Rng::new(104);
+    for kind in KINDS {
+        let plan = GemmPlan::new(kind, dims);
+        let a = rand_i8(plan.a_len(), &mut rng);
+        let b = rand_i8(plan.b_len(), &mut rng);
+        let mut got = vec![0i32; plan.out_len()];
+        packed::gemm_i8(plan, &a, &b, &mut got);
+        assert_eq!(got, ref_i8(plan, &a, &b), "parallel i8 {kind:?}");
+
+        let af = rand_f32(plan.a_len(), &mut rng);
+        let bf = rand_f32(plan.b_len(), &mut rng);
+        let mut gotf = vec![0f32; plan.out_len()];
+        packed::gemm_f32(plan, &af, &bf, &mut gotf);
+        assert_eq!(bits(&gotf), bits(&ref_f32(plan, &af, &bf)), "parallel f32 {kind:?}");
+    }
+}
+
+#[test]
+fn micro_kernel_name_reports_a_known_tile() {
+    assert!(["scalar", "avx2", "neon"].contains(&packed::micro_kernel_name()));
+}
+
+#[test]
+fn shadow_audit_drift_stays_in_tolerance_through_packed_path() {
+    // Satellite for the float-shadow auditor: drive dispatched int8 GEMMs
+    // (all three kinds, shapes on the packed path) with `--shadow-audit`
+    // semantics on, and require the run-wide drift gauge to stay inside
+    // int8 quantization tolerance. A packed-path indexing bug would blow
+    // this up immediately.
+    use intrain::nn::qmat::qgemm;
+    use intrain::nn::{Arith, Ctx};
+    use intrain::telemetry::{self, numeric};
+
+    telemetry::set_enabled(true);
+    numeric::set_shadow_audit(true);
+    exec::set_kernel_path(KernelPath::Packed);
+    let mut rng = Rng::new(105);
+    let dims = (96, 96, 96);
+    for kind in KINDS {
+        let plan = GemmPlan::new(kind, dims);
+        let a: Vec<f32> = (0..plan.a_len()).map(|_| rng.next_gaussian()).collect();
+        let b: Vec<f32> = (0..plan.b_len()).map(|_| rng.next_gaussian() * 0.1).collect();
+        let mut ctx = Ctx::train(3, 0);
+        let _ = qgemm(&Arith::int8(), kind, &a, &b, dims, &mut ctx, false);
+    }
+    numeric::set_shadow_audit(false);
+    telemetry::set_enabled(false);
+
+    let gauges = telemetry::registry().gauges_snapshot();
+    let run_max = gauges
+        .iter()
+        .find(|(n, _)| n == "shadow/run_drift_max")
+        .map(|(_, v)| *v)
+        .expect("shadow audit must publish the run-wide drift gauge");
+    assert!(run_max >= 0.0);
+    assert!(run_max < 0.15, "packed-path int8 drift out of tolerance: {run_max}");
+}

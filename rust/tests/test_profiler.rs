@@ -68,10 +68,22 @@ fn profiled_run_records_kernels_phases_and_worker_tracks() {
     assert!(kernels.iter().all(|n| n.starts_with("gemm_")), "{kernels:?}");
 
     let k = traces.iter().flat_map(|t| &t.events).find(|e| e.cat == "kernel").unwrap();
-    assert_eq!(k.keys, &["d0", "d1", "d2"][..]);
-    assert_eq!(k.nargs, 3);
-    assert!(k.args.iter().all(|&d| d > 0), "kernel event missing dims: {k:?}");
+    assert_eq!(k.keys, &["d0", "d1", "d2", "packed"][..]);
+    assert_eq!(k.nargs, 4);
+    // First three args are the dims (always nonzero); the fourth is the
+    // packed-path flag, 0 or 1 depending on the dispatch cutoff.
+    assert!(k.args[..3].iter().all(|&d| d > 0), "kernel event missing dims: {k:?}");
+    assert!(k.args[3] <= 1, "packed flag must be boolean: {k:?}");
     assert!(k.dur_ns >= 1);
+    // Every kernel event name carries its dispatch path.
+    assert!(
+        traces
+            .iter()
+            .flat_map(|t| &t.events)
+            .filter(|e| e.cat == "kernel")
+            .all(|e| e.name.ends_with("/packed") || e.name.ends_with("/ref")),
+        "kernel event names must end in /packed or /ref"
+    );
 
     // Pipeline phases from trace::span frame the kernels on the timeline,
     // and the trainer drops a step marker per iteration.

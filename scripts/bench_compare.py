@@ -52,23 +52,34 @@ def load_benches(path):
     return benches, stub_note
 
 
+def _num(rec, key):
+    """Numeric value of *rec[key]*, or None when the key is missing or the
+    value is not a real number (a hand-edited baseline may hold strings or
+    nulls; such metrics must be skipped, never crash the gate)."""
+    v = rec.get(key)
+    if isinstance(v, (int, float)) and not isinstance(v, bool):
+        return float(v)
+    return None
+
+
 def compare_one(name, cur, base, threshold):
     """Return (delta_str, regressed) for one bench present in both runs.
 
     Prefers GMAC/s (higher is better) and falls back to mean seconds
-    per iteration (lower is better).
+    per iteration (lower is better). A metric missing or non-numeric on
+    either side is skipped rather than compared.
     """
-    if "gmacs" in cur and "gmacs" in base and base["gmacs"] > 0:
-        ratio = cur["gmacs"] / base["gmacs"]
-        delta = ratio - 1.0
+    cur_g, base_g = _num(cur, "gmacs"), _num(base, "gmacs")
+    if cur_g is not None and base_g is not None and base_g > 0:
+        delta = cur_g / base_g - 1.0
         desc = "%s: %.2f -> %.2f GMAC/s (%+.1f%%)" % (
-            name, base["gmacs"], cur["gmacs"], delta * 100.0)
+            name, base_g, cur_g, delta * 100.0)
         return desc, delta < -threshold
-    if "mean_s" in cur and "mean_s" in base and base["mean_s"] > 0:
-        ratio = cur["mean_s"] / base["mean_s"]
-        delta = ratio - 1.0
+    cur_s, base_s = _num(cur, "mean_s"), _num(base, "mean_s")
+    if cur_s is not None and base_s is not None and base_s > 0:
+        delta = cur_s / base_s - 1.0
         desc = "%s: %.3g -> %.3g s/iter (%+.1f%%)" % (
-            name, base["mean_s"], cur["mean_s"], delta * 100.0)
+            name, base_s, cur_s, delta * 100.0)
         return desc, delta > threshold
     return "%s: no comparable metric (need gmacs or mean_s)" % name, False
 
