@@ -6,7 +6,10 @@
 use intrain::dfp::conv::{iconv2d, ConvShape};
 use intrain::dfp::exec::{self, GemmPlan, MatKind};
 use intrain::dfp::{quantize, RoundMode};
-use intrain::util::bench::{bench_macs, row, section};
+use intrain::infer::infer_batches;
+use intrain::models::resnet_tiny;
+use intrain::nn::{Arith, Tensor};
+use intrain::util::bench::{bench, bench_macs, row, section};
 
 fn randv(n: usize, seed: u64) -> Vec<f32> {
     let mut rng = intrain::dfp::rng::Rng::new(seed);
@@ -114,6 +117,31 @@ fn main() {
             },
         );
         row(&[("GMAC/s", format!("{:.2}", r.gmacs().unwrap_or(0.0)))]);
+    }
+
+    section(&format!(
+        "pool-parallel batched inference (shared model, {} threads)",
+        exec::pool().threads()
+    ));
+    {
+        const BATCHES: usize = 16;
+        const BS: usize = 8;
+        let inputs: Vec<Tensor> = (0..BATCHES)
+            .map(|i| Tensor::new(randv(BS * 3 * 256, 20 + i as u64), vec![BS, 3, 16, 16]))
+            .collect();
+        for (name, arith) in [("int8", Arith::int8()), ("fp32", Arith::Float)] {
+            let model = resnet_tiny(10, 3, 16, arith, 11);
+            let r = bench(&format!("infer/resnet_{name}/{BATCHES}x{BS}"), 0.8, || {
+                std::hint::black_box(infer_batches(&model, &inputs, 13).outputs.len());
+            });
+            let rep = infer_batches(&model, &inputs, 13);
+            row(&[
+                ("batch/s", format!("{:.1}", BATCHES as f64 / r.mean_s)),
+                ("GBATCH/s", format!("{:.3e}", BATCHES as f64 / r.mean_s / 1e9)),
+                ("sample/s", format!("{:.0}", (BATCHES * BS) as f64 / r.mean_s)),
+                ("latency", rep.latency_summary()),
+            ]);
+        }
     }
 
     // Steady-state guarantee: the worker pool spawned once up front — the

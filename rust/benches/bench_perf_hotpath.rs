@@ -12,7 +12,7 @@ use intrain::dfp::{quantize, RoundMode};
 use intrain::models::resnet_tiny;
 use intrain::nn::batchnorm::batchnorm;
 use intrain::nn::qmat::{fgemm, MatKind};
-use intrain::nn::{Arith, Ctx, Layer, Param, Tensor};
+use intrain::nn::{Arith, Ctx, GradStore, Layer, Param, Registrar, Tape, Tensor};
 use intrain::optim::{IntSgd, Optimizer};
 use intrain::util::bench::{bench, row, section};
 
@@ -58,10 +58,15 @@ fn main() {
     let x = Tensor::new(randv(32 * 32 * 256, 6), vec![32, 32, 16, 16]);
     for (name, arith) in [("int8", Arith::int8()), ("fp32", Arith::Float)] {
         let mut bn = batchnorm(32, arith);
+        intrain::nn::finalize(&mut bn);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
         bench(&format!("batchnorm/{name}"), 0.5, || {
             let mut ctx = Ctx::train(0, 0);
-            let y = bn.forward(&x, &mut ctx);
-            std::hint::black_box(bn.backward(&y, &mut ctx));
+            let y = bn.forward(&x, &mut ctx, Some(&mut tape));
+            std::hint::black_box(bn.backward(&y, &mut ctx, &tape, &mut grads));
+            grads.clear();
+            tape.clear();
         });
     }
 
@@ -71,15 +76,18 @@ fn main() {
     for (name, arith) in [("int8", Arith::int8()), ("fp32", Arith::Float)] {
         let mut model = resnet_tiny(10, 3, 16, arith, 3);
         let mut opt = intrain::coordinator::driver::optimizer_for(&arith, 7);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
         let mut step = 0u64;
         bench(&format!("train_step/{name}"), 1.0, || {
             let mut ctx = Ctx::train(0, step);
-            let logits = model.forward(&xb, &mut ctx);
+            let logits = model.forward(&xb, &mut ctx, Some(&mut tape));
             let (_, grad) = intrain::nn::softmax_ce::softmax_ce(&logits, &targets);
-            model.backward(&grad, &mut ctx);
+            model.backward(&grad, &mut ctx, &tape, &mut grads);
             let mut params = model.params();
-            opt.step(&mut params, 0.05, step);
-            opt.zero_grad(&mut params);
+            opt.step(&mut params, &grads, 0.05, step);
+            grads.clear();
+            tape.clear();
             step += 1;
         });
     }
@@ -87,12 +95,15 @@ fn main() {
     section("integer SGD update (1M params)");
     let n = 1 << 20;
     let mut p = Param::new(randv(n, 8), vec![n]);
-    p.grad = randv(n, 9);
+    let mut reg = Registrar::new();
+    reg.param(&mut p, "w");
+    let mut grads = GradStore::new();
+    grads.buf(&p).copy_from_slice(&randv(n, 9));
     let mut opt = IntSgd::new(0.9, 1e-4, 1);
     let mut s = 0u64;
     let r = bench("isgd/1M", 0.5, || {
         let mut ps = [&mut p];
-        opt.step(&mut ps, 0.05, s);
+        opt.step(&mut ps, &grads, 0.05, s);
         s += 1;
     });
     row(&[("Mparam/s", format!("{:.1}", n as f64 / r.mean_s / 1e6))]);

@@ -5,8 +5,8 @@
 use crate::coordinator::e2e::{run_e2e, E2eConfig};
 use crate::data::blobs::Blobs;
 use crate::data::synth_images::SynthImages;
-use crate::models::{mlp, resnet_tiny};
-use crate::nn::{Arith, IntCfg};
+use crate::models::{mlp, mobilenet_tiny, resnet_tiny, VitTiny};
+use crate::nn::{Arith, IntCfg, Layer, Tensor};
 use crate::optim::{FloatSgd, IntSgd, LrSchedule, Optimizer};
 use crate::telemetry;
 use crate::train::trainer::{TrainConfig, Trainer};
@@ -104,6 +104,46 @@ pub fn cmd_mlp(args: &Args) -> Result<()> {
     let rec =
         Trainer { model: &mut model, opt: opt.as_mut(), cfg, dense: false }.run(&train, &test);
     telemetry::log(&format!("mlp[{arith:?}] top1={:.4}", rec.final_top1));
+    Ok(())
+}
+
+/// `intrain predict` — pool-parallel batched inference on synthetic data:
+/// one immutable model shared across the persistent worker pool, tape-less
+/// forwards, per-batch latency quantiles and a batches/s figure. The same
+/// driver the serving path would use ([`crate::infer::infer_batches`]).
+pub fn cmd_predict(args: &Args) -> Result<()> {
+    let arith = parse_arith(args.get("arith").unwrap_or("int8"))?;
+    let seed = args.get_or("seed", 3u64);
+    let hw = args.get_or("hw", 16usize);
+    let batch = args.get_or("batch", 8usize);
+    let batches = args.get_or("batches", 32usize);
+    let model_name = args.get("model").unwrap_or("resnet");
+    let (model, in_dims): (Box<dyn Layer>, Vec<usize>) = match model_name {
+        "mlp" => (Box::new(mlp(&[16, 32, 4], arith, seed)), vec![16]),
+        "resnet" => (Box::new(resnet_tiny(10, 3, hw, arith, seed)), vec![3, hw, hw]),
+        "mobilenet" => (Box::new(mobilenet_tiny(10, 3, hw, arith, seed)), vec![3, hw, hw]),
+        "vit" => (Box::new(VitTiny::new(10, 3, hw, 4, 32, 2, 4, arith, seed)), vec![3, hw, hw]),
+        other => bail!("unknown --model {other:?} (expected mlp, resnet, mobilenet, or vit)"),
+    };
+    let mut rng = crate::dfp::rng::Rng::new(seed ^ 0xF00D);
+    let per: usize = in_dims.iter().product();
+    let inputs: Vec<Tensor> = (0..batches)
+        .map(|_| {
+            let mut shape = vec![batch];
+            shape.extend_from_slice(&in_dims);
+            Tensor::new((0..batch * per).map(|_| rng.next_gaussian() * 0.3).collect(), shape)
+        })
+        .collect();
+    let rep = crate::infer::infer_batches(model.as_ref(), &inputs, seed ^ 0x1FE2);
+    telemetry::log(&format!(
+        "predict[{model_name}/{arith:?}] {batches} batches x {batch} on {} pool threads: \
+         {:.1} batches/s  {:.1} samples/s  ({})  wall {:.3}s",
+        rep.threads,
+        rep.batches_per_sec(),
+        rep.batches_per_sec() * batch as f64,
+        rep.latency_summary(),
+        rep.wall_s,
+    ));
     Ok(())
 }
 
@@ -207,6 +247,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Some("mlp") => cmd_mlp(args),
         Some("train") => cmd_train(args),
         Some("profile") => cmd_profile(args),
+        Some("predict") => cmd_predict(args),
         Some("gap") => cmd_gap(args),
         Some(other) => bail!("unknown command {other:?}; see --help"),
         None => {
@@ -238,6 +279,9 @@ COMMANDS:
   classify  train ResNet-tiny on synthetic CIFAR
             --arith {int8,int7,int6,int5,int4,fp32,uniform} --epochs N
   mlp       fast MLP smoke workload        --arith ... --epochs N
+  predict   pool-parallel batched inference on synthetic data
+            --model {mlp,resnet,mobilenet,vit} --arith ... --batch N
+            --batches N --hw N  (reports batches/s + latency quantiles)
   gap       Theorem-1 optimality-gap experiment  --lr F --steps N
 
 GLOBAL OPTIONS (all commands):

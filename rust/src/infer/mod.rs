@@ -1,0 +1,176 @@
+//! Pool-parallel batched inference driver.
+//!
+//! The tape refactor made every model immutable during `forward` (`&self`,
+//! activations only saved when a [`Tape`](crate::nn::Tape) is passed), so
+//! a single model instance can serve many batches concurrently. This
+//! module fans a shared `&dyn Layer` over the persistent worker pool
+//! ([`crate::dfp::exec::pool`]): one pool task per batch, tape-less
+//! forward, per-batch wall-clock latency recorded.
+//!
+//! Determinism: each batch runs under its own `Ctx` seeded by
+//! `hash2(seed, batch_index)` — a pure function of the batch index, never
+//! of thread assignment — so the logits are bit-identical to a serial
+//! loop over the same batches (locked in by `tests/test_infer.rs`).
+//! Batch-norm layers snapshot their running statistics behind a read
+//! lock and never write them back outside train mode, so concurrent
+//! readers don't serialize.
+//!
+//! When telemetry is enabled, per-batch latencies also land in the
+//! `infer/batch_seconds` histogram and the batch count in the
+//! `infer/batches` counter-gauge.
+
+use crate::dfp::exec::pool;
+use crate::dfp::rng::hash2;
+use crate::nn::{Ctx, Layer, Tensor};
+use crate::telemetry::{self, metrics::DURATION_BUCKETS};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One batch's inference result.
+pub struct BatchOutput {
+    /// Model output for the batch.
+    pub logits: Tensor,
+    /// Wall-clock seconds for this batch's forward pass.
+    pub latency_s: f64,
+}
+
+/// What a batched-inference run produced.
+pub struct InferReport {
+    /// Per-batch outputs, in input order.
+    pub outputs: Vec<BatchOutput>,
+    /// Wall-clock seconds for the whole fan-out.
+    pub wall_s: f64,
+    /// Worker threads in the pool that served the run.
+    pub threads: usize,
+}
+
+impl InferReport {
+    /// Batches per second of wall clock.
+    pub fn batches_per_sec(&self) -> f64 {
+        self.outputs.len() as f64 / self.wall_s.max(1e-12)
+    }
+
+    /// Latency quantile `q` in [0, 1] over the per-batch latencies
+    /// (nearest-rank on the sorted values).
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        if self.outputs.is_empty() {
+            return 0.0;
+        }
+        let mut lat: Vec<f64> = self.outputs.iter().map(|o| o.latency_s).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((q.clamp(0.0, 1.0) * (lat.len() - 1) as f64).round()) as usize;
+        lat[idx]
+    }
+
+    /// Compact one-line latency summary (ms): p50 / p90 / max.
+    pub fn latency_summary(&self) -> String {
+        format!(
+            "p50 {:.2}ms  p90 {:.2}ms  max {:.2}ms",
+            1e3 * self.latency_quantile(0.5),
+            1e3 * self.latency_quantile(0.9),
+            1e3 * self.latency_quantile(1.0),
+        )
+    }
+}
+
+/// The per-batch evaluation context: a pure function of `(seed, index)`.
+fn batch_ctx(seed: u64, index: usize) -> Ctx {
+    Ctx::eval(hash2(seed, index as u64))
+}
+
+/// Run `model` over `inputs` concurrently on the persistent worker pool,
+/// one task per batch, tape-less. Outputs come back in input order.
+pub fn infer_batches(model: &dyn Layer, inputs: &[Tensor], seed: u64) -> InferReport {
+    let telem = telemetry::enabled();
+    let hist = telem.then(|| telemetry::registry().histogram("infer/batch_seconds", &DURATION_BUCKETS));
+    let slots: Vec<Mutex<Option<BatchOutput>>> =
+        (0..inputs.len()).map(|_| Mutex::new(None)).collect();
+    let t0 = Instant::now();
+    pool().run(inputs.len(), &|i| {
+        let t = Instant::now();
+        let mut ctx = batch_ctx(seed, i);
+        let logits = model.forward(&inputs[i], &mut ctx, None);
+        let latency_s = t.elapsed().as_secs_f64();
+        if let Some(h) = &hist {
+            h.observe(latency_s);
+        }
+        *slots[i].lock().unwrap() = Some(BatchOutput { logits, latency_s });
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let outputs: Vec<BatchOutput> = slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("pool ran every batch"))
+        .collect();
+    if telem {
+        telemetry::registry().gauge("infer/batches").set(outputs.len() as f64);
+        telemetry::registry().gauge("infer/batches_per_sec").set(outputs.len() as f64 / wall_s.max(1e-12));
+    }
+    InferReport { outputs, wall_s, threads: pool().threads() }
+}
+
+/// Serial reference: the same batches through the same per-batch contexts,
+/// one after another on the calling thread. Bit-identical to
+/// [`infer_batches`] by construction — the conformance test's ground
+/// truth, and a useful single-thread latency baseline.
+pub fn infer_batches_serial(model: &dyn Layer, inputs: &[Tensor], seed: u64) -> InferReport {
+    let t0 = Instant::now();
+    let outputs = inputs
+        .iter()
+        .enumerate()
+        .map(|(i, x)| {
+            let t = Instant::now();
+            let mut ctx = batch_ctx(seed, i);
+            let logits = model.forward(x, &mut ctx, None);
+            BatchOutput { logits, latency_s: t.elapsed().as_secs_f64() }
+        })
+        .collect();
+    InferReport { outputs, wall_s: t0.elapsed().as_secs_f64(), threads: 1 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::mlp::mlp;
+    use crate::nn::Arith;
+
+    fn batches(n: usize, bs: usize, dim: usize) -> Vec<Tensor> {
+        let mut rng = crate::dfp::rng::Rng::new(42);
+        (0..n)
+            .map(|_| {
+                Tensor::new((0..bs * dim).map(|_| rng.next_gaussian()).collect(), vec![bs, dim])
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pool_matches_serial_bitwise() {
+        let net = mlp(&[8, 16, 4], Arith::int8(), 1);
+        let xs = batches(12, 4, 8);
+        let par = infer_batches(&net, &xs, 9);
+        let ser = infer_batches_serial(&net, &xs, 9);
+        assert_eq!(par.outputs.len(), ser.outputs.len());
+        for (a, b) in par.outputs.iter().zip(&ser.outputs) {
+            let bits = |t: &Tensor| t.data.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&a.logits), bits(&b.logits));
+        }
+    }
+
+    #[test]
+    fn report_quantiles_and_throughput() {
+        let net = mlp(&[8, 8, 2], Arith::Float, 2);
+        let xs = batches(5, 2, 8);
+        let rep = infer_batches(&net, &xs, 0);
+        assert_eq!(rep.outputs.len(), 5);
+        assert!(rep.batches_per_sec() > 0.0);
+        assert!(rep.latency_quantile(0.0) <= rep.latency_quantile(1.0));
+        assert!(rep.latency_summary().contains("p50"));
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let net = mlp(&[4, 2], Arith::Float, 3);
+        let rep = infer_batches(&net, &[], 0);
+        assert!(rep.outputs.is_empty());
+        assert_eq!(rep.latency_quantile(0.5), 0.0);
+    }
+}

@@ -42,6 +42,7 @@
 pub mod baselines;
 pub mod coordinator;
 pub mod dfp;
+pub mod infer;
 pub mod nn;
 pub mod data;
 pub mod metrics;

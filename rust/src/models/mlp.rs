@@ -16,6 +16,7 @@ pub fn mlp(dims: &[usize], arith: Arith, seed: u64) -> Sequential {
             net.push_boxed(Box::new(ReLU::new()));
         }
     }
+    crate::nn::finalize(&mut net);
     net
 }
 
@@ -26,10 +27,10 @@ mod tests {
 
     #[test]
     fn shapes_and_params() {
-        let mut net = mlp(&[8, 16, 4], Arith::Float, 0);
+        let net = mlp(&[8, 16, 4], Arith::Float, 0);
         let x = Tensor::new(vec![0.1; 16], vec![2, 8]);
         let mut ctx = Ctx::train(0, 0);
-        let y = net.forward(&x, &mut ctx);
+        let y = net.forward(&x, &mut ctx, None);
         assert_eq!(y.shape, vec![2, 4]);
         assert_eq!(net.param_count(), 8 * 16 + 16 + 16 * 4 + 4);
     }

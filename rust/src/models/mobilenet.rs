@@ -9,7 +9,9 @@ use crate::nn::blocks::{Residual, Sequential};
 use crate::nn::conv2d::Conv2d;
 use crate::nn::linear::Linear;
 use crate::nn::pool::GlobalAvgPool;
-use crate::nn::{activations::ReLU, Arith, Ctx, Layer, Param, Tensor};
+use crate::nn::{
+    activations::ReLU, Arith, Ctx, GradStore, Layer, Param, Registrar, Tape, Tensor,
+};
 
 /// Depthwise 3×3 conv: one independent spatial filter per channel.
 pub struct DepthwiseConv {
@@ -27,7 +29,8 @@ impl DepthwiseConv {
 }
 
 impl Layer for DepthwiseConv {
-    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn forward(&self, x: &Tensor, ctx: &mut Ctx, tape: Option<&mut Tape>) -> Tensor {
+        let mut tape = tape;
         let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
         assert_eq!(c, self.ch);
         let mut out: Option<Vec<f32>> = None;
@@ -39,7 +42,8 @@ impl Layer for DepthwiseConv {
                 xi[b * h * w..(b + 1) * h * w]
                     .copy_from_slice(&x.data[(b * c + ci) * h * w..(b * c + ci + 1) * h * w]);
             }
-            let y = self.convs[ci].forward(&Tensor::new(xi, vec![n, 1, h, w]), ctx);
+            let y =
+                self.convs[ci].forward(&Tensor::new(xi, vec![n, 1, h, w]), ctx, tape.as_deref_mut());
             let (ho, wo) = (y.shape[2], y.shape[3]);
             let o = out.get_or_insert_with(|| vec![0f32; n * c * ho * wo]);
             oshape = vec![n, c, ho, wo];
@@ -51,7 +55,7 @@ impl Layer for DepthwiseConv {
         Tensor::new(out.unwrap_or_default(), oshape)
     }
 
-    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn backward(&self, gy: &Tensor, ctx: &mut Ctx, tape: &Tape, grads: &mut GradStore) -> Tensor {
         let (n, c, ho, wo) = (gy.shape[0], gy.shape[1], gy.shape[2], gy.shape[3]);
         let mut out: Option<Vec<f32>> = None;
         let mut oshape = Vec::new();
@@ -61,7 +65,8 @@ impl Layer for DepthwiseConv {
                 gi[b * ho * wo..(b + 1) * ho * wo]
                     .copy_from_slice(&gy.data[(b * c + ci) * ho * wo..(b * c + ci + 1) * ho * wo]);
             }
-            let gx = self.convs[ci].backward(&Tensor::new(gi, vec![n, 1, ho, wo]), ctx);
+            let gx =
+                self.convs[ci].backward(&Tensor::new(gi, vec![n, 1, ho, wo]), ctx, tape, grads);
             let (h, w) = (gx.shape[2], gx.shape[3]);
             let o = out.get_or_insert_with(|| vec![0f32; n * c * h * w]);
             oshape = vec![n, c, h, w];
@@ -73,8 +78,22 @@ impl Layer for DepthwiseConv {
         Tensor::new(out.unwrap_or_default(), oshape)
     }
 
+    fn register(&mut self, r: &mut Registrar) {
+        r.enter("dwconv");
+        for (i, c) in self.convs.iter_mut().enumerate() {
+            r.enter(i.to_string());
+            c.register(r);
+            r.exit();
+        }
+        r.exit();
+    }
+
     fn params(&mut self) -> Vec<&mut Param> {
         self.convs.iter_mut().flat_map(|c| c.params()).collect()
+    }
+
+    fn params_ref(&self) -> Vec<&Param> {
+        self.convs.iter().flat_map(|c| c.params_ref()).collect()
     }
 
     fn name(&self) -> &'static str {
@@ -133,6 +152,7 @@ pub fn mobilenet_tiny(
     net.push_boxed(inverted_residual(16, 32, 2, 2, hw / 2, hw / 2, arith, &mut rng));
     net.push_boxed(Box::new(GlobalAvgPool::new()));
     net.push_boxed(Box::new(Linear::new(32, classes, arith, &mut rng)));
+    crate::nn::finalize(&mut net);
     net
 }
 
@@ -142,12 +162,14 @@ mod tests {
 
     #[test]
     fn forward_backward_shapes() {
-        let mut net = mobilenet_tiny(10, 3, 16, Arith::Float, 1);
+        let net = mobilenet_tiny(10, 3, 16, Arith::Float, 1);
         let x = Tensor::new(vec![0.1; 3 * 16 * 16], vec![1, 3, 16, 16]);
         let mut ctx = Ctx::train(0, 0);
-        let y = net.forward(&x, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = net.forward(&x, &mut ctx, Some(&mut tape));
         assert_eq!(y.shape, vec![1, 10]);
-        let g = net.backward(&y, &mut ctx);
+        let g = net.backward(&y, &mut ctx, &tape, &mut grads);
         assert_eq!(g.shape, vec![1, 3, 16, 16]);
     }
 
@@ -155,14 +177,15 @@ mod tests {
     fn depthwise_channels_independent() {
         let mut rng = Rng::new(2);
         let mut dw = DepthwiseConv::new(2, 1, 4, 4, Arith::Float, &mut rng);
+        crate::nn::finalize(&mut dw);
         let mut x = Tensor::new(vec![0.0; 2 * 16], vec![1, 2, 4, 4]);
         x.data[0] = 1.0; // channel 0 only
         let mut ctx = Ctx::eval(0);
-        let y = dw.forward(&x, &mut ctx);
+        let y = dw.forward(&x, &mut ctx, None);
         // Channel 1 output unaffected by channel 0 input (minus bias).
         let mut x2 = Tensor::new(vec![0.0; 2 * 16], vec![1, 2, 4, 4]);
         x2.data[0] = 5.0;
-        let y2 = dw.forward(&x2, &mut ctx);
+        let y2 = dw.forward(&x2, &mut ctx, None);
         for i in 16..32 {
             assert_eq!(y.data[i], y2.data[i]);
         }
@@ -170,10 +193,10 @@ mod tests {
 
     #[test]
     fn int_mode_runs() {
-        let mut net = mobilenet_tiny(4, 3, 8, Arith::int8(), 3);
+        let net = mobilenet_tiny(4, 3, 8, Arith::int8(), 3);
         let x = Tensor::new(vec![0.3; 3 * 64], vec![1, 3, 8, 8]);
         let mut ctx = Ctx::train(0, 0);
-        let y = net.forward(&x, &mut ctx);
+        let y = net.forward(&x, &mut ctx, None);
         assert!(y.data.iter().all(|v| v.is_finite()));
     }
 }

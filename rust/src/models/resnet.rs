@@ -68,6 +68,7 @@ pub fn resnet_cifar(
     }
     net.push_boxed(Box::new(GlobalAvgPool::new()));
     net.push_boxed(Box::new(Linear::new(c, classes, arith, &mut rng)));
+    crate::nn::finalize(&mut net);
     net
 }
 
@@ -81,31 +82,37 @@ mod tests {
     use super::*;
     use crate::nn::{Ctx, Layer, Tensor};
 
+    use crate::nn::{GradStore, Tape};
+
     #[test]
     fn forward_backward_shapes() {
-        let mut net = resnet_tiny(10, 3, 16, Arith::Float, 1);
+        let net = resnet_tiny(10, 3, 16, Arith::Float, 1);
         let x = Tensor::new(vec![0.1; 2 * 3 * 16 * 16], vec![2, 3, 16, 16]);
         let mut ctx = Ctx::train(0, 0);
-        let y = net.forward(&x, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = net.forward(&x, &mut ctx, Some(&mut tape));
         assert_eq!(y.shape, vec![2, 10]);
-        let g = net.backward(&y, &mut ctx);
+        let g = net.backward(&y, &mut ctx, &tape, &mut grads);
         assert_eq!(g.shape, vec![2, 3, 16, 16]);
     }
 
     #[test]
     fn int_mode_runs() {
-        let mut net = resnet_tiny(4, 3, 16, Arith::int8(), 2);
+        let net = resnet_tiny(4, 3, 16, Arith::int8(), 2);
         let x = Tensor::new(vec![0.2; 3 * 16 * 16], vec![1, 3, 16, 16]);
         let mut ctx = Ctx::train(0, 0);
-        let y = net.forward(&x, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = net.forward(&x, &mut ctx, Some(&mut tape));
         assert!(y.data.iter().all(|v| v.is_finite()));
-        let g = net.backward(&y, &mut ctx);
+        let g = net.backward(&y, &mut ctx, &tape, &mut grads);
         assert!(g.data.iter().all(|v| v.is_finite()));
     }
 
     #[test]
     fn deeper_variant_builds() {
-        let mut net = resnet_cifar(2, 8, 10, 3, 32, Arith::Float, 3);
+        let net = resnet_cifar(2, 8, 10, 3, 32, Arith::Float, 3);
         assert!(net.param_count() > 20_000, "got {}", net.param_count());
     }
 }

@@ -11,7 +11,7 @@ use crate::nn::batchnorm::batchnorm;
 use crate::nn::blocks::Sequential;
 use crate::nn::conv2d::Conv2d;
 use crate::nn::softmax_ce::{sigmoid_bce, smooth_l1};
-use crate::nn::{activations::ReLU, Arith, Ctx, Layer, Tensor};
+use crate::nn::{activations::ReLU, Arith, Ctx, GradStore, Layer, Param, Registrar, Tape, Tensor};
 
 /// Single-class grid detector.
 pub struct SsdLite {
@@ -51,22 +51,9 @@ impl SsdLite {
             .push(frozen(width * 2))
             .push(ReLU::new())
             .push(Conv2d::new(width * 2, 5, 3, 1, 1, hw / 4, hw / 4, arith, &mut rng));
-        SsdLite { net, hw, grid: hw / 4 }
-    }
-
-    /// Forward: `[N, 5, G, G]` raw head outputs.
-    pub fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
-        self.net.forward(x, ctx)
-    }
-
-    /// Backward.
-    pub fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
-        self.net.backward(gy, ctx)
-    }
-
-    /// Parameters.
-    pub fn params(&mut self) -> Vec<&mut crate::nn::Param> {
-        self.net.params()
+        let mut det = SsdLite { net, hw, grid: hw / 4 };
+        crate::nn::finalize(&mut det);
+        det
     }
 
     /// Build dense training targets for a batch of scenes. Returns
@@ -187,6 +174,34 @@ impl SsdLite {
     }
 }
 
+impl Layer for SsdLite {
+    fn forward(&self, x: &Tensor, ctx: &mut Ctx, tape: Option<&mut Tape>) -> Tensor {
+        self.net.forward(x, ctx, tape)
+    }
+
+    fn backward(&self, gy: &Tensor, ctx: &mut Ctx, tape: &Tape, grads: &mut GradStore) -> Tensor {
+        self.net.backward(gy, ctx, tape, grads)
+    }
+
+    fn register(&mut self, r: &mut Registrar) {
+        r.enter("ssd");
+        self.net.register(r);
+        r.exit();
+    }
+
+    fn params(&mut self) -> Vec<&mut Param> {
+        self.net.params()
+    }
+
+    fn params_ref(&self) -> Vec<&Param> {
+        self.net.params_ref()
+    }
+
+    fn name(&self) -> &'static str {
+        "ssd_lite"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -194,7 +209,7 @@ mod tests {
 
     #[test]
     fn head_shape_and_targets() {
-        let mut det = SsdLite::new(3, 16, 4, true, Arith::Float, 1);
+        let det = SsdLite::new(3, 16, 4, true, Arith::Float, 1);
         let ds = BoxesDet { n: 2, hw: 16, ch: 3, max_objects: 1, seed: 3 };
         // direct construction to match hw=16
         let s0 = ds.scene(0);
@@ -204,12 +219,14 @@ mod tests {
         x.extend_from_slice(&s1.img);
         let xt = Tensor::new(x, vec![2, 3, 16, 16]);
         let mut ctx = Ctx::train(0, 0);
-        let y = det.forward(&xt, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = det.forward(&xt, &mut ctx, Some(&mut tape));
         assert_eq!(y.shape, vec![2, 5, 4, 4]);
         let (loss, grad) = det.loss(&y, &[&s0, &s1]);
         assert!(loss > 0.0 && loss.is_finite());
         assert_eq!(grad.shape, y.shape);
-        let g = det.backward(&grad, &mut ctx);
+        let g = det.backward(&grad, &mut ctx, &tape, &mut grads);
         assert_eq!(g.shape, vec![2, 3, 16, 16]);
     }
 

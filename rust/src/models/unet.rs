@@ -30,7 +30,7 @@ pub fn fcn_seg(
         b
     };
     let w2 = width * 2;
-    Sequential::new()
+    let mut net = Sequential::new()
         // Encoder.
         .push(Conv2d::new(ch_in, width, 3, 1, 1, hw, hw, arith, &mut rng))
         .push(bn(width, frozen_bn))
@@ -54,31 +54,35 @@ pub fn fcn_seg(
         .push(Conv2d::new(width, width, 3, 1, 1, hw, hw, arith, &mut rng))
         .push(bn(width, frozen_bn))
         .push(ReLU::new())
-        .push(Conv2d::new(width, classes, 1, 1, 0, hw, hw, arith, &mut rng))
+        .push(Conv2d::new(width, classes, 1, 1, 0, hw, hw, arith, &mut rng));
+    crate::nn::finalize(&mut net);
+    net
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::{Ctx, Layer, Tensor};
+    use crate::nn::{Ctx, GradStore, Layer, Tape, Tensor};
 
     #[test]
     fn output_is_per_pixel_logits() {
-        let mut net = fcn_seg(6, 3, 16, 8, true, Arith::Float, 1);
+        let net = fcn_seg(6, 3, 16, 8, true, Arith::Float, 1);
         let x = Tensor::new(vec![0.1; 3 * 256], vec![1, 3, 16, 16]);
         let mut ctx = Ctx::train(0, 0);
-        let y = net.forward(&x, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = net.forward(&x, &mut ctx, Some(&mut tape));
         assert_eq!(y.shape, vec![1, 6, 16, 16]);
-        let g = net.backward(&y, &mut ctx);
+        let g = net.backward(&y, &mut ctx, &tape, &mut grads);
         assert_eq!(g.shape, vec![1, 3, 16, 16]);
     }
 
     #[test]
     fn int_mode_finite() {
-        let mut net = fcn_seg(4, 3, 16, 4, true, Arith::int8(), 2);
+        let net = fcn_seg(4, 3, 16, 4, true, Arith::int8(), 2);
         let x = Tensor::new(vec![0.2; 3 * 256], vec![1, 3, 16, 16]);
         let mut ctx = Ctx::train(0, 0);
-        let y = net.forward(&x, &mut ctx);
+        let y = net.forward(&x, &mut ctx, None);
         assert!(y.data.iter().all(|v| v.is_finite()));
     }
 }

@@ -9,7 +9,7 @@ use crate::nn::attention::MultiHeadAttention;
 use crate::nn::blocks::residual_add;
 use crate::nn::layernorm::LayerNorm;
 use crate::nn::linear::Linear;
-use crate::nn::{Arith, Ctx, Layer, Param, Tensor};
+use crate::nn::{Arith, Ctx, GradStore, Layer, Param, Registrar, Tape, TapeKey, Tensor};
 
 /// One pre-norm transformer block: `x += MHA(LN(x)); x += MLP(LN(x))`,
 /// residual joins in integer.
@@ -39,28 +39,46 @@ impl TransformerBlock {
 }
 
 impl Layer for TransformerBlock {
-    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
-        let h = self.ln1.forward(x, ctx);
-        let a = self.attn.forward(&h, ctx);
+    fn forward(&self, x: &Tensor, ctx: &mut Ctx, tape: Option<&mut Tape>) -> Tensor {
+        let mut tape = tape;
+        let h = self.ln1.forward(x, ctx, tape.as_deref_mut());
+        let a = self.attn.forward(&h, ctx, tape.as_deref_mut());
         let x1 = residual_add(x, &a, &self.arith, ctx, false);
-        let h2 = self.ln2.forward(&x1, ctx);
-        let m = self.fc1.forward(&h2, ctx);
-        let m = self.act.forward(&m, ctx);
-        let m = self.fc2.forward(&m, ctx);
+        let h2 = self.ln2.forward(&x1, ctx, tape.as_deref_mut());
+        let m = self.fc1.forward(&h2, ctx, tape.as_deref_mut());
+        let m = self.act.forward(&m, ctx, tape.as_deref_mut());
+        let m = self.fc2.forward(&m, ctx, tape.as_deref_mut());
         residual_add(&x1, &m, &self.arith, ctx, false)
     }
 
-    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn backward(&self, gy: &Tensor, ctx: &mut Ctx, tape: &Tape, grads: &mut GradStore) -> Tensor {
         // Backward of x2 = x1 + MLP(LN2(x1)).
-        let gm = self.fc2.backward(gy, ctx);
-        let gm = self.act.backward(&gm, ctx);
-        let gm = self.fc1.backward(&gm, ctx);
-        let gln2 = self.ln2.backward(&gm, ctx);
+        let gm = self.fc2.backward(gy, ctx, tape, grads);
+        let gm = self.act.backward(&gm, ctx, tape, grads);
+        let gm = self.fc1.backward(&gm, ctx, tape, grads);
+        let gln2 = self.ln2.backward(&gm, ctx, tape, grads);
         let gx1 = residual_add(gy, &gln2, &self.arith, ctx, true);
         // Backward of x1 = x + MHA(LN1(x)).
-        let ga = self.attn.backward(&gx1, ctx);
-        let gln1 = self.ln1.backward(&ga, ctx);
+        let ga = self.attn.backward(&gx1, ctx, tape, grads);
+        let gln1 = self.ln1.backward(&ga, ctx, tape, grads);
         residual_add(&gx1, &gln1, &self.arith, ctx, true)
+    }
+
+    fn register(&mut self, r: &mut Registrar) {
+        r.enter("block");
+        self.ln1.register(r);
+        self.attn.register(r);
+        r.enter("ln2");
+        self.ln2.register(r);
+        r.exit();
+        r.enter("fc1");
+        self.fc1.register(r);
+        r.exit();
+        self.act.register(r);
+        r.enter("fc2");
+        self.fc2.register(r);
+        r.exit();
+        r.exit();
     }
 
     fn params(&mut self) -> Vec<&mut Param> {
@@ -72,9 +90,23 @@ impl Layer for TransformerBlock {
         p
     }
 
+    fn params_ref(&self) -> Vec<&Param> {
+        let mut p = self.ln1.params_ref();
+        p.extend(self.attn.params_ref());
+        p.extend(self.ln2.params_ref());
+        p.extend(self.fc1.params_ref());
+        p.extend(self.fc2.params_ref());
+        p
+    }
+
     fn name(&self) -> &'static str {
         "transformer_block"
     }
+}
+
+/// Taped token-grid dims.
+struct Saved {
+    bt: (usize, usize),
 }
 
 /// ViT-tiny image classifier.
@@ -91,7 +123,8 @@ pub struct VitTiny {
     pub ch: usize,
     /// Embedding dim.
     pub dim: usize,
-    saved_bt: (usize, usize),
+    /// Tape slot.
+    pub key: TapeKey,
 }
 
 impl VitTiny {
@@ -112,7 +145,7 @@ impl VitTiny {
         let mut rng = Rng::new(seed);
         let t = (hw / patch) * (hw / patch);
         let pos: Vec<f32> = (0..t * dim).map(|_| rng.next_gaussian() * 0.02).collect();
-        VitTiny {
+        let mut v = VitTiny {
             patch_proj: Linear::new(ch * patch * patch, dim, arith, &mut rng),
             pos: Param::new(pos, vec![t, dim]),
             blocks: (0..depth)
@@ -123,8 +156,10 @@ impl VitTiny {
             hw,
             ch,
             dim,
-            saved_bt: (0, 0),
-        }
+            key: TapeKey::default(),
+        };
+        crate::nn::finalize(&mut v);
+        v
     }
 
     /// Extract non-overlapping patches: `[B, T, ch·p·p]`.
@@ -154,11 +189,12 @@ impl VitTiny {
 }
 
 impl Layer for VitTiny {
-    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn forward(&self, x: &Tensor, ctx: &mut Ctx, tape: Option<&mut Tape>) -> Tensor {
+        let mut tape = tape;
         let b = x.shape[0];
         let patches = self.patchify(x);
         let t = patches.shape[1];
-        let mut h = self.patch_proj.forward(&patches, ctx);
+        let mut h = self.patch_proj.forward(&patches, ctx, tape.as_deref_mut());
         // Learned position embeddings (plain add — a parameter, exact).
         for bi in 0..b {
             for i in 0..t * self.dim {
@@ -166,8 +202,8 @@ impl Layer for VitTiny {
             }
         }
         let mut h = Tensor::new(h.data, vec![b, t, self.dim]);
-        for blk in self.blocks.iter_mut() {
-            h = blk.forward(&h, ctx);
+        for blk in self.blocks.iter() {
+            h = blk.forward(&h, ctx, tape.as_deref_mut());
         }
         // Mean pool over tokens.
         let mut pooled = vec![0f32; b * self.dim];
@@ -181,13 +217,16 @@ impl Layer for VitTiny {
         for v in pooled.iter_mut() {
             *v /= t as f32;
         }
-        self.saved_bt = (b, t);
-        self.head.forward(&Tensor::new(pooled, vec![b, self.dim]), ctx)
+        if let Some(tape) = tape.as_deref_mut() {
+            tape.put(self.key, Saved { bt: (b, t) });
+        }
+        self.head.forward(&Tensor::new(pooled, vec![b, self.dim]), ctx, tape)
     }
 
-    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
-        let (b, t) = self.saved_bt;
-        let gp = self.head.backward(gy, ctx); // [B, dim]
+    fn backward(&self, gy: &Tensor, ctx: &mut Ctx, tape: &Tape, grads: &mut GradStore) -> Tensor {
+        let saved: &Saved = tape.get(self.key, "vit_tiny");
+        let (b, t) = saved.bt;
+        let gp = self.head.backward(gy, ctx, tape, grads); // [B, dim]
         // Un-pool: broadcast /t.
         let mut gh = vec![0f32; b * t * self.dim];
         for bi in 0..b {
@@ -198,16 +237,17 @@ impl Layer for VitTiny {
             }
         }
         let mut gh = Tensor::new(gh, vec![b, t, self.dim]);
-        for blk in self.blocks.iter_mut().rev() {
-            gh = blk.backward(&gh, ctx);
+        for blk in self.blocks.iter().rev() {
+            gh = blk.backward(&gh, ctx, tape, grads);
         }
         // Position-embedding gradient.
+        let gpos = grads.buf(&self.pos);
         for bi in 0..b {
             for i in 0..t * self.dim {
-                self.pos.grad[i] += gh.data[bi * t * self.dim + i];
+                gpos[i] += gh.data[bi * t * self.dim + i];
             }
         }
-        let gpatches = self.patch_proj.backward(&gh, ctx);
+        let gpatches = self.patch_proj.backward(&gh, ctx, tape, grads);
         // Un-patchify to image shape.
         let (c, hw, p) = (self.ch, self.hw, self.patch);
         let g = hw / p;
@@ -231,6 +271,24 @@ impl Layer for VitTiny {
         Tensor::new(gx, vec![b, c, hw, hw])
     }
 
+    fn register(&mut self, r: &mut Registrar) {
+        r.enter("vit");
+        r.key(&mut self.key);
+        r.enter("patch_proj");
+        self.patch_proj.register(r);
+        r.exit();
+        r.param(&mut self.pos, "pos");
+        for (i, blk) in self.blocks.iter_mut().enumerate() {
+            r.enter(i.to_string());
+            blk.register(r);
+            r.exit();
+        }
+        r.enter("head");
+        self.head.register(r);
+        r.exit();
+        r.exit();
+    }
+
     fn params(&mut self) -> Vec<&mut Param> {
         let mut ps = self.patch_proj.params();
         ps.push(&mut self.pos);
@@ -238,6 +296,16 @@ impl Layer for VitTiny {
             ps.extend(blk.params());
         }
         ps.extend(self.head.params());
+        ps
+    }
+
+    fn params_ref(&self) -> Vec<&Param> {
+        let mut ps = self.patch_proj.params_ref();
+        ps.push(&self.pos);
+        for blk in self.blocks.iter() {
+            ps.extend(blk.params_ref());
+        }
+        ps.extend(self.head.params_ref());
         ps
     }
 
@@ -252,23 +320,27 @@ mod tests {
 
     #[test]
     fn forward_backward_shapes() {
-        let mut vit = VitTiny::new(10, 3, 16, 4, 32, 2, 4, Arith::Float, 1);
+        let vit = VitTiny::new(10, 3, 16, 4, 32, 2, 4, Arith::Float, 1);
         let x = Tensor::new(vec![0.1; 2 * 3 * 256], vec![2, 3, 16, 16]);
         let mut ctx = Ctx::train(0, 0);
-        let y = vit.forward(&x, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = vit.forward(&x, &mut ctx, Some(&mut tape));
         assert_eq!(y.shape, vec![2, 10]);
-        let g = vit.backward(&y, &mut ctx);
+        let g = vit.backward(&y, &mut ctx, &tape, &mut grads);
         assert_eq!(g.shape, vec![2, 3, 16, 16]);
     }
 
     #[test]
     fn int_mode_finite() {
-        let mut vit = VitTiny::new(4, 3, 8, 4, 16, 1, 2, Arith::int8(), 2);
+        let vit = VitTiny::new(4, 3, 8, 4, 16, 1, 2, Arith::int8(), 2);
         let x = Tensor::new(vec![0.2; 3 * 64], vec![1, 3, 8, 8]);
         let mut ctx = Ctx::train(0, 0);
-        let y = vit.forward(&x, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = vit.forward(&x, &mut ctx, Some(&mut tape));
         assert!(y.data.iter().all(|v| v.is_finite()));
-        let g = vit.backward(&y, &mut ctx);
+        let g = vit.backward(&y, &mut ctx, &tape, &mut grads);
         assert!(g.data.iter().all(|v| v.is_finite()));
     }
 
@@ -276,10 +348,13 @@ mod tests {
     fn transformer_block_gradcheck_float() {
         let mut rng = Rng::new(3);
         let mut blk = TransformerBlock::new(8, 2, false, Arith::Float, &mut rng);
+        crate::nn::finalize(&mut blk);
         let x = Tensor::new((0..24).map(|i| ((i as f32) * 0.31).sin() * 0.5).collect(), vec![1, 3, 8]);
         let mut ctx = Ctx::train(0, 0);
-        let y = blk.forward(&x, &mut ctx);
-        let gx = blk.backward(&y, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = blk.forward(&x, &mut ctx, Some(&mut tape));
+        let gx = blk.backward(&y, &mut ctx, &tape, &mut grads);
         let eps = 1e-2;
         for i in [0usize, 11, 23] {
             let mut xp = x.clone();
@@ -288,8 +363,8 @@ mod tests {
             xm.data[i] -= eps;
             let mut c1 = Ctx::train(0, 0);
             let mut c2 = Ctx::train(0, 0);
-            let lp: f32 = blk.forward(&xp, &mut c1).data.iter().map(|v| 0.5 * v * v).sum();
-            let lm: f32 = blk.forward(&xm, &mut c2).data.iter().map(|v| 0.5 * v * v).sum();
+            let lp: f32 = blk.forward(&xp, &mut c1, None).data.iter().map(|v| 0.5 * v * v).sum();
+            let lm: f32 = blk.forward(&xm, &mut c2, None).data.iter().map(|v| 0.5 * v * v).sum();
             let fd = (lp - lm) / (2.0 * eps);
             assert!(
                 (fd - gx.data[i]).abs() < 8e-2 * fd.abs().max(0.5),

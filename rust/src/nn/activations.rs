@@ -2,44 +2,48 @@
 //!
 //! ReLU is a pure sign test, so its "integer" variant is exact — the
 //! forward masks negative payloads, the backward masks the gradient by the
-//! saved sign mask; no representation mapping is involved. GELU (used by
+//! taped sign mask; no representation mapping is involved. GELU (used by
 //! transformer blocks) stays in float, matching the paper's treatment of
 //! softmax ("the computation of softmax in attention mechanism is in
 //! floating point").
 
-use super::{Ctx, Layer, Tensor};
+use super::{ArenaF32, ArenaI8, Ctx, GradStore, Layer, Registrar, Tape, TapeKey, Tensor};
 
 /// Rectified linear unit.
+#[derive(Default)]
 pub struct ReLU {
-    mask: Vec<bool>,
+    /// Tape slot for the sign mask.
+    pub key: TapeKey,
 }
 
 impl ReLU {
     /// New ReLU.
     pub fn new() -> Self {
-        ReLU { mask: Vec::new() }
-    }
-}
-
-impl Default for ReLU {
-    fn default() -> Self {
-        Self::new()
+        Self::default()
     }
 }
 
 impl Layer for ReLU {
-    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn forward(&self, x: &Tensor, _ctx: &mut Ctx, tape: Option<&mut Tape>) -> Tensor {
         let y: Vec<f32> = x.data.iter().map(|&v| v.max(0.0)).collect();
-        if ctx.train {
-            self.mask = x.data.iter().map(|&v| v > 0.0).collect();
+        if let Some(tape) = tape {
+            let mask = ArenaI8::fill_with(x.len(), |i| (x.data[i] > 0.0) as i8);
+            tape.put(self.key, mask);
         }
         Tensor::new(y, x.shape.clone())
     }
 
-    fn backward(&mut self, gy: &Tensor, _ctx: &mut Ctx) -> Tensor {
+    fn backward(&self, gy: &Tensor, _ctx: &mut Ctx, tape: &Tape, _grads: &mut GradStore) -> Tensor {
+        let mask: &ArenaI8 = tape.get(self.key, "relu");
         let g: Vec<f32> =
-            gy.data.iter().zip(&self.mask).map(|(&g, &m)| if m { g } else { 0.0 }).collect();
+            gy.data.iter().zip(mask.iter()).map(|(&g, &m)| if m != 0 { g } else { 0.0 }).collect();
         Tensor::new(g, gy.shape.clone())
+    }
+
+    fn register(&mut self, r: &mut Registrar) {
+        r.enter("relu");
+        r.key(&mut self.key);
+        r.exit();
     }
 
     fn name(&self) -> &'static str {
@@ -49,14 +53,16 @@ impl Layer for ReLU {
 
 /// Gaussian error linear unit (tanh approximation), float — the
 /// transformer's pointwise nonlinearity, kept in fp like softmax.
+#[derive(Default)]
 pub struct Gelu {
-    saved_x: Vec<f32>,
+    /// Tape slot for the saved input.
+    pub key: TapeKey,
 }
 
 impl Gelu {
     /// New GELU.
     pub fn new() -> Self {
-        Gelu { saved_x: Vec::new() }
+        Self::default()
     }
 
     #[inline]
@@ -67,27 +73,22 @@ impl Gelu {
     }
 }
 
-impl Default for Gelu {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
 impl Layer for Gelu {
-    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
-        if ctx.train {
-            self.saved_x = x.data.clone();
+    fn forward(&self, x: &Tensor, _ctx: &mut Ctx, tape: Option<&mut Tape>) -> Tensor {
+        if let Some(tape) = tape {
+            tape.put(self.key, ArenaF32::copy_of(&x.data));
         }
         let y: Vec<f32> = x.data.iter().map(|&v| v * Self::phi(v)).collect();
         Tensor::new(y, x.shape.clone())
     }
 
-    fn backward(&mut self, gy: &Tensor, _ctx: &mut Ctx) -> Tensor {
+    fn backward(&self, gy: &Tensor, _ctx: &mut Ctx, tape: &Tape, _grads: &mut GradStore) -> Tensor {
+        let saved: &ArenaF32 = tape.get(self.key, "gelu");
         let eps = 1e-3;
         let g: Vec<f32> = gy
             .data
             .iter()
-            .zip(&self.saved_x)
+            .zip(saved.iter())
             .map(|(&g, &x)| {
                 // Analytic derivative via central difference of x·Φ(x) is
                 // accurate enough and keeps the code tiny; the nonlinearity
@@ -100,6 +101,12 @@ impl Layer for Gelu {
         Tensor::new(g, gy.shape.clone())
     }
 
+    fn register(&mut self, r: &mut Registrar) {
+        r.enter("gelu");
+        r.key(&mut self.key);
+        r.exit();
+    }
+
     fn name(&self) -> &'static str {
         "gelu"
     }
@@ -108,24 +115,29 @@ impl Layer for Gelu {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::finalize;
 
     #[test]
     fn relu_forward_backward() {
         let mut r = ReLU::new();
+        finalize(&mut r);
         let x = Tensor::new(vec![-1.0, 0.0, 2.0, -0.5], vec![4]);
         let mut ctx = Ctx::train(0, 0);
-        let y = r.forward(&x, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = r.forward(&x, &mut ctx, Some(&mut tape));
         assert_eq!(y.data, vec![0.0, 0.0, 2.0, 0.0]);
-        let g = r.backward(&Tensor::new(vec![1.0; 4], vec![4]), &mut ctx);
+        let g = r.backward(&Tensor::new(vec![1.0; 4], vec![4]), &mut ctx, &tape, &mut grads);
         assert_eq!(g.data, vec![0.0, 0.0, 1.0, 0.0]);
     }
 
     #[test]
     fn gelu_matches_known_values() {
         let mut g = Gelu::new();
+        finalize(&mut g);
         let x = Tensor::new(vec![0.0, 1.0, -1.0], vec![3]);
         let mut ctx = Ctx::train(0, 0);
-        let y = g.forward(&x, &mut ctx);
+        let y = g.forward(&x, &mut ctx, None);
         assert!((y.data[0] - 0.0).abs() < 1e-6);
         assert!((y.data[1] - 0.8412).abs() < 1e-3);
         assert!((y.data[2] + 0.1588).abs() < 1e-3);
@@ -134,10 +146,13 @@ mod tests {
     #[test]
     fn gelu_gradcheck() {
         let mut g = Gelu::new();
+        finalize(&mut g);
         let x = Tensor::new(vec![0.3, -0.7, 1.5], vec![3]);
         let mut ctx = Ctx::train(0, 0);
-        let y = g.forward(&x, &mut ctx);
-        let gx = g.backward(&y, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = g.forward(&x, &mut ctx, Some(&mut tape));
+        let gx = g.backward(&y, &mut ctx, &tape, &mut grads);
         let eps = 1e-3;
         for i in 0..3 {
             let mut xp = x.clone();
@@ -145,8 +160,8 @@ mod tests {
             let mut xm = x.clone();
             xm.data[i] -= eps;
             let mut c = Ctx::train(0, 0);
-            let lp: f32 = g.forward(&xp, &mut c).data.iter().map(|v| 0.5 * v * v).sum();
-            let lm: f32 = g.forward(&xm, &mut c).data.iter().map(|v| 0.5 * v * v).sum();
+            let lp: f32 = g.forward(&xp, &mut c, None).data.iter().map(|v| 0.5 * v * v).sum();
+            let lm: f32 = g.forward(&xm, &mut c, None).data.iter().map(|v| 0.5 * v * v).sum();
             let fd = (lp - lm) / (2.0 * eps);
             assert!((fd - gx.data[i]).abs() < 1e-2 * fd.abs().max(1.0));
         }

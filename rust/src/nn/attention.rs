@@ -8,8 +8,17 @@
 use super::linear::Linear;
 use super::qmat::{qgemm, MatKind};
 use super::softmax_ce::softmax_rows;
-use super::{Arith, Ctx, Layer, Param, Tensor};
+use super::{Arith, ArenaF32, Ctx, GradStore, Layer, Param, Registrar, Tape, TapeKey, Tensor};
 use crate::dfp::exec;
+
+/// Taped per-forward state: flattened per (batch·head) panels.
+struct Saved {
+    q: ArenaF32,
+    k: ArenaF32,
+    v: ArenaF32,
+    p: ArenaF32,
+    bt: (usize, usize),
+}
 
 /// Multi-head self-attention over `[B, T, D]` inputs.
 pub struct MultiHeadAttention {
@@ -22,12 +31,8 @@ pub struct MultiHeadAttention {
     /// Causal masking (LM mode) vs bidirectional (ViT mode).
     pub causal: bool,
     arith: Arith,
-    // saved per forward: flattened per (batch·head) tensors
-    saved_q: Vec<f32>,
-    saved_k: Vec<f32>,
-    saved_v: Vec<f32>,
-    saved_p: Vec<f32>,
-    saved_bt: (usize, usize),
+    /// Tape slot.
+    pub key: TapeKey,
 }
 
 impl MultiHeadAttention {
@@ -41,11 +46,7 @@ impl MultiHeadAttention {
             heads,
             causal,
             arith,
-            saved_q: Vec::new(),
-            saved_k: Vec::new(),
-            saved_v: Vec::new(),
-            saved_p: Vec::new(),
-            saved_bt: (0, 0),
+            key: TapeKey::default(),
         }
     }
 
@@ -55,15 +56,16 @@ impl MultiHeadAttention {
 }
 
 impl Layer for MultiHeadAttention {
-    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn forward(&self, x: &Tensor, ctx: &mut Ctx, tape: Option<&mut Tape>) -> Tensor {
+        let mut tape = tape;
         let (b, t, d) = (x.shape[0], x.shape[1], x.shape[2]);
         assert_eq!(d, self.dim);
         let dh = self.dh();
         let scale = 1.0 / (dh as f32).sqrt();
-        let qkv = self.qkv.forward(x, ctx); // [B,T,3D]
+        let qkv = self.qkv.forward(x, ctx, tape.as_deref_mut()); // [B,T,3D]
         // Split into per-(batch,head) q/k/v panels [T × dh]. Arena-backed:
-        // the previous step's panels are recycled below, so steady-state
-        // training reuses these allocations.
+        // they move onto the tape (recycled at end of step) or are recycled
+        // immediately in the tape-less forward.
         let nbh = b * self.heads;
         let mut q = exec::take_f32_vec(nbh * t * dh);
         let mut k = exec::take_f32_vec(nbh * t * dh);
@@ -109,27 +111,33 @@ impl Layer for MultiHeadAttention {
                 }
             }
         }
-        if ctx.train {
-            exec::recycle_f32(std::mem::replace(&mut self.saved_q, q));
-            exec::recycle_f32(std::mem::replace(&mut self.saved_k, k));
-            exec::recycle_f32(std::mem::replace(&mut self.saved_v, v));
-            exec::recycle_f32(std::mem::replace(&mut self.saved_p, p_all));
-            self.saved_bt = (b, t);
+        if let Some(tape) = tape.as_deref_mut() {
+            tape.put(
+                self.key,
+                Saved {
+                    q: ArenaF32::from_taken(q),
+                    k: ArenaF32::from_taken(k),
+                    v: ArenaF32::from_taken(v),
+                    p: ArenaF32::from_taken(p_all),
+                    bt: (b, t),
+                },
+            );
         } else {
             exec::recycle_f32(q);
             exec::recycle_f32(k);
             exec::recycle_f32(v);
             exec::recycle_f32(p_all);
         }
-        self.proj.forward(&Tensor::new(o, vec![b, t, d]), ctx)
+        self.proj.forward(&Tensor::new(o, vec![b, t, d]), ctx, tape)
     }
 
-    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
-        let (b, t) = self.saved_bt;
+    fn backward(&self, gy: &Tensor, ctx: &mut Ctx, tape: &Tape, grads: &mut GradStore) -> Tensor {
+        let saved: &Saved = tape.get(self.key, "mha");
+        let (b, t) = saved.bt;
         let d = self.dim;
         let dh = self.dh();
         let scale = 1.0 / (dh as f32).sqrt();
-        let go_all = self.proj.backward(gy, ctx); // [B,T,D]
+        let go_all = self.proj.backward(gy, ctx, tape, grads); // [B,T,D]
         let nbh = b * self.heads;
         let mut gqkv = vec![0f32; b * t * 3 * d];
         // Per-head scratch hoisted out of the loop and arena-backed; both
@@ -145,10 +153,10 @@ impl Layer for MultiHeadAttention {
                     go[tt * dh + c] = go_all.data[(bb * t + tt) * d + h * dh + c];
                 }
             }
-            let p = &self.saved_p[bh * t * t..(bh + 1) * t * t];
-            let vs = &self.saved_v[bh * t * dh..(bh + 1) * t * dh];
-            let qs = &self.saved_q[bh * t * dh..(bh + 1) * t * dh];
-            let ks = &self.saved_k[bh * t * dh..(bh + 1) * t * dh];
+            let p = &saved.p[bh * t * t..(bh + 1) * t * t];
+            let vs = &saved.v[bh * t * dh..(bh + 1) * t * dh];
+            let qs = &saved.q[bh * t * dh..(bh + 1) * t * dh];
+            let ks = &saved.k[bh * t * dh..(bh + 1) * t * dh];
             // gP = gO·Vᵀ ; gV = Pᵀ·gO (integer matmuls).
             let gp = qgemm(&self.arith, MatKind::ABT, &go, vs, (t, dh, t), ctx, true);
             let gv = qgemm(&self.arith, MatKind::ATB, p, &go, (t, t, dh), ctx, true);
@@ -180,12 +188,30 @@ impl Layer for MultiHeadAttention {
         }
         exec::recycle_f32(go);
         exec::recycle_f32(gs);
-        self.qkv.backward(&Tensor::new(gqkv, vec![b, t, 3 * d]), ctx)
+        self.qkv.backward(&Tensor::new(gqkv, vec![b, t, 3 * d]), ctx, tape, grads)
+    }
+
+    fn register(&mut self, r: &mut Registrar) {
+        r.enter("mha");
+        r.key(&mut self.key);
+        r.enter("qkv");
+        self.qkv.register(r);
+        r.exit();
+        r.enter("proj");
+        self.proj.register(r);
+        r.exit();
+        r.exit();
     }
 
     fn params(&mut self) -> Vec<&mut Param> {
         let mut p = self.qkv.params();
         p.extend(self.proj.params());
+        p
+    }
+
+    fn params_ref(&self) -> Vec<&Param> {
+        let mut p = self.qkv.params_ref();
+        p.extend(self.proj.params_ref());
         p
     }
 
@@ -198,6 +224,7 @@ impl Layer for MultiHeadAttention {
 mod tests {
     use super::*;
     use crate::dfp::rng::Rng;
+    use crate::nn::finalize;
 
     fn input(b: usize, t: usize, d: usize, seed: u64) -> Tensor {
         let mut rng = Rng::new(seed);
@@ -207,17 +234,21 @@ mod tests {
     #[test]
     fn shapes_roundtrip() {
         let mut m = MultiHeadAttention::new(16, 4, false, Arith::Float, &mut Rng::new(1));
+        finalize(&mut m);
         let x = input(2, 5, 16, 2);
         let mut ctx = Ctx::train(0, 0);
-        let y = m.forward(&x, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = m.forward(&x, &mut ctx, Some(&mut tape));
         assert_eq!(y.shape, vec![2, 5, 16]);
-        let g = m.backward(&y, &mut ctx);
+        let g = m.backward(&y, &mut ctx, &tape, &mut grads);
         assert_eq!(g.shape, vec![2, 5, 16]);
     }
 
     #[test]
     fn causal_mask_blocks_future() {
         let mut m = MultiHeadAttention::new(8, 2, true, Arith::Float, &mut Rng::new(3));
+        finalize(&mut m);
         let x1 = input(1, 4, 8, 4);
         // Changing a future token must not change earlier outputs.
         let mut x2 = x1.clone();
@@ -226,8 +257,8 @@ mod tests {
         }
         let mut c1 = Ctx::eval(0);
         let mut c2 = Ctx::eval(0);
-        let y1 = m.forward(&x1, &mut c1);
-        let y2 = m.forward(&x2, &mut c2);
+        let y1 = m.forward(&x1, &mut c1, None);
+        let y2 = m.forward(&x2, &mut c2, None);
         for ttok in 0..3 {
             for c in 0..8 {
                 assert!(
@@ -241,10 +272,13 @@ mod tests {
     #[test]
     fn float_gradcheck() {
         let mut m = MultiHeadAttention::new(8, 2, false, Arith::Float, &mut Rng::new(5));
+        finalize(&mut m);
         let x = input(1, 3, 8, 6);
         let mut ctx = Ctx::train(0, 0);
-        let y = m.forward(&x, &mut ctx);
-        let gx = m.backward(&y, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = m.forward(&x, &mut ctx, Some(&mut tape));
+        let gx = m.backward(&y, &mut ctx, &tape, &mut grads);
         let eps = 1e-2;
         for i in [0usize, 7, 13, 23] {
             let mut xp = x.clone();
@@ -253,8 +287,8 @@ mod tests {
             xm.data[i] -= eps;
             let mut c1 = Ctx::train(0, 0);
             let mut c2 = Ctx::train(0, 0);
-            let lp: f32 = m.forward(&xp, &mut c1).data.iter().map(|v| 0.5 * v * v).sum();
-            let lm: f32 = m.forward(&xm, &mut c2).data.iter().map(|v| 0.5 * v * v).sum();
+            let lp: f32 = m.forward(&xp, &mut c1, None).data.iter().map(|v| 0.5 * v * v).sum();
+            let lm: f32 = m.forward(&xm, &mut c2, None).data.iter().map(|v| 0.5 * v * v).sum();
             let fd = (lp - lm) / (2.0 * eps);
             assert!(
                 (fd - gx.data[i]).abs() < 5e-2 * fd.abs().max(0.5),
@@ -273,11 +307,13 @@ mod tests {
         mi.qkv.b.data = mf.qkv.b.data.clone();
         mi.proj.w.data = mf.proj.w.data.clone();
         mi.proj.b.data = mf.proj.b.data.clone();
+        finalize(&mut mf);
+        finalize(&mut mi);
         let x = input(1, 6, 16, 8);
         let mut c1 = Ctx::train(0, 0);
         let mut c2 = Ctx::train(0, 0);
-        let yf = mf.forward(&x, &mut c1);
-        let yi = mi.forward(&x, &mut c2);
+        let yf = mf.forward(&x, &mut c1, None);
+        let yi = mi.forward(&x, &mut c2, None);
         let ymax = yf.data.iter().fold(0f32, |m, v| m.max(v.abs()));
         for (a, b) in yi.data.iter().zip(&yf.data) {
             assert!((a - b).abs() < 0.2 * ymax.max(0.1), "{a} vs {b}");

@@ -17,9 +17,18 @@
 //! `∂L/∂x = (γ·r/N)·(N·ĝ − Σĝ − x̂·Σ(ĝ·x̂))`, `∂L/∂γ = Σĝ·x̂`, `∂L/∂β = Σĝ`,
 //! with `ĝ` the SR-mapped upstream gradient and `x̂ = (q − μ)·r` the cached
 //! integer normalized activations.
+//!
+//! Running statistics live behind a `RwLock`: the (single-threaded)
+//! training forward takes the write path, while concurrent tape-less
+//! inference forwards only snapshot them under a read lock — the layer
+//! stays `Sync` without serializing eval across pool workers.
+
+use std::sync::RwLock;
 
 use super::qmat::int_mode;
-use super::{Arith, Ctx, Layer, Param, Tensor};
+use super::{
+    Arith, ArenaF32, ArenaI32, Ctx, GradStore, Layer, Param, Registrar, Tape, TapeKey, Tensor,
+};
 use crate::dfp::bits::{exp2i64, unpack};
 use crate::dfp::exec;
 use crate::dfp::fixed::{fx_recip_int, fx_rsqrt, Fx};
@@ -63,6 +72,26 @@ fn f32_to_fx(x: f32) -> Fx {
     Fx::new(u.mant as i64, u.exp - 150)
 }
 
+/// Running statistics, guarded for concurrent eval.
+struct BnStats {
+    mean: Vec<f32>,
+    var: Vec<f32>,
+}
+
+/// Taped state for the integer backward.
+struct BnSaved {
+    diff: ArenaI32, // (q_i − μ_c) payloads at exponent kx
+    kx: i32,
+    r: Vec<Fx>, // per-channel 1/√(σ²+ε)
+    dims: (usize, usize), // (n, spatial)
+}
+
+/// Taped state for the float backward.
+struct BnFloatSaved {
+    x: ArenaF32,
+    dims: (usize, usize),
+}
+
 /// Batch-norm layer over NCHW activations.
 pub struct BatchNorm2d {
     /// Per-channel scale γ.
@@ -77,18 +106,12 @@ pub struct BatchNorm2d {
     pub eps: f32,
     /// Running-stat momentum.
     pub momentum: f32,
-    /// Running mean (inverse-mapped f32 view).
-    pub running_mean: Vec<f32>,
-    /// Running variance.
-    pub running_var: Vec<f32>,
     /// Frozen mode (used by the segmentation/detection experiments, §5):
     /// eval statistics, no γ/β updates.
     pub frozen: bool,
-    // --- saved for backward (integer caches) ---
-    saved_diff: Vec<i32>, // (q_i − μ_c) payloads at exponent kx
-    saved_kx: i32,
-    saved_r: Vec<Fx>, // per-channel 1/√(σ²+ε)
-    saved_dims: (usize, usize), // (n, spatial)
+    /// Tape slot for the backward caches.
+    pub key: TapeKey,
+    stats: RwLock<BnStats>,
 }
 
 impl BatchNorm2d {
@@ -101,14 +124,29 @@ impl BatchNorm2d {
             ch,
             eps: 1e-5,
             momentum: 0.1,
-            running_mean: vec![0.0; ch],
-            running_var: vec![1.0; ch],
             frozen: false,
-            saved_diff: Vec::new(),
-            saved_kx: 0,
-            saved_r: Vec::new(),
-            saved_dims: (0, 0),
+            key: TapeKey::default(),
+            stats: RwLock::new(BnStats { mean: vec![0.0; ch], var: vec![1.0; ch] }),
         }
+    }
+
+    /// Snapshot of the running mean.
+    pub fn running_mean(&self) -> Vec<f32> {
+        self.stats.read().unwrap().mean.clone()
+    }
+
+    /// Snapshot of the running variance.
+    pub fn running_var(&self) -> Vec<f32> {
+        self.stats.read().unwrap().var.clone()
+    }
+
+    /// Overwrite the running statistics (checkpoint restore).
+    pub fn set_running_stats(&mut self, mean: Vec<f32>, var: Vec<f32>) {
+        assert_eq!(mean.len(), self.ch);
+        assert_eq!(var.len(), self.ch);
+        let st = self.stats.get_mut().unwrap();
+        st.mean = mean;
+        st.var = var;
     }
 
     fn dims(&self, x: &Tensor) -> (usize, usize) {
@@ -119,10 +157,29 @@ impl BatchNorm2d {
         (n, spatial)
     }
 
+    /// Snapshot the running stats; the training forward writes back.
+    fn stats_snapshot(&self) -> (Vec<f32>, Vec<f32>) {
+        let st = self.stats.read().unwrap();
+        (st.mean.clone(), st.var.clone())
+    }
+
+    fn stats_store(&self, mean: &[f32], var: &[f32]) {
+        let mut st = self.stats.write().unwrap();
+        st.mean.copy_from_slice(mean);
+        st.var.copy_from_slice(var);
+    }
+
     /// Float reference path (baseline arms).
-    fn forward_float(&mut self, x: &Tensor, train: bool, momentum: f32) -> Tensor {
+    fn forward_float(
+        &self,
+        x: &Tensor,
+        train: bool,
+        momentum: f32,
+        tape: Option<&mut Tape>,
+    ) -> Tensor {
         let (n, sp) = self.dims(x);
         let cnt = (n * sp) as f32;
+        let (mut rmean, mut rvar) = self.stats_snapshot();
         let mut y = vec![0f32; x.len()];
         for c in 0..self.ch {
             let (mean, var) = if train && !self.frozen {
@@ -137,13 +194,11 @@ impl BatchNorm2d {
                 }
                 let mean = (s / cnt as f64) as f32;
                 let var = (s2 / cnt as f64 - (s / cnt as f64) * (s / cnt as f64)) as f32;
-                self.running_mean[c] =
-                    (1.0 - momentum) * self.running_mean[c] + momentum * mean;
-                self.running_var[c] =
-                    (1.0 - momentum) * self.running_var[c] + momentum * var;
+                rmean[c] = (1.0 - momentum) * rmean[c] + momentum * mean;
+                rvar[c] = (1.0 - momentum) * rvar[c] + momentum * var;
                 (mean, var)
             } else {
-                (self.running_mean[c], self.running_var[c])
+                (rmean[c], rvar[c])
             };
             let r = 1.0 / (var + self.eps).sqrt();
             let g = self.gamma.data[c];
@@ -154,18 +209,24 @@ impl BatchNorm2d {
                     y[idx] = g * (x.data[idx] - mean) * r + bta;
                 }
             }
-            if train && !self.frozen {
-                // cache float path equivalents for backward
-            }
         }
-        // For the float path we cache diff/r in the same integer containers
-        // is unnecessary; backward_float recomputes from saved tensors.
-        self.saved_dims = (n, sp);
+        if train && !self.frozen {
+            self.stats_store(&rmean, &rvar);
+        }
+        if let Some(tape) = tape {
+            tape.put(self.key, BnFloatSaved { x: ArenaF32::copy_of(&x.data), dims: (n, sp) });
+        }
         Tensor::new(y, x.shape.clone())
     }
 
     /// Integer forward (the paper's method).
-    fn forward_int(&mut self, x: &Tensor, cfg: &super::IntCfg, ctx: &mut Ctx) -> Tensor {
+    fn forward_int(
+        &self,
+        x: &Tensor,
+        cfg: &super::IntCfg,
+        ctx: &mut Ctx,
+        tape: Option<&mut Tape>,
+    ) -> Tensor {
         let momentum = ctx.bn_momentum.unwrap_or(self.momentum);
         let (n, sp) = self.dims(x);
         let cnt = n * sp;
@@ -173,9 +234,10 @@ impl BatchNorm2d {
         let kx = qx.scale_exp();
         let inv_n = fx_recip_int(cnt);
         let train_stats = ctx.train && !self.frozen;
+        let (mut rmean, mut rvar) = self.stats_snapshot();
 
-        // Arena-backed (q_i − μ) cache; handed to `saved_diff` in training
-        // (the previous step's cache is recycled) or returned in eval.
+        // Arena-backed (q_i − μ) cache; moves onto the tape when one is
+        // present, otherwise recycled immediately.
         let mut diff = exec::take_i32_vec(x.len());
         let mut rs = vec![Fx::new(1, 0); self.ch];
         let mut y = vec![0f32; x.len()];
@@ -211,10 +273,8 @@ impl BatchNorm2d {
                 // Update running stats through the inverse mapping.
                 let mean_f = (mu as f64 * exp2i64(kx)) as f32;
                 let var_f = (var_p as f64 * exp2i64(2 * kx)) as f32;
-                self.running_mean[c] =
-                    (1.0 - momentum) * self.running_mean[c] + momentum * mean_f;
-                self.running_var[c] =
-                    (1.0 - momentum) * self.running_var[c] + momentum * var_f;
+                rmean[c] = (1.0 - momentum) * rmean[c] + momentum * mean_f;
+                rvar[c] = (1.0 - momentum) * rvar[c] + momentum * var_f;
                 (mu, r)
             } else {
                 // Eval: quantize the running stats onto the x grid.
@@ -236,10 +296,10 @@ impl BatchNorm2d {
                         * exp2i64(2 * kx);
                     crate::telemetry::log(&format!(
                         "BN[ch{}] eval: running=({:.4},{:.4}) batch=({:.4},{:.4})",
-                        self.ch, self.running_mean[c], self.running_var[c], bm, bv
+                        self.ch, rmean[c], rvar[c], bm, bv
                     ));
                 }
-                let mfx = self.running_mean[c];
+                let mfx = rmean[c];
                 let mu = if mfx == 0.0 {
                     0
                 } else {
@@ -247,7 +307,7 @@ impl BatchNorm2d {
                     let p = align_i64(u.mant as i64, u.exp - 150, kx);
                     if u.sign { -p } else { p }
                 };
-                let v = self.running_var[c].max(0.0) + self.eps;
+                let v = rvar[c].max(0.0) + self.eps;
                 let r = fx_rsqrt(f32_to_fx(v));
                 (mu, r)
             };
@@ -297,11 +357,14 @@ impl BatchNorm2d {
             }
         }
         exec::recycle_dfp(qx);
-        if ctx.train {
-            exec::recycle_i32(std::mem::replace(&mut self.saved_diff, diff));
-            self.saved_kx = kx;
-            self.saved_r = rs;
-            self.saved_dims = (n, sp);
+        if train_stats {
+            self.stats_store(&rmean, &rvar);
+        }
+        if let Some(tape) = tape {
+            tape.put(
+                self.key,
+                BnSaved { diff: ArenaI32::from_taken(diff), kx, r: rs, dims: (n, sp) },
+            );
         } else {
             exec::recycle_i32(diff);
         }
@@ -309,18 +372,28 @@ impl BatchNorm2d {
     }
 
     /// Integer backward.
-    fn backward_int(&mut self, gy: &Tensor, cfg: &super::IntCfg, ctx: &mut Ctx) -> Tensor {
-        let (n, sp) = self.saved_dims;
+    fn backward_int(
+        &self,
+        gy: &Tensor,
+        cfg: &super::IntCfg,
+        ctx: &mut Ctx,
+        tape: &Tape,
+        grads: &mut GradStore,
+    ) -> Tensor {
+        let saved: &BnSaved = tape.get(self.key, "batchnorm2d");
+        let (n, sp) = saved.dims;
         let cnt = n * sp;
         let qg = quantize(&gy.data, cfg.pbits, int_mode(cfg, ctx, true));
         let kg = qg.scale_exp();
-        let kx = self.saved_kx;
+        let kx = saved.kx;
         let inv_n = fx_recip_int(cnt);
         let mut gx = vec![0f32; gy.len()];
         let train_stats = !self.frozen;
+        let mut gamma_g = vec![0f32; self.ch];
+        let mut beta_g = vec![0f32; self.ch];
 
         for c in 0..self.ch {
-            let r = self.saved_r[c];
+            let r = saved.r[c];
             let (r15, kr) = to_p15(r.p as i128, r.k);
             // Channel sums: Σĝ (exp kg) and Σĝ·x̂ (exp kg + kx + kr).
             let mut sg = 0i64;
@@ -331,13 +404,13 @@ impl BatchNorm2d {
                     let g = qg.payload[base + i] as i64;
                     sg += g;
                     // x̂ payload = diff·r15 ≤ 2^9·2^15 = 2^24; g·x̂ ≤ 2^31.
-                    sgx += g * (self.saved_diff[base + i] as i64 * r15);
+                    sgx += g * (saved.diff[base + i] as i64 * r15);
                 }
             }
             // Parameter gradients (integer sums → single inverse mapping).
             if train_stats {
-                self.gamma.grad[c] += (sgx as f64 * exp2i64(kg + kx + kr)) as f32;
-                self.beta.grad[c] += (sg as f64 * exp2i64(kg)) as f32;
+                gamma_g[c] += (sgx as f64 * exp2i64(kg + kx + kr)) as f32;
+                beta_g[c] += (sg as f64 * exp2i64(kg)) as f32;
             }
             // m1 = mean(ĝ) at exp kg; m2 = mean(ĝ·x̂) at exp kg+kx+kr.
             let m1 = ((sg as i128 * inv_n.p as i128) >> (-inv_n.k).clamp(0, 127)) as i64;
@@ -366,7 +439,7 @@ impl BatchNorm2d {
                     let u = align_i64(gq_i - m1, kg, e0); // ≤ 2^8·2^20 = 2^28
                     // x̂·m2: payload (diff·r15 ≤ 2^24)·(m2 ≤ 2^15) = 2^39,
                     // exp kx+kr+km2 → align to e0.
-                    let xh = self.saved_diff[base + i] as i64 * r15;
+                    let xh = saved.diff[base + i] as i64 * r15;
                     let v = align_i64(xh * m2, kx + kr + km2, e0);
                     let s = u - v;
                     // γ·r·s ≤ 2^15·2^29 = 2^44 ✓
@@ -375,22 +448,29 @@ impl BatchNorm2d {
             }
         }
         exec::recycle_dfp(qg);
+        if train_stats {
+            grads.accum(&self.gamma, &gamma_g);
+            grads.accum(&self.beta, &beta_g);
+        }
         Tensor::new(gx, gy.shape.clone())
     }
 
     /// Float backward (baseline arms; recomputes what it needs from the
-    /// running caches used by the float forward).
-    fn backward_float(&mut self, gy: &Tensor, saved_x: &Tensor) -> Tensor {
-        let (n, sp) = self.saved_dims;
+    /// taped input).
+    fn backward_float(&self, gy: &Tensor, tape: &Tape, grads: &mut GradStore) -> Tensor {
+        let saved: &BnFloatSaved = tape.get(self.key, "batchnorm2d");
+        let (n, sp) = saved.dims;
         let cnt = (n * sp) as f32;
         let mut gx = vec![0f32; gy.len()];
+        let mut gamma_g = vec![0f32; self.ch];
+        let mut beta_g = vec![0f32; self.ch];
         for c in 0..self.ch {
             // Recompute batch stats from the saved input.
             let mut s = 0f64;
             let mut s2 = 0f64;
             for b in 0..n {
                 for i in 0..sp {
-                    let v = saved_x.data[(b * self.ch + c) * sp + i] as f64;
+                    let v = saved.x[(b * self.ch + c) * sp + i] as f64;
                     s += v;
                     s2 += v * v;
                 }
@@ -404,80 +484,93 @@ impl BatchNorm2d {
             for b in 0..n {
                 for i in 0..sp {
                     let idx = (b * self.ch + c) * sp + i;
-                    let xh = (saved_x.data[idx] - mean) * r;
+                    let xh = (saved.x[idx] - mean) * r;
                     sg += gy.data[idx];
                     sgx += gy.data[idx] * xh;
                 }
             }
             if !self.frozen {
-                self.gamma.grad[c] += sgx;
-                self.beta.grad[c] += sg;
+                gamma_g[c] += sgx;
+                beta_g[c] += sg;
             }
             let m1 = sg / cnt;
             let m2 = sgx / cnt;
             for b in 0..n {
                 for i in 0..sp {
                     let idx = (b * self.ch + c) * sp + i;
-                    let xh = (saved_x.data[idx] - mean) * r;
+                    let xh = (saved.x[idx] - mean) * r;
                     gx[idx] = g * r * (gy.data[idx] - m1 - xh * m2);
                 }
             }
+        }
+        if !self.frozen {
+            grads.accum(&self.gamma, &gamma_g);
+            grads.accum(&self.beta, &beta_g);
         }
         Tensor::new(gx, gy.shape.clone())
     }
 }
 
-/// Saved input for the float backward path.
+/// Layer wrapper around [`BatchNorm2d`] (historic name — the input cache it
+/// once held now lives on the tape).
 pub struct BnWithCache {
     inner: BatchNorm2d,
-    saved_x: Tensor,
 }
 
 impl BnWithCache {
-    /// Wrap a batch-norm (needed only for float-path gradients).
+    /// Wrap a batch-norm.
     pub fn new(inner: BatchNorm2d) -> Self {
-        BnWithCache { inner, saved_x: Tensor::default() }
+        BnWithCache { inner }
     }
 
     /// Access the wrapped layer.
     pub fn bn(&mut self) -> &mut BatchNorm2d {
         &mut self.inner
     }
+
+    /// Shared access to the wrapped layer.
+    pub fn bn_ref(&self) -> &BatchNorm2d {
+        &self.inner
+    }
 }
 
 impl Layer for BnWithCache {
-    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
-        if ctx.train {
-            if let Arith::Int(_) = self.inner.arith {
-            } else {
-                self.saved_x = x.clone();
-            }
-        }
+    fn forward(&self, x: &Tensor, ctx: &mut Ctx, tape: Option<&mut Tape>) -> Tensor {
         match self.inner.arith {
             Arith::Int(cfg) => {
                 if ctx.train {
-                    self.inner.forward_int(x, &cfg, ctx)
+                    self.inner.forward_int(x, &cfg, ctx, tape)
                 } else {
-                    self.inner.forward_int(x, &cfg, &mut Ctx { train: false, ..ctx.clone() })
+                    self.inner.forward_int(
+                        x,
+                        &cfg,
+                        &mut Ctx { train: false, ..ctx.clone() },
+                        tape,
+                    )
                 }
             }
             _ => {
                 let m = ctx.bn_momentum.unwrap_or(self.inner.momentum);
-                self.inner.forward_float(x, ctx.train, m)
+                self.inner.forward_float(x, ctx.train, m, tape)
             }
         }
     }
 
-    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn backward(&self, gy: &Tensor, ctx: &mut Ctx, tape: &Tape, grads: &mut GradStore) -> Tensor {
         match self.inner.arith {
-            Arith::Int(cfg) => self.inner.backward_int(gy, &cfg, ctx),
-            _ => {
-                let saved = std::mem::take(&mut self.saved_x);
-                let g = self.inner.backward_float(gy, &saved);
-                self.saved_x = saved;
-                g
-            }
+            Arith::Int(cfg) => self.inner.backward_int(gy, &cfg, ctx, tape, grads),
+            _ => self.inner.backward_float(gy, tape, grads),
         }
+    }
+
+    fn register(&mut self, r: &mut Registrar) {
+        r.enter("batchnorm");
+        r.key(&mut self.inner.key);
+        if !self.inner.frozen {
+            r.param(&mut self.inner.gamma, "gamma");
+            r.param(&mut self.inner.beta, "beta");
+        }
+        r.exit();
     }
 
     fn params(&mut self) -> Vec<&mut Param> {
@@ -485,6 +578,13 @@ impl Layer for BnWithCache {
             return Vec::new();
         }
         vec![&mut self.inner.gamma, &mut self.inner.beta]
+    }
+
+    fn params_ref(&self) -> Vec<&Param> {
+        if self.inner.frozen {
+            return Vec::new();
+        }
+        vec![&self.inner.gamma, &self.inner.beta]
     }
 
     fn name(&self) -> &'static str {
@@ -501,6 +601,7 @@ pub fn batchnorm(ch: usize, arith: Arith) -> BnWithCache {
 mod tests {
     use super::*;
     use crate::dfp::rng::Rng;
+    use crate::nn::finalize;
 
     fn input(n: usize, c: usize, sp: usize, seed: u64) -> Tensor {
         let mut rng = Rng::new(seed);
@@ -510,12 +611,18 @@ mod tests {
         )
     }
 
+    fn mk(ch: usize, arith: Arith) -> BnWithCache {
+        let mut bn = batchnorm(ch, arith);
+        finalize(&mut bn);
+        bn
+    }
+
     #[test]
     fn int_forward_normalizes() {
-        let mut bn = batchnorm(3, Arith::int8());
+        let bn = mk(3, Arith::int8());
         let x = input(8, 3, 16, 1);
         let mut ctx = Ctx::train(0, 0);
-        let y = bn.forward(&x, &mut ctx);
+        let y = bn.forward(&x, &mut ctx, None);
         // Per-channel mean ≈ 0, var ≈ 1 (within int8 noise).
         let (n, sp) = (8usize, 16usize);
         for c in 0..3 {
@@ -539,16 +646,16 @@ mod tests {
     #[test]
     fn int_matches_float_forward() {
         let x = input(16, 2, 32, 2);
-        let mut bf = batchnorm(2, Arith::Float);
-        let mut bi = batchnorm(2, Arith::int8());
+        let mut bf = mk(2, Arith::Float);
+        let mut bi = mk(2, Arith::int8());
         bi.bn().gamma.data = vec![1.3, 0.7];
         bi.bn().beta.data = vec![0.2, -0.4];
         bf.bn().gamma.data = vec![1.3, 0.7];
         bf.bn().beta.data = vec![0.2, -0.4];
         let mut c1 = Ctx::train(0, 0);
         let mut c2 = Ctx::train(0, 0);
-        let yf = bf.forward(&x, &mut c1);
-        let yi = bi.forward(&x, &mut c2);
+        let yf = bf.forward(&x, &mut c1, None);
+        let yi = bi.forward(&x, &mut c2, None);
         for (a, b) in yi.data.iter().zip(&yf.data) {
             assert!((a - b).abs() < 0.12, "{a} vs {b}");
         }
@@ -558,14 +665,18 @@ mod tests {
     fn int_backward_close_to_float() {
         let x = input(16, 2, 32, 3);
         let gy = input(16, 2, 32, 4);
-        let mut bf = batchnorm(2, Arith::Float);
-        let mut bi = batchnorm(2, Arith::int8());
+        let bf = mk(2, Arith::Float);
+        let bi = mk(2, Arith::int8());
         let mut c1 = Ctx::train(0, 0);
         let mut c2 = Ctx::train(0, 0);
-        bf.forward(&x, &mut c1);
-        bi.forward(&x, &mut c2);
-        let gf = bf.backward(&gy, &mut c1);
-        let gi = bi.backward(&gy, &mut c2);
+        let mut tf = Tape::new();
+        let mut ti = Tape::new();
+        let mut gf_s = GradStore::new();
+        let mut gi_s = GradStore::new();
+        bf.forward(&x, &mut c1, Some(&mut tf));
+        bi.forward(&x, &mut c2, Some(&mut ti));
+        let gf = bf.backward(&gy, &mut c1, &tf, &mut gf_s);
+        let gi = bi.backward(&gy, &mut c2, &ti, &mut gi_s);
         let gmax = gf.data.iter().fold(0f32, |m, v| m.max(v.abs()));
         // Cosine similarity is the right metric for gradient direction.
         let dot: f32 = gf.data.iter().zip(&gi.data).map(|(a, b)| a * b).sum();
@@ -576,37 +687,36 @@ mod tests {
             assert!((a - b).abs() < 0.3 * gmax.max(1e-3), "{a} vs {b}");
         }
         // γ/β grads close too.
+        let (fg, ig) = (
+            gf_s.get(&bf.bn_ref().gamma).unwrap().to_vec(),
+            gi_s.get(&bi.bn_ref().gamma).unwrap().to_vec(),
+        );
+        let (fb, ib) = (
+            gf_s.get(&bf.bn_ref().beta).unwrap().to_vec(),
+            gi_s.get(&bi.bn_ref().beta).unwrap().to_vec(),
+        );
         for c in 0..2 {
-            assert!(
-                (bf.bn().gamma.grad[c] - bi.bn().gamma.grad[c]).abs()
-                    < 0.08 * bf.bn().gamma.grad[c].abs().max(1.0),
-                "gamma c={c}"
-            );
-            assert!(
-                (bf.bn().beta.grad[c] - bi.bn().beta.grad[c]).abs()
-                    < 0.08 * bf.bn().beta.grad[c].abs().max(1.0),
-                "beta c={c}"
-            );
+            assert!((fg[c] - ig[c]).abs() < 0.08 * fg[c].abs().max(1.0), "gamma c={c}");
+            assert!((fb[c] - ib[c]).abs() < 0.08 * fb[c].abs().max(1.0), "beta c={c}");
         }
     }
 
     #[test]
     fn running_stats_track_batches() {
-        let mut bn = batchnorm(1, Arith::int8());
-        let mut ctx = Ctx::train(0, 0);
+        let bn = mk(1, Arith::int8());
         for step in 0..30 {
             let x = input(8, 1, 32, 100 + step);
-            ctx = Ctx::train(0, step);
-            bn.forward(&x, &mut ctx);
+            let mut ctx = Ctx::train(0, step);
+            bn.forward(&x, &mut ctx, None);
         }
         // Inputs ~ N(0.3, 1.5²): running stats must approach that.
-        assert!((bn.bn().running_mean[0] - 0.3).abs() < 0.2);
-        assert!((bn.bn().running_var[0] - 2.25).abs() < 0.5);
+        assert!((bn.bn_ref().running_mean()[0] - 0.3).abs() < 0.2);
+        assert!((bn.bn_ref().running_var()[0] - 2.25).abs() < 0.5);
         // Eval path uses running stats: a constant input normalizes to a
         // finite value (no division blowup).
         let x = Tensor::new(vec![0.3; 8 * 32], vec![8, 1, 32, 1]);
         let mut ectx = Ctx::eval(0);
-        let y = bn.forward(&x, &mut ectx);
+        let y = bn.forward(&x, &mut ectx, None);
         assert!(y.data.iter().all(|v| v.abs() < 1.0));
     }
 
@@ -614,16 +724,19 @@ mod tests {
     fn frozen_bn_has_no_params() {
         let mut bn = batchnorm(4, Arith::int8());
         bn.bn().frozen = true;
+        finalize(&mut bn);
         assert!(bn.params().is_empty());
     }
 
     #[test]
     fn float_backward_gradcheck() {
-        let mut bn = batchnorm(1, Arith::Float);
+        let bn = mk(1, Arith::Float);
         let x = input(4, 1, 8, 9);
         let mut ctx = Ctx::train(0, 0);
-        let y = bn.forward(&x, &mut ctx);
-        let gx = bn.backward(&y, &mut ctx); // L = 0.5Σy²
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = bn.forward(&x, &mut ctx, Some(&mut tape));
+        let gx = bn.backward(&y, &mut ctx, &tape, &mut grads); // L = 0.5Σy²
         let eps = 1e-2;
         for i in [0usize, 13, 31] {
             let mut xp = x.clone();
@@ -632,8 +745,8 @@ mod tests {
             xm.data[i] -= eps;
             let mut c1 = Ctx::train(0, 0);
             let mut c2 = Ctx::train(0, 0);
-            let lp: f32 = bn.forward(&xp, &mut c1).data.iter().map(|v| 0.5 * v * v).sum();
-            let lm: f32 = bn.forward(&xm, &mut c2).data.iter().map(|v| 0.5 * v * v).sum();
+            let lp: f32 = bn.forward(&xp, &mut c1, None).data.iter().map(|v| 0.5 * v * v).sum();
+            let lm: f32 = bn.forward(&xm, &mut c2, None).data.iter().map(|v| 0.5 * v * v).sum();
             let fd = (lp - lm) / (2.0 * eps);
             assert!((fd - gx.data[i]).abs() < 5e-2 * fd.abs().max(1.0), "i={i} fd={fd} got={}", gx.data[i]);
         }

@@ -5,7 +5,7 @@
 //! payload grids coincide, added as integers, and inverse-mapped once.
 
 use super::qmat::int_mode;
-use super::{Arith, Ctx, Layer, Param, Tensor};
+use super::{Arith, ArenaI8, Ctx, GradStore, Layer, Param, Registrar, Tape, TapeKey, Tensor};
 use crate::dfp::bits::exp2i64;
 use crate::dfp::map::{quantize_with_emax, shared_exponent};
 
@@ -49,24 +49,37 @@ impl Default for Sequential {
 }
 
 impl Layer for Sequential {
-    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn forward(&self, x: &Tensor, ctx: &mut Ctx, tape: Option<&mut Tape>) -> Tensor {
+        let mut tape = tape;
         let mut h = x.clone();
-        for l in self.layers.iter_mut() {
-            h = l.forward(&h, ctx);
+        for l in self.layers.iter() {
+            h = l.forward(&h, ctx, tape.as_deref_mut());
         }
         h
     }
 
-    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn backward(&self, gy: &Tensor, ctx: &mut Ctx, tape: &Tape, grads: &mut GradStore) -> Tensor {
         let mut g = gy.clone();
-        for l in self.layers.iter_mut().rev() {
-            g = l.backward(&g, ctx);
+        for l in self.layers.iter().rev() {
+            g = l.backward(&g, ctx, tape, grads);
         }
         g
     }
 
+    fn register(&mut self, r: &mut Registrar) {
+        for (i, l) in self.layers.iter_mut().enumerate() {
+            r.enter(i.to_string());
+            l.register(r);
+            r.exit();
+        }
+    }
+
     fn params(&mut self) -> Vec<&mut Param> {
         self.layers.iter_mut().flat_map(|l| l.params()).collect()
+    }
+
+    fn params_ref(&self) -> Vec<&Param> {
+        self.layers.iter().flat_map(|l| l.params_ref()).collect()
     }
 
     fn name(&self) -> &'static str {
@@ -112,24 +125,31 @@ pub struct Residual {
     pub arith: Arith,
     /// Apply ReLU after the join.
     pub post_relu: bool,
-    mask: Vec<bool>,
+    /// Tape slot for the post-ReLU sign mask.
+    pub key: TapeKey,
 }
 
 impl Residual {
     /// New residual block.
     pub fn new(main: Sequential, shortcut: Sequential, arith: Arith) -> Self {
-        Residual { main, shortcut, arith, post_relu: true, mask: Vec::new() }
+        Residual { main, shortcut, arith, post_relu: true, key: TapeKey::default() }
     }
 }
 
 impl Layer for Residual {
-    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
-        let m = self.main.forward(x, ctx);
-        let s = if self.shortcut.is_empty() { x.clone() } else { self.shortcut.forward(x, ctx) };
+    fn forward(&self, x: &Tensor, ctx: &mut Ctx, tape: Option<&mut Tape>) -> Tensor {
+        let mut tape = tape;
+        let m = self.main.forward(x, ctx, tape.as_deref_mut());
+        let s = if self.shortcut.is_empty() {
+            x.clone()
+        } else {
+            self.shortcut.forward(x, ctx, tape.as_deref_mut())
+        };
         let mut y = residual_add(&m, &s, &self.arith, ctx, false);
         if self.post_relu {
-            if ctx.train {
-                self.mask = y.data.iter().map(|&v| v > 0.0).collect();
+            if let Some(tape) = tape {
+                let mask = ArenaI8::fill_with(y.len(), |i| (y.data[i] > 0.0) as i8);
+                tape.put(self.key, mask);
             }
             for v in y.data.iter_mut() {
                 *v = v.max(0.0);
@@ -138,28 +158,48 @@ impl Layer for Residual {
         y
     }
 
-    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn backward(&self, gy: &Tensor, ctx: &mut Ctx, tape: &Tape, grads: &mut GradStore) -> Tensor {
         let g = if self.post_relu {
+            let mask: &ArenaI8 = tape.get(self.key, "residual");
             Tensor::new(
                 gy.data
                     .iter()
-                    .zip(&self.mask)
-                    .map(|(&g, &m)| if m { g } else { 0.0 })
+                    .zip(mask.iter())
+                    .map(|(&g, &m)| if m != 0 { g } else { 0.0 })
                     .collect(),
                 gy.shape.clone(),
             )
         } else {
             gy.clone()
         };
-        let gm = self.main.backward(&g, ctx);
-        let gs = if self.shortcut.is_empty() { g } else { self.shortcut.backward(&g, ctx) };
+        let gm = self.main.backward(&g, ctx, tape, grads);
+        let gs =
+            if self.shortcut.is_empty() { g } else { self.shortcut.backward(&g, ctx, tape, grads) };
         // Sum of branch input-gradients — again an integer add.
         residual_add(&gm, &gs, &self.arith, ctx, true)
+    }
+
+    fn register(&mut self, r: &mut Registrar) {
+        r.enter("residual");
+        r.key(&mut self.key);
+        r.enter("main");
+        self.main.register(r);
+        r.exit();
+        r.enter("shortcut");
+        self.shortcut.register(r);
+        r.exit();
+        r.exit();
     }
 
     fn params(&mut self) -> Vec<&mut Param> {
         let mut p = self.main.params();
         p.extend(self.shortcut.params());
+        p
+    }
+
+    fn params_ref(&self) -> Vec<&Param> {
+        let mut p = self.main.params_ref();
+        p.extend(self.shortcut.params_ref());
         p
     }
 
@@ -174,6 +214,7 @@ mod tests {
     use crate::dfp::rng::Rng;
     use crate::nn::activations::ReLU;
     use crate::nn::linear::Linear;
+    use crate::nn::finalize;
 
     #[test]
     fn sequential_chains() {
@@ -182,11 +223,14 @@ mod tests {
             .push(Linear::new(4, 8, Arith::Float, &mut rng))
             .push(ReLU::new())
             .push(Linear::new(8, 2, Arith::Float, &mut rng));
+        finalize(&mut net);
         let x = Tensor::new(vec![0.1, -0.2, 0.3, 0.4], vec![1, 4]);
         let mut ctx = Ctx::train(0, 0);
-        let y = net.forward(&x, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = net.forward(&x, &mut ctx, Some(&mut tape));
         assert_eq!(y.shape, vec![1, 2]);
-        let g = net.backward(&y, &mut ctx);
+        let g = net.backward(&y, &mut ctx, &tape, &mut grads);
         assert_eq!(g.shape, vec![1, 4]);
         assert_eq!(net.params().len(), 4);
     }
@@ -195,10 +239,11 @@ mod tests {
     fn residual_identity_add_exact_float() {
         let main = Sequential::new(); // empty main = identity
         let mut r = Residual::new(main, Sequential::new(), Arith::Float);
+        finalize(&mut r);
         r.post_relu = false;
         let x = Tensor::new(vec![1.0, -2.0], vec![1, 2]);
         let mut ctx = Ctx::train(0, 0);
-        let y = r.forward(&x, &mut ctx);
+        let y = r.forward(&x, &mut ctx, None);
         assert_eq!(y.data, vec![2.0, -4.0]);
     }
 
@@ -224,11 +269,14 @@ mod tests {
         let main = Sequential::new()
             .push(Linear::new(4, 4, Arith::Float, &mut rng));
         let mut r = Residual::new(main, Sequential::new(), Arith::Float);
+        finalize(&mut r);
         r.post_relu = true;
         let x = Tensor::new(vec![0.5, -0.3, 0.8, 0.1], vec![1, 4]);
         let mut ctx = Ctx::train(0, 0);
-        let y = r.forward(&x, &mut ctx);
-        let gx = r.backward(&y, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = r.forward(&x, &mut ctx, Some(&mut tape));
+        let gx = r.backward(&y, &mut ctx, &tape, &mut grads);
         let eps = 1e-3;
         for i in 0..4 {
             let mut xp = x.clone();
@@ -237,8 +285,8 @@ mod tests {
             xm.data[i] -= eps;
             let mut c1 = Ctx::train(0, 0);
             let mut c2 = Ctx::train(0, 0);
-            let lp: f32 = r.forward(&xp, &mut c1).data.iter().map(|v| 0.5 * v * v).sum();
-            let lm: f32 = r.forward(&xm, &mut c2).data.iter().map(|v| 0.5 * v * v).sum();
+            let lp: f32 = r.forward(&xp, &mut c1, None).data.iter().map(|v| 0.5 * v * v).sum();
+            let lm: f32 = r.forward(&xm, &mut c2, None).data.iter().map(|v| 0.5 * v * v).sum();
             let fd = (lp - lm) / (2.0 * eps);
             assert!((fd - gx.data[i]).abs() < 2e-2 * fd.abs().max(1.0), "i={i}");
         }

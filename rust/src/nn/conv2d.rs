@@ -6,11 +6,16 @@
 //! applies per output pixel.
 
 use super::qmat::{int_mode, MatKind};
-use super::{Arith, Ctx, Layer, Param, Tensor};
+use super::{Arith, ArenaF32, Ctx, GradStore, Layer, Param, Registrar, Tape, TapeKey, Tensor};
 use crate::baselines::uniform::{clip_grad, uniform_dequant_scale, uniform_quantize};
 use crate::dfp::conv::{col2im_i32, im2col_i8, ConvShape};
 use crate::dfp::exec::{self, GemmPlan};
 use crate::dfp::{bits::exp2i64, quantize, DfpTensor};
+
+/// Taped forward state: the input image batch.
+struct Saved {
+    x: ArenaF32,
+}
 
 /// Convolution layer (NCHW).
 pub struct Conv2d {
@@ -22,7 +27,8 @@ pub struct Conv2d {
     pub arith: Arith,
     /// Static geometry (batch `n` is updated from the input each call).
     pub geom: ConvShape,
-    saved_x: Vec<f32>,
+    /// Tape slot (assigned by [`super::finalize`]).
+    pub key: TapeKey,
 }
 
 impl Conv2d {
@@ -47,7 +53,7 @@ impl Conv2d {
             b: Param::new(vec![0.0; c_out], vec![c_out]),
             arith,
             geom: ConvShape { n: 1, c_in, h, w, c_out, kh: k, kw: k, stride, pad },
-            saved_x: Vec::new(),
+            key: TapeKey::default(),
         }
     }
 
@@ -169,10 +175,10 @@ impl Conv2d {
 }
 
 impl Layer for Conv2d {
-    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn forward(&self, x: &Tensor, ctx: &mut Ctx, tape: Option<&mut Tape>) -> Tensor {
         let s = self.shape_for(x);
-        if ctx.train {
-            self.saved_x = x.data.clone();
+        if let Some(tape) = tape {
+            tape.put(self.key, Saved { x: ArenaF32::copy_of(&x.data) });
         }
         let (ho, wo) = (s.h_out(), s.w_out());
         let y = match &self.arith {
@@ -223,7 +229,8 @@ impl Layer for Conv2d {
         Tensor::new(y, vec![s.n, s.c_out, ho, wo])
     }
 
-    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn backward(&self, gy: &Tensor, ctx: &mut Ctx, tape: &Tape, grads: &mut GradStore) -> Tensor {
+        let saved: &Saved = tape.get(self.key, "conv2d");
         let mut s = self.geom;
         s.n = gy.shape[0];
         let (ho, wo) = (s.h_out(), s.w_out());
@@ -238,7 +245,7 @@ impl Layer for Conv2d {
                     crate::telemetry::numeric::Sampler::new();
                 let cfg = *cfg;
                 let qg = quantize(&gy.data, cfg.pbits, int_mode(&cfg, ctx, true));
-                let qx = quantize(&self.saved_x, cfg.pbits, int_mode(&cfg, ctx, true));
+                let qx = quantize(&saved.x, cfg.pbits, int_mode(&cfg, ctx, true));
                 let qw = quantize(&self.w.data, cfg.pbits, int_mode(&cfg, ctx, true));
                 if PROBE.tick() {
                     crate::telemetry::numeric::probe_dfp("conv2d/dy", &qg);
@@ -252,7 +259,7 @@ impl Layer for Conv2d {
                 let mut g = gy.data.clone();
                 clip_grad(&mut g, cfg.grad_clip);
                 let (pg, ssg) = uniform_quantize(&g, &cfg, 0.0);
-                let (px, ssx) = uniform_quantize(&self.saved_x, &cfg, 0.0);
+                let (px, ssx) = uniform_quantize(&saved.x, &cfg, 0.0);
                 let (pw, ssw) = uniform_quantize(&self.w.data, &cfg, 0.0);
                 let pb = cfg.bits - 1;
                 (
@@ -266,7 +273,7 @@ impl Layer for Conv2d {
             }
             Arith::Float => {
                 // Float path handled separately below.
-                return self.backward_float(gy, &s);
+                return self.backward_float(gy, &s, &saved.x, grads);
             }
         };
 
@@ -318,10 +325,10 @@ impl Layer for Conv2d {
             }
         }
         let swg = sg * sx;
-        for (acc, &a) in self.w.grad.iter_mut().zip(&gw_acc) {
+        for (acc, &a) in grads.buf(&self.w).iter_mut().zip(&gw_acc) {
             *acc += (a as f64 * swg) as f32;
         }
-        for (acc, &a) in self.b.grad.iter_mut().zip(&gb_acc) {
+        for (acc, &a) in grads.buf(&self.b).iter_mut().zip(&gb_acc) {
             *acc += (a as f64 * sg) as f32;
         }
         exec::recycle_dfp(qg);
@@ -330,8 +337,20 @@ impl Layer for Conv2d {
         Tensor::new(gx, vec![s.n, s.c_in, s.h, s.w])
     }
 
+    fn register(&mut self, r: &mut Registrar) {
+        r.enter("conv");
+        r.key(&mut self.key);
+        r.param(&mut self.w, "w");
+        r.param(&mut self.b, "b");
+        r.exit();
+    }
+
     fn params(&mut self) -> Vec<&mut Param> {
         vec![&mut self.w, &mut self.b]
+    }
+
+    fn params_ref(&self) -> Vec<&Param> {
+        vec![&self.w, &self.b]
     }
 
     fn name(&self) -> &'static str {
@@ -340,7 +359,13 @@ impl Layer for Conv2d {
 }
 
 impl Conv2d {
-    fn backward_float(&mut self, gy: &Tensor, s: &ConvShape) -> Tensor {
+    fn backward_float(
+        &self,
+        gy: &Tensor,
+        s: &ConvShape,
+        saved_x: &[f32],
+        grads: &mut GradStore,
+    ) -> Tensor {
         let (ho, wo) = (s.h_out(), s.w_out());
         let pix = ho * wo;
         let mut gx = vec![0f32; s.n * s.in_img()];
@@ -349,7 +374,7 @@ impl Conv2d {
         let mut dcol = exec::scratch_f32(s.patch() * pix);
         for b in 0..s.n {
             let gslice = &gy.data[b * s.c_out * pix..(b + 1) * s.c_out * pix];
-            let img = &self.saved_x[b * s.in_img()..(b + 1) * s.in_img()];
+            let img = &saved_x[b * s.in_img()..(b + 1) * s.in_img()];
             Self::im2col_f32(img, s, &mut col);
             // ∂L/∂W += G·colᵀ
             exec::gemm_f32(
@@ -358,7 +383,7 @@ impl Conv2d {
                 &col,
                 &mut gw,
             );
-            for (a, g) in self.w.grad.iter_mut().zip(gw.iter()) {
+            for (a, g) in grads.buf(&self.w).iter_mut().zip(gw.iter()) {
                 *a += g;
             }
             // dcol = Wᵀ·G; gx = col2im(dcol)
@@ -395,12 +420,13 @@ impl Conv2d {
                     }
                 }
             }
+            let gb = grads.buf(&self.b);
             for c in 0..s.c_out {
                 let mut acc = 0f32;
                 for p in 0..pix {
                     acc += gslice[c * pix + p];
                 }
-                self.b.grad[c] += acc;
+                gb[c] += acc;
             }
         }
         Tensor::new(gx, vec![s.n, s.c_in, s.h, s.w])
@@ -411,19 +437,24 @@ impl Conv2d {
 mod tests {
     use super::*;
     use crate::dfp::rng::Rng;
+    use crate::nn::finalize;
 
     fn mk(arith: Arith, seed: u64) -> Conv2d {
-        Conv2d::new(2, 3, 3, 1, 1, 6, 6, arith, &mut Rng::new(seed))
+        let mut c = Conv2d::new(2, 3, 3, 1, 1, 6, 6, arith, &mut Rng::new(seed));
+        finalize(&mut c);
+        c
     }
 
     #[test]
     fn float_gradcheck_input() {
-        let mut l = mk(Arith::Float, 1);
+        let l = mk(Arith::Float, 1);
         let mut rng = Rng::new(2);
         let x = Tensor::new((0..72).map(|_| rng.next_gaussian()).collect(), vec![1, 2, 6, 6]);
         let mut ctx = Ctx::train(0, 0);
-        let y = l.forward(&x, &mut ctx);
-        let gx = l.backward(&y, &mut ctx); // L = 0.5Σy²
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = l.forward(&x, &mut ctx, Some(&mut tape));
+        let gx = l.backward(&y, &mut ctx, &tape, &mut grads); // L = 0.5Σy²
         let eps = 1e-2;
         for i in [0usize, 17, 35, 71] {
             let mut xp = x.clone();
@@ -432,8 +463,8 @@ mod tests {
             xm.data[i] -= eps;
             let mut c1 = Ctx::train(0, 0);
             let mut c2 = Ctx::train(0, 0);
-            let lp: f32 = l.forward(&xp, &mut c1).data.iter().map(|v| 0.5 * v * v).sum();
-            let lm: f32 = l.forward(&xm, &mut c2).data.iter().map(|v| 0.5 * v * v).sum();
+            let lp: f32 = l.forward(&xp, &mut c1, None).data.iter().map(|v| 0.5 * v * v).sum();
+            let lm: f32 = l.forward(&xm, &mut c2, None).data.iter().map(|v| 0.5 * v * v).sum();
             let fd = (lp - lm) / (2.0 * eps);
             assert!((fd - gx.data[i]).abs() < 3e-2 * fd.abs().max(1.0), "i={i} fd={fd} got={}", gx.data[i]);
         }
@@ -441,7 +472,7 @@ mod tests {
 
     #[test]
     fn int_close_to_float_forward_backward() {
-        let mut lf = mk(Arith::Float, 3);
+        let lf = mk(Arith::Float, 3);
         let mut li = mk(Arith::int8(), 4);
         li.w.data = lf.w.data.clone();
         li.b.data = lf.b.data.clone();
@@ -449,33 +480,41 @@ mod tests {
         let x = Tensor::new((0..72).map(|_| rng.next_gaussian()).collect(), vec![1, 2, 6, 6]);
         let mut c1 = Ctx::train(0, 0);
         let mut c2 = Ctx::train(0, 0);
-        let yf = lf.forward(&x, &mut c1);
-        let yi = li.forward(&x, &mut c2);
+        let mut tf = Tape::new();
+        let mut ti = Tape::new();
+        let mut gf_s = GradStore::new();
+        let mut gi_s = GradStore::new();
+        let yf = lf.forward(&x, &mut c1, Some(&mut tf));
+        let yi = li.forward(&x, &mut c2, Some(&mut ti));
         let ymax = yf.data.iter().fold(0f32, |m, v| m.max(v.abs()));
         for (a, b) in yi.data.iter().zip(&yf.data) {
             assert!((a - b).abs() < 0.15 * ymax, "{a} vs {b}");
         }
         let gy = yf.clone();
-        let gf = lf.backward(&gy, &mut c1);
-        let gi = li.backward(&gy, &mut c2);
+        let gf = lf.backward(&gy, &mut c1, &tf, &mut gf_s);
+        let gi = li.backward(&gy, &mut c2, &ti, &mut gi_s);
         let gmax = gf.data.iter().fold(0f32, |m, v| m.max(v.abs()));
         for (a, b) in gi.data.iter().zip(&gf.data) {
             assert!((a - b).abs() < 0.25 * gmax, "{a} vs {b}");
         }
         // Weight grads correlate strongly.
-        let dot: f32 = lf.w.grad.iter().zip(&li.w.grad).map(|(a, b)| a * b).sum();
-        let n1: f32 = lf.w.grad.iter().map(|a| a * a).sum::<f32>().sqrt();
-        let n2: f32 = li.w.grad.iter().map(|a| a * a).sum::<f32>().sqrt();
+        let wf = gf_s.get(&lf.w).unwrap();
+        let wi = gi_s.get(&li.w).unwrap();
+        let dot: f32 = wf.iter().zip(wi).map(|(a, b)| a * b).sum();
+        let n1: f32 = wf.iter().map(|a| a * a).sum::<f32>().sqrt();
+        let n2: f32 = wi.iter().map(|a| a * a).sum::<f32>().sqrt();
         assert!(dot / (n1 * n2) > 0.95, "cos={}", dot / (n1 * n2));
     }
 
     #[test]
     fn uniform_mode_runs() {
-        let mut l = mk(Arith::Uniform(crate::baselines::uniform::UniformCfg::int8()), 6);
+        let l = mk(Arith::Uniform(crate::baselines::uniform::UniformCfg::int8()), 6);
         let x = Tensor::new(vec![0.3; 72], vec![1, 2, 6, 6]);
         let mut ctx = Ctx::train(0, 0);
-        let y = l.forward(&x, &mut ctx);
-        let g = l.backward(&y, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = l.forward(&x, &mut ctx, Some(&mut tape));
+        let g = l.backward(&y, &mut ctx, &tape, &mut grads);
         assert_eq!(g.shape, vec![1, 2, 6, 6]);
     }
 }

@@ -5,9 +5,14 @@
 //! (payload sums per row, one inverse mapping).
 
 use super::qmat::int_mode;
-use super::{Arith, Ctx, Layer, Param, Tensor};
+use super::{Arith, Ctx, GradStore, Layer, Param, Registrar, Tape, TapeKey, Tensor};
 use crate::dfp::bits::exp2i64;
 use crate::dfp::quantize;
+
+/// Taped token ids.
+struct Saved {
+    ids: Vec<usize>,
+}
 
 /// Embedding table `[vocab × dim]`.
 pub struct Embedding {
@@ -19,7 +24,8 @@ pub struct Embedding {
     pub vocab: usize,
     /// Embedding dimension.
     pub dim: usize,
-    saved_ids: Vec<usize>,
+    /// Tape slot.
+    pub key: TapeKey,
 }
 
 impl Embedding {
@@ -31,65 +37,79 @@ impl Embedding {
             arith,
             vocab,
             dim,
-            saved_ids: Vec::new(),
+            key: TapeKey::default(),
         }
     }
 
     /// Forward from explicit token ids (the `Tensor` API packs ids as f32;
     /// this is the preferred typed entry point).
-    pub fn forward_ids(&mut self, ids: &[usize], train: bool) -> Tensor {
+    pub fn forward_ids(&self, ids: &[usize], tape: Option<&mut Tape>) -> Tensor {
         let mut y = vec![0f32; ids.len() * self.dim];
         for (r, &id) in ids.iter().enumerate() {
             debug_assert!(id < self.vocab);
             y[r * self.dim..(r + 1) * self.dim]
                 .copy_from_slice(&self.w.data[id * self.dim..(id + 1) * self.dim]);
         }
-        if train {
-            self.saved_ids = ids.to_vec();
+        if let Some(tape) = tape {
+            tape.put(self.key, Saved { ids: ids.to_vec() });
         }
         Tensor::new(y, vec![ids.len(), self.dim])
     }
 }
 
 impl Layer for Embedding {
-    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn forward(&self, x: &Tensor, _ctx: &mut Ctx, tape: Option<&mut Tape>) -> Tensor {
         let ids: Vec<usize> = x.data.iter().map(|&v| v as usize).collect();
-        self.forward_ids(&ids, ctx.train)
+        self.forward_ids(&ids, tape)
     }
 
-    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn backward(&self, gy: &Tensor, ctx: &mut Ctx, tape: &Tape, grads: &mut GradStore) -> Tensor {
+        let saved: &Saved = tape.get(self.key, "embedding");
         match self.arith {
             Arith::Int(cfg) => {
                 // Integer scatter-add: quantize the upstream gradient once,
                 // accumulate payloads per table row in i64, inverse-map.
                 let qg = quantize(&gy.data, cfg.pbits, int_mode(&cfg, ctx, true));
                 let mut acc = vec![0i64; self.w.data.len()];
-                for (r, &id) in self.saved_ids.iter().enumerate() {
+                for (r, &id) in saved.ids.iter().enumerate() {
                     for c in 0..self.dim {
                         acc[id * self.dim + c] += qg.payload[r * self.dim + c] as i64;
                     }
                 }
                 let s = exp2i64(qg.scale_exp());
-                for (g, &a) in self.w.grad.iter_mut().zip(&acc) {
+                let gw = grads.buf(&self.w);
+                for (g, &a) in gw.iter_mut().zip(&acc) {
                     if a != 0 {
                         *g += (a as f64 * s) as f32;
                     }
                 }
             }
             _ => {
-                for (r, &id) in self.saved_ids.iter().enumerate() {
+                let gw = grads.buf(&self.w);
+                for (r, &id) in saved.ids.iter().enumerate() {
                     for c in 0..self.dim {
-                        self.w.grad[id * self.dim + c] += gy.data[r * self.dim + c];
+                        gw[id * self.dim + c] += gy.data[r * self.dim + c];
                     }
                 }
             }
         }
         // No meaningful input gradient for ids.
-        Tensor::zeros(&[self.saved_ids.len()])
+        Tensor::zeros(&[saved.ids.len()])
+    }
+
+    fn register(&mut self, r: &mut Registrar) {
+        r.enter("embedding");
+        r.key(&mut self.key);
+        r.param(&mut self.w, "w");
+        r.exit();
     }
 
     fn params(&mut self) -> Vec<&mut Param> {
         vec![&mut self.w]
+    }
+
+    fn params_ref(&self) -> Vec<&Param> {
+        vec![&self.w]
     }
 
     fn name(&self) -> &'static str {
@@ -101,20 +121,25 @@ impl Layer for Embedding {
 mod tests {
     use super::*;
     use crate::dfp::rng::Rng;
+    use crate::nn::finalize;
 
     #[test]
     fn gather_and_scatter() {
         let mut e = Embedding::new(10, 4, Arith::Float, &mut Rng::new(1));
-        let y = e.forward_ids(&[3, 3, 7], true);
+        finalize(&mut e);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = e.forward_ids(&[3, 3, 7], Some(&mut tape));
         assert_eq!(y.shape, vec![3, 4]);
         assert_eq!(&y.data[0..4], &y.data[4..8]);
         let gy = Tensor::new(vec![1.0; 12], vec![3, 4]);
         let mut ctx = Ctx::train(0, 0);
-        e.backward(&gy, &mut ctx);
+        e.backward(&gy, &mut ctx, &tape, &mut grads);
         // Row 3 received two updates, row 7 one, others none.
-        assert_eq!(e.w.grad[3 * 4], 2.0);
-        assert_eq!(e.w.grad[7 * 4], 1.0);
-        assert_eq!(e.w.grad[0], 0.0);
+        let gw = grads.get(&e.w).unwrap();
+        assert_eq!(gw[3 * 4], 2.0);
+        assert_eq!(gw[7 * 4], 1.0);
+        assert_eq!(gw[0], 0.0);
     }
 
     #[test]
@@ -123,15 +148,23 @@ mod tests {
         let gy_vals: Vec<f32> = (0..12).map(|_| rng.next_gaussian()).collect();
         let mut ef = Embedding::new(10, 4, Arith::Float, &mut Rng::new(1));
         let mut ei = Embedding::new(10, 4, Arith::int8(), &mut Rng::new(1));
-        ef.forward_ids(&[1, 2, 1], true);
-        ei.forward_ids(&[1, 2, 1], true);
+        finalize(&mut ef);
+        finalize(&mut ei);
+        let mut tf = Tape::new();
+        let mut ti = Tape::new();
+        let mut gf_s = GradStore::new();
+        let mut gi_s = GradStore::new();
+        ef.forward_ids(&[1, 2, 1], Some(&mut tf));
+        ei.forward_ids(&[1, 2, 1], Some(&mut ti));
         let gy = Tensor::new(gy_vals, vec![3, 4]);
         let mut c1 = Ctx::train(0, 0);
         let mut c2 = Ctx::train(0, 0);
-        ef.backward(&gy, &mut c1);
-        ei.backward(&gy, &mut c2);
-        let gmax = ef.w.grad.iter().fold(0f32, |m, v| m.max(v.abs()));
-        for (a, b) in ei.w.grad.iter().zip(&ef.w.grad) {
+        ef.backward(&gy, &mut c1, &tf, &mut gf_s);
+        ei.backward(&gy, &mut c2, &ti, &mut gi_s);
+        let gf = gf_s.get(&ef.w).unwrap();
+        let gi = gi_s.get(&ei.w).unwrap();
+        let gmax = gf.iter().fold(0f32, |m, v| m.max(v.abs()));
+        for (a, b) in gi.iter().zip(gf.iter()) {
             assert!((a - b).abs() < 0.1 * gmax.max(1.0));
         }
     }

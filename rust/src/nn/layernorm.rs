@@ -6,7 +6,9 @@
 //! indexed by feature.
 
 use super::qmat::int_mode;
-use super::{Arith, Ctx, Layer, Param, Tensor};
+use super::{
+    Arith, ArenaF32, ArenaI32, Ctx, GradStore, Layer, Param, Registrar, Tape, TapeKey, Tensor,
+};
 use crate::dfp::bits::{exp2i64, unpack};
 use crate::dfp::exec;
 use crate::dfp::fixed::{fx_recip_int, fx_rsqrt, Fx};
@@ -46,6 +48,20 @@ fn scalar15(x: f32) -> (i64, i32) {
     (if u.sign { -p } else { p }, k)
 }
 
+/// Taped state for the integer backward.
+struct LnSaved {
+    diff: ArenaI32,
+    kx: i32,
+    r: Vec<Fx>,
+    rows: usize,
+}
+
+/// Taped state for the float backward.
+struct LnFloatSaved {
+    x: ArenaF32,
+    rows: usize,
+}
+
 /// Layer-norm over the last dimension.
 pub struct LayerNorm {
     /// Per-feature scale γ.
@@ -58,11 +74,8 @@ pub struct LayerNorm {
     pub dim: usize,
     /// Stability epsilon.
     pub eps: f32,
-    saved_diff: Vec<i32>,
-    saved_kx: i32,
-    saved_r: Vec<Fx>,
-    saved_rows: usize,
-    saved_x: Vec<f32>, // float path
+    /// Tape slot.
+    pub key: TapeKey,
 }
 
 impl LayerNorm {
@@ -74,15 +87,17 @@ impl LayerNorm {
             arith,
             dim,
             eps: 1e-5,
-            saved_diff: Vec::new(),
-            saved_kx: 0,
-            saved_r: Vec::new(),
-            saved_rows: 0,
-            saved_x: Vec::new(),
+            key: TapeKey::default(),
         }
     }
 
-    fn forward_int(&mut self, x: &Tensor, cfg: &super::IntCfg, ctx: &mut Ctx) -> Tensor {
+    fn forward_int(
+        &self,
+        x: &Tensor,
+        cfg: &super::IntCfg,
+        ctx: &mut Ctx,
+        tape: Option<&mut Tape>,
+    ) -> Tensor {
         let rows = x.len() / self.dim;
         let qx = quantize(&x.data, cfg.pbits, int_mode(cfg, ctx, false));
         let kx = qx.scale_exp();
@@ -133,32 +148,39 @@ impl LayerNorm {
             }
         }
         exec::recycle_dfp(qx);
-        if ctx.train {
-            exec::recycle_i32(std::mem::replace(&mut self.saved_diff, diff));
-            self.saved_kx = kx;
-            self.saved_r = rs;
-            self.saved_rows = rows;
+        if let Some(tape) = tape {
+            tape.put(self.key, LnSaved { diff: ArenaI32::from_taken(diff), kx, r: rs, rows });
         } else {
             exec::recycle_i32(diff);
         }
         Tensor::new(y, x.shape.clone())
     }
 
-    fn backward_int(&mut self, gy: &Tensor, cfg: &super::IntCfg, ctx: &mut Ctx) -> Tensor {
-        let rows = self.saved_rows;
+    fn backward_int(
+        &self,
+        gy: &Tensor,
+        cfg: &super::IntCfg,
+        ctx: &mut Ctx,
+        tape: &Tape,
+        grads: &mut GradStore,
+    ) -> Tensor {
+        let saved: &LnSaved = tape.get(self.key, "layernorm");
+        let rows = saved.rows;
         let d = self.dim;
         let qg = quantize(&gy.data, cfg.pbits, int_mode(cfg, ctx, true));
         let kg = qg.scale_exp();
-        let kx = self.saved_kx;
+        let kx = saved.kx;
         let inv_n = fx_recip_int(d);
         let gqs: Vec<(i64, i32)> = self.gamma.data.iter().map(|&g| scalar15(g)).collect();
         let mut gx = vec![0f32; gy.len()];
+        let mut gamma_g = vec![0f32; d];
+        let mut beta_g = vec![0f32; d];
         // Per-row γĝ scratch, hoisted out of the row loop (fully
         // overwritten each row).
         let mut ggrow = vec![0i64; d];
         for r0 in 0..rows {
             let base = r0 * d;
-            let r = self.saved_r[r0];
+            let r = saved.r[r0];
             let (r15, kr) = to_p15(r.p as i128, r.k);
             // gg_i = γ_i·ĝ_i (payload exp kg + kγ_i varies per feature) —
             // to keep one row grid, fold γ at a common exponent kgam:
@@ -177,11 +199,11 @@ impl LayerNorm {
                 let gg = align_i64(gq * gval, kg + kgi, kg + kgam);
                 ggrow[i] = gg;
                 sg += gg;
-                let xh = self.saved_diff[base + i] as i64 * r15; // exp kx+kr ≤ 2^24
+                let xh = saved.diff[base + i] as i64 * r15; // exp kx+kr ≤ 2^24
                 sgx += (gg * xh) >> 15; // keep in i64: drop 15 bits, exp += 15
                 // param grads: ĝ·x̂ and ĝ (integer, inverse-mapped per row).
-                self.gamma.grad[i] += ((gval * xh) as f64 * sp_gamma) as f32;
-                self.beta.grad[i] += (gval as f64 * sp_beta) as f32;
+                gamma_g[i] += ((gval * xh) as f64 * sp_gamma) as f32;
+                beta_g[i] += (gval as f64 * sp_beta) as f32;
             }
             let m1 = ((sg as i128 * inv_n.p as i128) >> (-inv_n.k).clamp(0, 127)) as i64;
             let (m2, km2) = to_p15(
@@ -192,7 +214,7 @@ impl LayerNorm {
             let out_scale = exp2i64(e0 + kr);
             for i in 0..d {
                 let u = align_i64(ggrow[i] - m1, kg + kgam, e0);
-                let xh = self.saved_diff[base + i] as i64 * r15;
+                let xh = saved.diff[base + i] as i64 * r15;
                 let v = align_i64((xh * m2) >> 15, kx + kr + km2 + 15, e0);
                 // r·(γĝ − m1 − x̂·m2): r15(≤2^15)·s(≤2^29) fits i64.
                 let s = u - v;
@@ -200,10 +222,12 @@ impl LayerNorm {
             }
         }
         exec::recycle_dfp(qg);
+        grads.accum(&self.gamma, &gamma_g);
+        grads.accum(&self.beta, &beta_g);
         Tensor::new(gx, gy.shape.clone())
     }
 
-    fn forward_float(&mut self, x: &Tensor, train: bool) -> Tensor {
+    fn forward_float(&self, x: &Tensor, tape: Option<&mut Tape>) -> Tensor {
         let rows = x.len() / self.dim;
         let mut y = vec![0f32; x.len()];
         for r0 in 0..rows {
@@ -216,20 +240,22 @@ impl LayerNorm {
                 y[base + i] = self.gamma.data[i] * (row[i] - mean) * r + self.beta.data[i];
             }
         }
-        if train {
-            self.saved_x = x.data.clone();
-            self.saved_rows = rows;
+        if let Some(tape) = tape {
+            tape.put(self.key, LnFloatSaved { x: ArenaF32::copy_of(&x.data), rows });
         }
         Tensor::new(y, x.shape.clone())
     }
 
-    fn backward_float(&mut self, gy: &Tensor) -> Tensor {
-        let rows = self.saved_rows;
+    fn backward_float(&self, gy: &Tensor, tape: &Tape, grads: &mut GradStore) -> Tensor {
+        let saved: &LnFloatSaved = tape.get(self.key, "layernorm");
+        let rows = saved.rows;
         let d = self.dim;
         let mut gx = vec![0f32; gy.len()];
+        let mut gamma_g = vec![0f32; d];
+        let mut beta_g = vec![0f32; d];
         for r0 in 0..rows {
             let base = r0 * d;
-            let row = &self.saved_x[base..base + d];
+            let row = &saved.x[base..base + d];
             let mean = row.iter().sum::<f32>() / d as f32;
             let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
             let r = 1.0 / (var + self.eps).sqrt();
@@ -240,8 +266,8 @@ impl LayerNorm {
                 let gg = self.gamma.data[i] * gy.data[base + i];
                 m1 += gg;
                 m2 += gg * xh;
-                self.gamma.grad[i] += gy.data[base + i] * xh;
-                self.beta.grad[i] += gy.data[base + i];
+                gamma_g[i] += gy.data[base + i] * xh;
+                beta_g[i] += gy.data[base + i];
             }
             m1 /= d as f32;
             m2 /= d as f32;
@@ -251,27 +277,41 @@ impl LayerNorm {
                 gx[base + i] = r * (gg - m1 - xh * m2);
             }
         }
+        grads.accum(&self.gamma, &gamma_g);
+        grads.accum(&self.beta, &beta_g);
         Tensor::new(gx, gy.shape.clone())
     }
 }
 
 impl Layer for LayerNorm {
-    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn forward(&self, x: &Tensor, ctx: &mut Ctx, tape: Option<&mut Tape>) -> Tensor {
         match self.arith {
-            Arith::Int(cfg) => self.forward_int(x, &cfg, ctx),
-            _ => self.forward_float(x, ctx.train),
+            Arith::Int(cfg) => self.forward_int(x, &cfg, ctx, tape),
+            _ => self.forward_float(x, tape),
         }
     }
 
-    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn backward(&self, gy: &Tensor, ctx: &mut Ctx, tape: &Tape, grads: &mut GradStore) -> Tensor {
         match self.arith {
-            Arith::Int(cfg) => self.backward_int(gy, &cfg, ctx),
-            _ => self.backward_float(gy),
+            Arith::Int(cfg) => self.backward_int(gy, &cfg, ctx, tape, grads),
+            _ => self.backward_float(gy, tape, grads),
         }
+    }
+
+    fn register(&mut self, r: &mut Registrar) {
+        r.enter("layernorm");
+        r.key(&mut self.key);
+        r.param(&mut self.gamma, "gamma");
+        r.param(&mut self.beta, "beta");
+        r.exit();
     }
 
     fn params(&mut self) -> Vec<&mut Param> {
         vec![&mut self.gamma, &mut self.beta]
+    }
+
+    fn params_ref(&self) -> Vec<&Param> {
+        vec![&self.gamma, &self.beta]
     }
 
     fn name(&self) -> &'static str {
@@ -283,18 +323,25 @@ impl Layer for LayerNorm {
 mod tests {
     use super::*;
     use crate::dfp::rng::Rng;
+    use crate::nn::finalize;
 
     fn input(rows: usize, d: usize, seed: u64) -> Tensor {
         let mut rng = Rng::new(seed);
         Tensor::new((0..rows * d).map(|_| rng.next_gaussian() * 0.8 + 0.1).collect(), vec![rows, d])
     }
 
+    fn mk(dim: usize, arith: Arith) -> LayerNorm {
+        let mut ln = LayerNorm::new(dim, arith);
+        finalize(&mut ln);
+        ln
+    }
+
     #[test]
     fn int_forward_normalizes_rows() {
-        let mut ln = LayerNorm::new(64, Arith::int8());
+        let ln = mk(64, Arith::int8());
         let x = input(8, 64, 1);
         let mut ctx = Ctx::train(0, 0);
-        let y = ln.forward(&x, &mut ctx);
+        let y = ln.forward(&x, &mut ctx, None);
         for r in 0..8 {
             let row = &y.data[r * 64..(r + 1) * 64];
             let mean = row.iter().sum::<f32>() / 64.0;
@@ -307,8 +354,8 @@ mod tests {
     #[test]
     fn int_matches_float_forward() {
         let x = input(4, 32, 2);
-        let mut lf = LayerNorm::new(32, Arith::Float);
-        let mut li = LayerNorm::new(32, Arith::int8());
+        let mut lf = mk(32, Arith::Float);
+        let mut li = mk(32, Arith::int8());
         for i in 0..32 {
             lf.gamma.data[i] = 1.0 + 0.01 * i as f32;
             li.gamma.data[i] = lf.gamma.data[i];
@@ -317,8 +364,8 @@ mod tests {
         }
         let mut c1 = Ctx::train(0, 0);
         let mut c2 = Ctx::train(0, 0);
-        let yf = lf.forward(&x, &mut c1);
-        let yi = li.forward(&x, &mut c2);
+        let yf = lf.forward(&x, &mut c1, None);
+        let yi = li.forward(&x, &mut c2, None);
         for (a, b) in yi.data.iter().zip(&yf.data) {
             assert!((a - b).abs() < 0.15, "{a} vs {b}");
         }
@@ -328,14 +375,18 @@ mod tests {
     fn int_backward_direction_matches_float() {
         let x = input(6, 48, 3);
         let gy = input(6, 48, 4);
-        let mut lf = LayerNorm::new(48, Arith::Float);
-        let mut li = LayerNorm::new(48, Arith::int8());
+        let lf = mk(48, Arith::Float);
+        let li = mk(48, Arith::int8());
         let mut c1 = Ctx::train(0, 0);
         let mut c2 = Ctx::train(0, 0);
-        lf.forward(&x, &mut c1);
-        li.forward(&x, &mut c2);
-        let gf = lf.backward(&gy, &mut c1);
-        let gi = li.backward(&gy, &mut c2);
+        let mut tf = Tape::new();
+        let mut ti = Tape::new();
+        let mut gf_s = GradStore::new();
+        let mut gi_s = GradStore::new();
+        lf.forward(&x, &mut c1, Some(&mut tf));
+        li.forward(&x, &mut c2, Some(&mut ti));
+        let gf = lf.backward(&gy, &mut c1, &tf, &mut gf_s);
+        let gi = li.backward(&gy, &mut c2, &ti, &mut gi_s);
         let dot: f32 = gf.data.iter().zip(&gi.data).map(|(a, b)| a * b).sum();
         let n1: f32 = gf.data.iter().map(|a| a * a).sum::<f32>().sqrt();
         let n2: f32 = gi.data.iter().map(|a| a * a).sum::<f32>().sqrt();
@@ -344,11 +395,13 @@ mod tests {
 
     #[test]
     fn float_gradcheck() {
-        let mut ln = LayerNorm::new(8, Arith::Float);
+        let ln = mk(8, Arith::Float);
         let x = input(2, 8, 5);
         let mut ctx = Ctx::train(0, 0);
-        let y = ln.forward(&x, &mut ctx);
-        let gx = ln.backward(&y, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = ln.forward(&x, &mut ctx, Some(&mut tape));
+        let gx = ln.backward(&y, &mut ctx, &tape, &mut grads);
         let eps = 1e-2;
         for i in [0usize, 7, 12] {
             let mut xp = x.clone();
@@ -357,8 +410,8 @@ mod tests {
             xm.data[i] -= eps;
             let mut c1 = Ctx::train(0, 0);
             let mut c2 = Ctx::train(0, 0);
-            let lp: f32 = ln.forward(&xp, &mut c1).data.iter().map(|v| 0.5 * v * v).sum();
-            let lm: f32 = ln.forward(&xm, &mut c2).data.iter().map(|v| 0.5 * v * v).sum();
+            let lp: f32 = ln.forward(&xp, &mut c1, None).data.iter().map(|v| 0.5 * v * v).sum();
+            let lm: f32 = ln.forward(&xm, &mut c2, None).data.iter().map(|v| 0.5 * v * v).sum();
             let fd = (lp - lm) / (2.0 * eps);
             assert!((fd - gx.data[i]).abs() < 6e-2 * fd.abs().max(1.0), "i={i} fd={fd} got={}", gx.data[i]);
         }

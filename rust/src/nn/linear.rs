@@ -9,9 +9,15 @@
 //! `∂L/∂W = Ĝᵀ·X̂` and `∂L/∂x = Ĝ·Ŵ` as integer GEMMs.
 
 use super::qmat::{fgemm, igemm_kind, int_mode, MatKind};
-use super::{Arith, Ctx, Layer, Param, Tensor};
+use super::{Arith, ArenaF32, Ctx, GradStore, Layer, Param, Registrar, Tape, TapeKey, Tensor};
 use crate::baselines::uniform::{clip_grad, uniform_dequant_scale, uniform_quantize};
 use crate::dfp::{bits::exp2i64, exec, quantize, DfpTensor};
+
+/// What the forward pass tapes for backward: the input and its row count.
+struct Saved {
+    x: ArenaF32,
+    rows: usize,
+}
 
 /// Fully-connected layer.
 pub struct Linear {
@@ -21,10 +27,10 @@ pub struct Linear {
     pub b: Param,
     /// Arithmetic mode.
     pub arith: Arith,
+    /// Tape slot (assigned by [`super::finalize`]).
+    pub key: TapeKey,
     in_dim: usize,
     out_dim: usize,
-    saved_x: Vec<f32>,
-    saved_rows: usize,
 }
 
 impl Linear {
@@ -37,10 +43,9 @@ impl Linear {
             w: Param::new(w, vec![out_dim, in_dim]),
             b: Param::new(vec![0.0; out_dim], vec![out_dim]),
             arith,
+            key: TapeKey::default(),
             in_dim,
             out_dim,
-            saved_x: Vec::new(),
-            saved_rows: 0,
         }
     }
 
@@ -109,12 +114,11 @@ impl Linear {
 }
 
 impl Layer for Linear {
-    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn forward(&self, x: &Tensor, ctx: &mut Ctx, tape: Option<&mut Tape>) -> Tensor {
         let rows = x.len() / self.in_dim;
         debug_assert_eq!(rows * self.in_dim, x.len(), "input not divisible by in_dim");
-        if ctx.train {
-            self.saved_x = x.data.clone();
-            self.saved_rows = rows;
+        if let Some(tape) = tape {
+            tape.put(self.key, Saved { x: ArenaF32::copy_of(&x.data), rows });
         }
         let y = match &self.arith {
             Arith::Int(cfg) => {
@@ -154,8 +158,9 @@ impl Layer for Linear {
         Tensor::new(y, shape)
     }
 
-    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor {
-        let rows = self.saved_rows;
+    fn backward(&self, gy: &Tensor, ctx: &mut Ctx, tape: &Tape, grads: &mut GradStore) -> Tensor {
+        let saved: &Saved = tape.get(self.key, "linear");
+        let rows = saved.rows;
         debug_assert_eq!(gy.len(), rows * self.out_dim);
         let (gx, gw, gb) = match &self.arith {
             Arith::Int(cfg) => {
@@ -164,7 +169,7 @@ impl Layer for Linear {
                 let cfg = *cfg;
                 let qg = quantize(&gy.data, cfg.pbits, int_mode(&cfg, ctx, true));
                 let qw = quantize(&self.w.data, cfg.pbits, int_mode(&cfg, ctx, true));
-                let qx = quantize(&self.saved_x, cfg.pbits, int_mode(&cfg, ctx, true));
+                let qx = quantize(&saved.x, cfg.pbits, int_mode(&cfg, ctx, true));
                 if PROBE.tick() {
                     crate::telemetry::numeric::probe_dfp("linear/dy", &qg);
                 }
@@ -194,7 +199,7 @@ impl Layer for Linear {
                 let gx =
                     fgemm(MatKind::AB, &gy.data, &self.w.data, (rows, self.out_dim, self.in_dim));
                 let gw =
-                    fgemm(MatKind::ATB, &gy.data, &self.saved_x, (rows, self.out_dim, self.in_dim));
+                    fgemm(MatKind::ATB, &gy.data, &saved.x, (rows, self.out_dim, self.in_dim));
                 let mut gb = vec![0f32; self.out_dim];
                 for r in 0..rows {
                     for c in 0..self.out_dim {
@@ -209,7 +214,7 @@ impl Layer for Linear {
                 clip_grad(&mut g, cfg.grad_clip);
                 let (pg, sg) = uniform_quantize(&g, &cfg, 0.0);
                 let (pw, sw) = uniform_quantize(&self.w.data, &cfg, 0.0);
-                let (px, sx) = uniform_quantize(&self.saved_x, &cfg, 0.0);
+                let (px, sx) = uniform_quantize(&saved.x, &cfg, 0.0);
                 let qg = DfpTensor { payload: pg, e_max: 127, pbits: cfg.bits - 1 };
                 let qw = DfpTensor { payload: pw, e_max: 127, pbits: cfg.bits - 1 };
                 let qx = DfpTensor { payload: px, e_max: 127, pbits: cfg.bits - 1 };
@@ -228,19 +233,27 @@ impl Layer for Linear {
                 (gx, gw, gb)
             }
         };
-        for (acc, g) in self.w.grad.iter_mut().zip(&gw) {
-            *acc += g;
-        }
-        for (acc, g) in self.b.grad.iter_mut().zip(&gb) {
-            *acc += g;
-        }
+        grads.accum(&self.w, &gw);
+        grads.accum(&self.b, &gb);
         let mut shape = gy.shape.clone();
         *shape.last_mut().expect("gradient must have a shape") = self.in_dim;
         Tensor::new(gx, shape)
     }
 
+    fn register(&mut self, r: &mut Registrar) {
+        r.enter("linear");
+        r.key(&mut self.key);
+        r.param(&mut self.w, "w");
+        r.param(&mut self.b, "b");
+        r.exit();
+    }
+
     fn params(&mut self) -> Vec<&mut Param> {
         vec![&mut self.w, &mut self.b]
+    }
+
+    fn params_ref(&self) -> Vec<&Param> {
+        vec![&self.w, &self.b]
     }
 
     fn name(&self) -> &'static str {
@@ -252,13 +265,13 @@ impl Layer for Linear {
 mod tests {
     use super::*;
     use crate::dfp::rng::Rng;
-    use crate::nn::IntCfg;
+    use crate::nn::{finalize, IntCfg};
 
-    fn finite_diff_loss(layer: &mut Linear, x: &Tensor, ctx_seed: u64) -> f32 {
+    fn finite_diff_loss(layer: &Linear, x: &Tensor, ctx_seed: u64) -> f32 {
         // Simple quadratic loss L = 0.5·Σ y² for gradient checking.
         let mut ctx = Ctx::eval(ctx_seed);
         ctx.train = true;
-        let y = layer.forward(x, &mut ctx);
+        let y = layer.forward(x, &mut ctx, None);
         0.5 * y.data.iter().map(|v| v * v).sum::<f32>()
     }
 
@@ -266,11 +279,14 @@ mod tests {
     fn float_gradcheck() {
         let mut rng = Rng::new(5);
         let mut l = Linear::new(4, 3, Arith::Float, &mut rng);
+        finalize(&mut l);
         let x = Tensor::new((0..8).map(|i| (i as f32 * 0.7).sin()).collect(), vec![2, 4]);
         let mut ctx = Ctx::train(0, 0);
-        let y = l.forward(&x, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = l.forward(&x, &mut ctx, Some(&mut tape));
         // L = 0.5 Σ y² ⇒ gy = y.
-        let gx = l.backward(&y, &mut ctx);
+        let gx = l.backward(&y, &mut ctx, &tape, &mut grads);
         // Finite differences on inputs.
         let eps = 1e-3;
         for i in 0..x.len() {
@@ -278,22 +294,20 @@ mod tests {
             xp.data[i] += eps;
             let mut xm = x.clone();
             xm.data[i] -= eps;
-            let lp = finite_diff_loss(&mut l, &xp, 0);
-            let lm = finite_diff_loss(&mut l, &xm, 0);
+            let lp = finite_diff_loss(&l, &xp, 0);
+            let lm = finite_diff_loss(&l, &xm, 0);
             let fd = (lp - lm) / (2.0 * eps);
             assert!((fd - gx.data[i]).abs() < 2e-2 * fd.abs().max(1.0), "i={i} fd={fd} got={}", gx.data[i]);
         }
         // Weight gradient finite difference.
-        let mut ctx2 = Ctx::train(0, 0);
-        let _ = l.forward(&x, &mut ctx2); // refresh saved_x
-        let gw0 = l.w.grad.clone();
+        let gw0 = grads.get(&l.w).unwrap().to_vec();
         let eps = 1e-3;
         for i in [0usize, 5, 11] {
             let orig = l.w.data[i];
             l.w.data[i] = orig + eps;
-            let lp = finite_diff_loss(&mut l, &x, 0);
+            let lp = finite_diff_loss(&l, &x, 0);
             l.w.data[i] = orig - eps;
-            let lm = finite_diff_loss(&mut l, &x, 0);
+            let lm = finite_diff_loss(&l, &x, 0);
             l.w.data[i] = orig;
             let fd = (lp - lm) / (2.0 * eps);
             assert!((fd - gw0[i]).abs() < 2e-2 * fd.abs().max(1.0), "w{i} fd={fd} got={}", gw0[i]);
@@ -311,8 +325,8 @@ mod tests {
         let x = Tensor::new((0..32).map(|i| ((i as f32) * 0.21).cos()).collect(), vec![2, 16]);
         let mut c1 = Ctx::train(1, 1);
         let mut c2 = Ctx::train(1, 1);
-        let yf = lf.forward(&x, &mut c1);
-        let yi = li.forward(&x, &mut c2);
+        let yf = lf.forward(&x, &mut c1, None);
+        let yi = li.forward(&x, &mut c2, None);
         let ymax = yf.data.iter().fold(0f32, |m, v| m.max(v.abs()));
         for (a, b) in yi.data.iter().zip(&yf.data) {
             assert!((a - b).abs() < 0.1 * ymax.max(1.0), "{a} vs {b}");
@@ -324,21 +338,27 @@ mod tests {
         // Average of int8 SR weight-gradients over seeds ≈ float gradient.
         let mut rng = Rng::new(7);
         let mut lf = Linear::new(6, 4, Arith::Float, &mut rng);
+        finalize(&mut lf);
         let x = Tensor::new((0..12).map(|i| ((i * i) as f32 * 0.11).sin()).collect(), vec![2, 6]);
         let gy = Tensor::new((0..8).map(|i| ((i as f32) * 0.37).cos()).collect(), vec![2, 4]);
         let mut cf = Ctx::train(0, 0);
-        lf.forward(&x, &mut cf);
-        lf.backward(&gy, &mut cf);
-        let want = lf.w.grad.clone();
+        let mut tf = Tape::new();
+        let mut gf = GradStore::new();
+        lf.forward(&x, &mut cf, Some(&mut tf));
+        lf.backward(&gy, &mut cf, &tf, &mut gf);
+        let want = gf.get(&lf.w).unwrap().to_vec();
         let trials = 3000;
         let mut acc = vec![0f64; want.len()];
         for t in 0..trials {
             let mut li = Linear::new(6, 4, Arith::int8(), &mut Rng::new(7));
+            finalize(&mut li);
             li.w.data = lf.w.data.clone();
             let mut ci = Ctx::train(1000 + t, t);
-            li.forward(&x, &mut ci);
-            li.backward(&gy, &mut ci);
-            for (a, g) in acc.iter_mut().zip(&li.w.grad) {
+            let mut ti = Tape::new();
+            let mut gi = GradStore::new();
+            li.forward(&x, &mut ci, Some(&mut ti));
+            li.backward(&gy, &mut ci, &ti, &mut gi);
+            for (a, g) in acc.iter_mut().zip(gi.get(&li.w).unwrap()) {
                 *a += *g as f64;
             }
         }
@@ -354,10 +374,13 @@ mod tests {
         for b in [4u32, 5, 6, 7, 8] {
             let mut rng = Rng::new(b as u64);
             let mut l = Linear::new(8, 8, Arith::Int(IntCfg::bits(b)), &mut rng);
+            finalize(&mut l);
             let x = Tensor::new(vec![0.1; 16], vec![2, 8]);
             let mut ctx = Ctx::train(0, 0);
-            let y = l.forward(&x, &mut ctx);
-            let g = l.backward(&y, &mut ctx);
+            let mut tape = Tape::new();
+            let mut grads = GradStore::new();
+            let y = l.forward(&x, &mut ctx, Some(&mut tape));
+            let g = l.backward(&y, &mut ctx, &tape, &mut grads);
             assert_eq!(g.shape, vec![2, 8]);
         }
     }

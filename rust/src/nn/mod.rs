@@ -11,6 +11,27 @@
 //! * [`Arith::Int`] — the paper's method (dynamic fixed-point + SR);
 //! * [`Arith::Uniform`] — the Appendix-A.6 division/clipping quantizer used
 //!   by prior work ([2][3][4]), for the Table 4 comparison.
+//!
+//! # Module & tape architecture
+//!
+//! The layer interface is split into an **immutable** compute path and
+//! **explicit** training state:
+//!
+//! * [`Layer::forward`] takes `&self` — the model never mutates during a
+//!   pass, so an `Arc<dyn Layer>` can be shared across the worker pool for
+//!   concurrent inference (see [`crate::infer`]). Activations a backward
+//!   pass will need are written into a caller-owned [`Tape`], keyed by a
+//!   stable layer path assigned at model build time by a [`Registrar`].
+//!   Passing `None` for the tape yields the cache-free inference forward.
+//! * [`Layer::backward`] takes `&self`, reads the tape, and accumulates
+//!   parameter gradients into a caller-owned [`GradStore`] — gradients are
+//!   no longer fields of [`Param`], so params are read-only during both
+//!   passes and the optimizer consumes `GradStore` + `&mut` params between
+//!   steps.
+//!
+//! Tape buffers are borrowed from the exec arena ([`ArenaF32`] and
+//! friends) and returned when the tape entry drops, so the steady-state
+//! training loop allocates nothing new per step.
 
 pub mod activations;
 pub mod attention;
@@ -27,6 +48,8 @@ pub mod softmax_ce;
 pub use blocks::Sequential;
 
 use crate::baselines::uniform::UniformCfg;
+use crate::dfp::exec;
+use std::any::Any;
 
 /// A dense f32 tensor with explicit shape (row-major).
 #[derive(Clone, Debug, Default)]
@@ -163,52 +186,393 @@ impl Ctx {
     }
 
     /// Next per-site stochastic-rounding seed.
+    ///
+    /// **Seed-site contract**: the counter advances once per quantization
+    /// event, in layer-execution order. Layers must issue their
+    /// quantizations in a fixed order independent of whether a tape is
+    /// recording, so a trajectory is bit-reproducible from `(seed, step)`
+    /// alone.
     pub fn next_seed(&mut self) -> u64 {
         self.counter += 1;
         crate::dfp::rng::hash2(self.seed, self.counter)
     }
 }
 
-/// A learnable parameter: f32 master view + gradient accumulator.
+/// Sentinel for "never registered" tape keys and parameter slots.
+pub const UNREGISTERED: u32 = u32::MAX;
+
+/// A learnable parameter: an f32 master view, read-only during forward and
+/// backward.
 ///
 /// Under integer SGD (Remark 5) the optimizer owns the authoritative int16
 /// state; `data` holds its inverse-mapped f32 view that layers re-quantize.
-#[derive(Clone, Debug, Default)]
+/// Gradients live in a separate [`GradStore`], addressed by the `gid` slot
+/// a [`Registrar`] assigns at model build time.
+#[derive(Clone, Debug)]
 pub struct Param {
     /// Current value (inverse-mapped view under integer SGD).
     pub data: Vec<f32>,
-    /// Gradient accumulated by `backward`.
-    pub grad: Vec<f32>,
     /// Shape (for checkpointing / debugging).
     pub shape: Vec<usize>,
+    /// Gradient slot in the model's [`GradStore`] ([`UNREGISTERED`] until
+    /// [`finalize`] walks the model).
+    pub gid: u32,
+}
+
+impl Default for Param {
+    fn default() -> Self {
+        Param { data: Vec::new(), shape: Vec::new(), gid: UNREGISTERED }
+    }
 }
 
 impl Param {
     /// New parameter from initial values.
     pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Param {
-        let n = data.len();
-        debug_assert_eq!(n, shape.iter().product::<usize>());
-        Param { data, grad: vec![0.0; n], shape }
-    }
-
-    /// Zero the gradient accumulator.
-    pub fn zero_grad(&mut self) {
-        self.grad.iter_mut().for_each(|g| *g = 0.0);
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Param { data, shape, gid: UNREGISTERED }
     }
 }
 
-/// The layer interface: stateful forward/backward (caches saved between
-/// the two calls), parameters exposed for the optimizer.
-pub trait Layer: Send {
-    /// Forward pass. `ctx.train` selects training behaviour.
-    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor;
+/// Stable address of a layer's tape entry, assigned by a [`Registrar`]
+/// during [`finalize`]. `Default` is the unregistered sentinel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TapeKey(pub u32);
 
-    /// Backward pass: consumes the upstream gradient, accumulates parameter
-    /// gradients internally, returns the input gradient.
-    fn backward(&mut self, gy: &Tensor, ctx: &mut Ctx) -> Tensor;
+impl Default for TapeKey {
+    fn default() -> Self {
+        TapeKey(UNREGISTERED)
+    }
+}
 
-    /// Mutable access to parameters (empty for stateless layers).
+/// An f32 buffer borrowed from the exec arena; returned on drop, so tape
+/// entries recycle their storage for the next step's forward.
+#[derive(Debug, Default)]
+pub struct ArenaF32(pub Vec<f32>);
+
+impl ArenaF32 {
+    /// Borrow a buffer and fill it with a copy of `src`.
+    pub fn copy_of(src: &[f32]) -> ArenaF32 {
+        let mut v = exec::take_f32_vec_dirty(src.len());
+        v.copy_from_slice(src);
+        ArenaF32(v)
+    }
+
+    /// Wrap an arena-taken buffer (caller obtained it via
+    /// [`exec::take_f32_vec`] or the dirty variant).
+    pub fn from_taken(v: Vec<f32>) -> ArenaF32 {
+        ArenaF32(v)
+    }
+}
+
+impl Drop for ArenaF32 {
+    fn drop(&mut self) {
+        exec::recycle_f32(std::mem::take(&mut self.0));
+    }
+}
+
+impl std::ops::Deref for ArenaF32 {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.0
+    }
+}
+
+/// An i32 buffer borrowed from the exec arena; returned on drop.
+#[derive(Debug, Default)]
+pub struct ArenaI32(pub Vec<i32>);
+
+impl ArenaI32 {
+    /// Wrap an arena-taken buffer (caller obtained it via
+    /// [`exec::take_i32_vec`] or the dirty variant).
+    pub fn from_taken(v: Vec<i32>) -> ArenaI32 {
+        ArenaI32(v)
+    }
+}
+
+impl Drop for ArenaI32 {
+    fn drop(&mut self) {
+        exec::recycle_i32(std::mem::take(&mut self.0));
+    }
+}
+
+impl std::ops::Deref for ArenaI32 {
+    type Target = [i32];
+    fn deref(&self) -> &[i32] {
+        &self.0
+    }
+}
+
+/// An i8 buffer borrowed from the exec arena (bit masks, sign maps);
+/// returned on drop.
+#[derive(Debug, Default)]
+pub struct ArenaI8(pub Vec<i8>);
+
+impl ArenaI8 {
+    /// Borrow a buffer of `len` bytes, filled by `f(i)`.
+    pub fn fill_with(len: usize, f: impl FnMut(usize) -> i8) -> ArenaI8 {
+        let mut v = exec::take_i8_vec_dirty(len);
+        let mut f = f;
+        for (i, b) in v.iter_mut().enumerate() {
+            *b = f(i);
+        }
+        ArenaI8(v)
+    }
+}
+
+impl Drop for ArenaI8 {
+    fn drop(&mut self) {
+        exec::recycle_i8(std::mem::take(&mut self.0));
+    }
+}
+
+impl std::ops::Deref for ArenaI8 {
+    type Target = [i8];
+    fn deref(&self) -> &[i8] {
+        &self.0
+    }
+}
+
+/// Per-call activation tape: everything a backward pass needs from the
+/// forward pass, held outside the model.
+///
+/// A fresh tape is created per training step (or one is reused via
+/// [`Tape::clear`]); forward writes entries under each layer's
+/// [`TapeKey`], backward reads them. Entries holding arena-borrowed
+/// buffers ([`ArenaF32`]/[`ArenaI32`]/[`ArenaI8`]) recycle their storage
+/// when the tape drops, so per-step heap traffic stays flat.
+#[derive(Default)]
+pub struct Tape {
+    slots: Vec<Option<Box<dyn Any + Send>>>,
+}
+
+impl Tape {
+    /// New, empty tape.
+    pub fn new() -> Tape {
+        Tape::default()
+    }
+
+    /// Record `v` under `key`, replacing (and dropping/recycling) any
+    /// previous entry.
+    pub fn put<T: Any + Send>(&mut self, key: TapeKey, v: T) {
+        let id = key.0 as usize;
+        assert!(
+            key.0 != UNREGISTERED,
+            "tape write through an unregistered layer: call nn::finalize on the model first"
+        );
+        if self.slots.len() <= id {
+            self.slots.resize_with(id + 1, || None);
+        }
+        self.slots[id] = Some(Box::new(v));
+    }
+
+    /// Read the entry a layer recorded, panicking with the layer name if
+    /// the forward pass never taped it (or taped a different type).
+    pub fn get<T: Any>(&self, key: TapeKey, layer: &str) -> &T {
+        self.slots
+            .get(key.0 as usize)
+            .and_then(|s| s.as_ref())
+            .unwrap_or_else(|| panic!("{layer}: backward without a taped forward (key {})", key.0))
+            .downcast_ref::<T>()
+            .unwrap_or_else(|| panic!("{layer}: tape entry has the wrong type (key {})", key.0))
+    }
+
+    /// Entry recorded under `key`, if any.
+    pub fn get_opt<T: Any>(&self, key: TapeKey) -> Option<&T> {
+        self.slots.get(key.0 as usize).and_then(|s| s.as_ref()).and_then(|b| b.downcast_ref())
+    }
+
+    /// Drop every entry (recycling arena-backed buffers), keeping the slot
+    /// table for reuse.
+    pub fn clear(&mut self) {
+        for s in self.slots.iter_mut() {
+            *s = None;
+        }
+    }
+
+    /// Number of live entries.
+    pub fn len(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// True when no entry is recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Gradient accumulators for every parameter of a model, separated from
+/// [`Param`] and addressed by the `gid` slots a [`Registrar`] assigns.
+///
+/// Layers accumulate into [`GradStore::buf`]; the optimizer reads via
+/// [`GradStore::get`]; zeroing happens in exactly one place —
+/// [`GradStore::clear`] — instead of per-layer `zero_grad` calls.
+#[derive(Default)]
+pub struct GradStore {
+    bufs: Vec<Vec<f32>>,
+}
+
+impl GradStore {
+    /// New, empty store.
+    pub fn new() -> GradStore {
+        GradStore::default()
+    }
+
+    /// The accumulator for `p`, zero-initialized to `p.data.len()` on
+    /// first use. Layers `+=` into this during backward.
+    pub fn buf(&mut self, p: &Param) -> &mut [f32] {
+        assert!(
+            p.gid != UNREGISTERED,
+            "gradient for an unregistered param: call nn::finalize on the model first"
+        );
+        let id = p.gid as usize;
+        if self.bufs.len() <= id {
+            self.bufs.resize_with(id + 1, Vec::new);
+        }
+        let b = &mut self.bufs[id];
+        if b.len() != p.data.len() {
+            *b = vec![0.0; p.data.len()];
+        }
+        b
+    }
+
+    /// Accumulate `g` elementwise into `p`'s buffer.
+    pub fn accum(&mut self, p: &Param, g: &[f32]) {
+        for (acc, &v) in self.buf(p).iter_mut().zip(g) {
+            *acc += v;
+        }
+    }
+
+    /// The accumulated gradient for `p`, if backward ever touched it.
+    pub fn get(&self, p: &Param) -> Option<&[f32]> {
+        if p.gid == UNREGISTERED {
+            return None;
+        }
+        self.bufs.get(p.gid as usize).filter(|b| b.len() == p.data.len()).map(|b| b.as_slice())
+    }
+
+    /// Zero every accumulator in place (allocations kept). The single,
+    /// centralized gradient-zeroing site.
+    pub fn clear(&mut self) {
+        for b in self.bufs.iter_mut() {
+            b.iter_mut().for_each(|g| *g = 0.0);
+        }
+    }
+
+    /// Number of allocated slots.
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// True when no slot was ever written.
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+}
+
+/// Build-time walker that assigns each layer a stable tape key and each
+/// parameter a gradient slot, recording human-readable paths
+/// (`"3.residual.main.1.conv.w"`) for diagnostics and checkpoints.
+///
+/// The traversal is the model's structural order, so re-running it on the
+/// same model reproduces the same assignment (registration is idempotent).
+#[derive(Default)]
+pub struct Registrar {
+    next_key: u32,
+    stack: Vec<String>,
+    /// Path of every assigned tape key, indexed by key id.
+    pub layer_paths: Vec<String>,
+    /// `(path, shape)` of every registered parameter, indexed by gid —
+    /// the order [`Layer::params`] exposes them in.
+    pub param_meta: Vec<(String, Vec<usize>)>,
+}
+
+impl Registrar {
+    /// Fresh registrar.
+    pub fn new() -> Registrar {
+        Registrar::default()
+    }
+
+    /// Enter a path segment (a container slot or layer name).
+    pub fn enter(&mut self, seg: impl Into<String>) {
+        self.stack.push(seg.into());
+    }
+
+    /// Leave the innermost path segment.
+    pub fn exit(&mut self) {
+        self.stack.pop();
+    }
+
+    fn path(&self, leaf: &str) -> String {
+        let mut p = self.stack.join(".");
+        if !leaf.is_empty() {
+            if !p.is_empty() {
+                p.push('.');
+            }
+            p.push_str(leaf);
+        }
+        p
+    }
+
+    /// Assign the next tape key to `k`.
+    pub fn key(&mut self, k: &mut TapeKey) {
+        k.0 = self.next_key;
+        self.next_key += 1;
+        self.layer_paths.push(self.path(""));
+    }
+
+    /// Assign the next gradient slot to `p`, recording `name` under the
+    /// current path.
+    pub fn param(&mut self, p: &mut Param, name: &str) {
+        p.gid = self.param_meta.len() as u32;
+        self.param_meta.push((self.path(name), p.shape.clone()));
+    }
+
+    /// Number of parameters registered so far.
+    pub fn n_params(&self) -> usize {
+        self.param_meta.len()
+    }
+}
+
+/// Walk `model` assigning tape keys and gradient slots; must run once
+/// after construction (model builders call it) and is safe to re-run.
+/// Returns the registrar for its path/shape metadata.
+pub fn finalize(model: &mut dyn Layer) -> Registrar {
+    let mut r = Registrar::new();
+    model.register(&mut r);
+    r
+}
+
+/// The layer interface: immutable forward/backward, with saved
+/// activations in an explicit [`Tape`] and gradients in a [`GradStore`].
+///
+/// `forward` with `tape: None` is the inference path — no caches are
+/// written anywhere, so a `&self` forward is safe to run from many threads
+/// at once over one shared model (`Layer: Sync`).
+pub trait Layer: Send + Sync {
+    /// Forward pass. `ctx.train` selects training behaviour (BN batch
+    /// stats, etc.); `tape` — when present — records what backward needs.
+    fn forward(&self, x: &Tensor, ctx: &mut Ctx, tape: Option<&mut Tape>) -> Tensor;
+
+    /// Backward pass: consumes the upstream gradient, reads this layer's
+    /// tape entry, accumulates parameter gradients into `grads`, returns
+    /// the input gradient.
+    fn backward(&self, gy: &Tensor, ctx: &mut Ctx, tape: &Tape, grads: &mut GradStore) -> Tensor;
+
+    /// Build-time registration: assign tape keys / gradient slots for this
+    /// layer and recurse into children. Params must be visited in the same
+    /// order [`Layer::params`] returns them.
+    fn register(&mut self, r: &mut Registrar) {
+        let _ = r;
+    }
+
+    /// Mutable access to parameters (empty for stateless layers) — the
+    /// optimizer's view between steps.
     fn params(&mut self) -> Vec<&mut Param> {
+        Vec::new()
+    }
+
+    /// Read-only view of the same parameters, in the same order.
+    fn params_ref(&self) -> Vec<&Param> {
         Vec::new()
     }
 
@@ -216,8 +580,8 @@ pub trait Layer: Send {
     fn name(&self) -> &'static str;
 
     /// Parameter count (for model summaries).
-    fn param_count(&mut self) -> usize {
-        self.params().iter().map(|p| p.data.len()).sum()
+    fn param_count(&self) -> usize {
+        self.params_ref().iter().map(|p| p.data.len()).sum()
     }
 }
 
@@ -253,10 +617,61 @@ mod tests {
     }
 
     #[test]
-    fn param_zero_grad() {
+    fn tape_put_get_clear() {
+        let mut t = Tape::new();
+        let k = TapeKey(2);
+        t.put(k, 41usize);
+        assert_eq!(*t.get::<usize>(k, "test"), 41);
+        t.put(k, 42usize); // overwrite
+        assert_eq!(*t.get::<usize>(k, "test"), 42);
+        assert_eq!(t.len(), 1);
+        assert!(t.get_opt::<usize>(TapeKey(0)).is_none());
+        t.clear();
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "unregistered layer")]
+    fn tape_rejects_unregistered_key() {
+        let mut t = Tape::new();
+        t.put(TapeKey::default(), 1usize);
+    }
+
+    #[test]
+    fn gradstore_accum_and_clear() {
         let mut p = Param::new(vec![1.0, 2.0], vec![2]);
-        p.grad = vec![3.0, 4.0];
-        p.zero_grad();
-        assert_eq!(p.grad, vec![0.0, 0.0]);
+        p.gid = 0;
+        let mut g = GradStore::new();
+        g.accum(&p, &[0.5, 1.0]);
+        g.accum(&p, &[0.5, 1.0]);
+        assert_eq!(g.get(&p).unwrap(), &[1.0, 2.0]);
+        g.clear();
+        assert_eq!(g.get(&p).unwrap(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn registrar_paths_and_ids_are_stable() {
+        let mut r = Registrar::new();
+        r.enter("0");
+        r.enter("linear");
+        let mut k = TapeKey::default();
+        r.key(&mut k);
+        let mut p = Param::new(vec![0.0], vec![1]);
+        r.param(&mut p, "w");
+        r.exit();
+        r.exit();
+        assert_eq!(k, TapeKey(0));
+        assert_eq!(p.gid, 0);
+        assert_eq!(r.layer_paths[0], "0.linear");
+        assert_eq!(r.param_meta[0].0, "0.linear.w");
+    }
+
+    #[test]
+    fn arena_buffers_roundtrip() {
+        let a = ArenaF32::copy_of(&[1.0, 2.0, 3.0]);
+        assert_eq!(&a[..], &[1.0, 2.0, 3.0]);
+        drop(a); // recycles without panic
+        let m = ArenaI8::fill_with(4, |i| (i % 2) as i8);
+        assert_eq!(&m[..], &[0, 1, 0, 1]);
     }
 }

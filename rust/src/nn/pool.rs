@@ -4,41 +4,42 @@
 //! pooling with a power-of-two window is an integer add + shift, which is
 //! how the integer pipeline keeps it exact.
 
-use super::{Ctx, Layer, Tensor};
+use super::{ArenaI32, Ctx, GradStore, Layer, Registrar, Tape, TapeKey, Tensor};
+use crate::dfp::exec;
+
+/// Taped state for [`MaxPool2`]: winning input index per output element.
+struct MaxPoolSaved {
+    argmax: ArenaI32,
+    in_shape: Vec<usize>,
+}
+
+/// Taped input shape (sufficient for the shape-only backward passes).
+struct ShapeSaved {
+    in_shape: Vec<usize>,
+}
 
 /// 2×2 stride-2 max pooling.
+#[derive(Default)]
 pub struct MaxPool2 {
-    argmax: Vec<usize>,
-    in_shape: Vec<usize>,
+    /// Tape slot.
+    pub key: TapeKey,
 }
 
 impl MaxPool2 {
     /// New layer.
     pub fn new() -> Self {
-        MaxPool2 { argmax: Vec::new(), in_shape: Vec::new() }
-    }
-}
-
-impl Default for MaxPool2 {
-    fn default() -> Self {
-        Self::new()
+        Self::default()
     }
 }
 
 impl Layer for MaxPool2 {
-    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn forward(&self, x: &Tensor, _ctx: &mut Ctx, tape: Option<&mut Tape>) -> Tensor {
         let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
         let (ho, wo) = (h / 2, w / 2);
         let mut y = vec![f32::NEG_INFINITY; n * c * ho * wo];
-        // Reuse the saved argmax allocation across training steps instead
-        // of a fresh Vec per call (eval must not steal the saved state).
-        let mut am = if ctx.train {
-            std::mem::take(&mut self.argmax)
-        } else {
-            Vec::new()
-        };
-        am.clear();
-        am.resize(n * c * ho * wo, 0usize);
+        // Arena-backed argmax: recycled with the tape at end of step, or
+        // immediately when running tape-less.
+        let mut am = exec::take_i32_vec(n * c * ho * wo);
         for b in 0..n {
             for ch in 0..c {
                 let plane = (b * c + ch) * h * w;
@@ -51,7 +52,7 @@ impl Layer for MaxPool2 {
                                 let ii = plane + (2 * oy + dy) * w + 2 * ox + dx;
                                 if x.data[ii] > y[oi] {
                                     y[oi] = x.data[ii];
-                                    am[oi] = ii;
+                                    am[oi] = ii as i32;
                                 }
                             }
                         }
@@ -59,19 +60,30 @@ impl Layer for MaxPool2 {
                 }
             }
         }
-        if ctx.train {
-            self.argmax = am;
-            self.in_shape = x.shape.clone();
+        if let Some(tape) = tape {
+            tape.put(
+                self.key,
+                MaxPoolSaved { argmax: ArenaI32::from_taken(am), in_shape: x.shape.clone() },
+            );
+        } else {
+            exec::recycle_i32(am);
         }
         Tensor::new(y, vec![n, c, ho, wo])
     }
 
-    fn backward(&mut self, gy: &Tensor, _ctx: &mut Ctx) -> Tensor {
-        let mut gx = Tensor::zeros(&self.in_shape);
-        for (i, &src) in self.argmax.iter().enumerate() {
-            gx.data[src] += gy.data[i];
+    fn backward(&self, gy: &Tensor, _ctx: &mut Ctx, tape: &Tape, _grads: &mut GradStore) -> Tensor {
+        let saved: &MaxPoolSaved = tape.get(self.key, "maxpool2");
+        let mut gx = Tensor::zeros(&saved.in_shape);
+        for (i, &src) in saved.argmax.iter().enumerate() {
+            gx.data[src as usize] += gy.data[i];
         }
         gx
+    }
+
+    fn register(&mut self, r: &mut Registrar) {
+        r.enter("maxpool2");
+        r.key(&mut self.key);
+        r.exit();
     }
 
     fn name(&self) -> &'static str {
@@ -80,25 +92,21 @@ impl Layer for MaxPool2 {
 }
 
 /// Global average pooling: NCHW → NC.
+#[derive(Default)]
 pub struct GlobalAvgPool {
-    in_shape: Vec<usize>,
+    /// Tape slot.
+    pub key: TapeKey,
 }
 
 impl GlobalAvgPool {
     /// New layer.
     pub fn new() -> Self {
-        GlobalAvgPool { in_shape: Vec::new() }
-    }
-}
-
-impl Default for GlobalAvgPool {
-    fn default() -> Self {
-        Self::new()
+        Self::default()
     }
 }
 
 impl Layer for GlobalAvgPool {
-    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn forward(&self, x: &Tensor, _ctx: &mut Ctx, tape: Option<&mut Tape>) -> Tensor {
         let (n, c) = (x.shape[0], x.shape[1]);
         let sp: usize = x.shape[2..].iter().product();
         let mut y = vec![0f32; n * c];
@@ -109,15 +117,16 @@ impl Layer for GlobalAvgPool {
             }
             y[i] = s / sp as f32;
         }
-        if ctx.train {
-            self.in_shape = x.shape.clone();
+        if let Some(tape) = tape {
+            tape.put(self.key, ShapeSaved { in_shape: x.shape.clone() });
         }
         Tensor::new(y, vec![n, c])
     }
 
-    fn backward(&mut self, gy: &Tensor, _ctx: &mut Ctx) -> Tensor {
-        let sp: usize = self.in_shape[2..].iter().product();
-        let mut gx = Tensor::zeros(&self.in_shape);
+    fn backward(&self, gy: &Tensor, _ctx: &mut Ctx, tape: &Tape, _grads: &mut GradStore) -> Tensor {
+        let saved: &ShapeSaved = tape.get(self.key, "gap");
+        let sp: usize = saved.in_shape[2..].iter().product();
+        let mut gx = Tensor::zeros(&saved.in_shape);
         for i in 0..gy.len() {
             let g = gy.data[i] / sp as f32;
             for j in 0..sp {
@@ -127,6 +136,12 @@ impl Layer for GlobalAvgPool {
         gx
     }
 
+    fn register(&mut self, r: &mut Registrar) {
+        r.enter("gap");
+        r.key(&mut self.key);
+        r.exit();
+    }
+
     fn name(&self) -> &'static str {
         "gap"
     }
@@ -134,25 +149,21 @@ impl Layer for GlobalAvgPool {
 
 /// Nearest-neighbour ×2 upsampling (decoder path of the segmentation
 /// model); backward is a 2×2 sum-pool — exact adjoint, format-independent.
+#[derive(Default)]
 pub struct Upsample2 {
-    in_shape: Vec<usize>,
+    /// Tape slot.
+    pub key: TapeKey,
 }
 
 impl Upsample2 {
     /// New layer.
     pub fn new() -> Self {
-        Upsample2 { in_shape: Vec::new() }
-    }
-}
-
-impl Default for Upsample2 {
-    fn default() -> Self {
-        Self::new()
+        Self::default()
     }
 }
 
 impl Layer for Upsample2 {
-    fn forward(&mut self, x: &Tensor, ctx: &mut Ctx) -> Tensor {
+    fn forward(&self, x: &Tensor, _ctx: &mut Ctx, tape: Option<&mut Tape>) -> Tensor {
         let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
         let mut y = vec![0f32; n * c * 4 * h * w];
         let (ho, wo) = (2 * h, 2 * w);
@@ -163,17 +174,22 @@ impl Layer for Upsample2 {
                 }
             }
         }
-        if ctx.train {
-            self.in_shape = x.shape.clone();
+        if let Some(tape) = tape {
+            tape.put(self.key, ShapeSaved { in_shape: x.shape.clone() });
         }
         Tensor::new(y, vec![n, c, ho, wo])
     }
 
-    fn backward(&mut self, gy: &Tensor, _ctx: &mut Ctx) -> Tensor {
-        let (n, c, h, w) =
-            (self.in_shape[0], self.in_shape[1], self.in_shape[2], self.in_shape[3]);
+    fn backward(&self, gy: &Tensor, _ctx: &mut Ctx, tape: &Tape, _grads: &mut GradStore) -> Tensor {
+        let saved: &ShapeSaved = tape.get(self.key, "upsample2");
+        let (n, c, h, w) = (
+            saved.in_shape[0],
+            saved.in_shape[1],
+            saved.in_shape[2],
+            saved.in_shape[3],
+        );
         let (ho, wo) = (2 * h, 2 * w);
-        let mut gx = Tensor::zeros(&self.in_shape);
+        let mut gx = Tensor::zeros(&saved.in_shape);
         for i in 0..n * c {
             for yy in 0..ho {
                 for xx in 0..wo {
@@ -185,6 +201,12 @@ impl Layer for Upsample2 {
         gx
     }
 
+    fn register(&mut self, r: &mut Registrar) {
+        r.enter("upsample2");
+        r.key(&mut self.key);
+        r.exit();
+    }
+
     fn name(&self) -> &'static str {
         "upsample2"
     }
@@ -193,19 +215,24 @@ impl Layer for Upsample2 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::finalize;
 
     #[test]
     fn upsample_roundtrip_adjoint() {
         let x = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![1, 1, 2, 2]);
         let mut u = Upsample2::new();
+        finalize(&mut u);
         let mut ctx = Ctx::train(0, 0);
-        let y = u.forward(&x, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = u.forward(&x, &mut ctx, Some(&mut tape));
         assert_eq!(y.shape, vec![1, 1, 4, 4]);
         assert_eq!(y.data[0], 1.0);
         assert_eq!(y.data[1], 1.0);
         assert_eq!(y.data[5], 1.0);
         assert_eq!(y.data[15], 4.0);
-        let g = u.backward(&Tensor::new(vec![1.0; 16], vec![1, 1, 4, 4]), &mut ctx);
+        let g =
+            u.backward(&Tensor::new(vec![1.0; 16], vec![1, 1, 4, 4]), &mut ctx, &tape, &mut grads);
         assert_eq!(g.data, vec![4.0; 4]);
     }
 
@@ -216,10 +243,18 @@ mod tests {
             vec![1, 1, 4, 4],
         );
         let mut p = MaxPool2::new();
+        finalize(&mut p);
         let mut ctx = Ctx::train(0, 0);
-        let y = p.forward(&x, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = p.forward(&x, &mut ctx, Some(&mut tape));
         assert_eq!(y.data, vec![6.0, 8.0, 14.0, 16.0]);
-        let g = p.backward(&Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![1, 1, 2, 2]), &mut ctx);
+        let g = p.backward(
+            &Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![1, 1, 2, 2]),
+            &mut ctx,
+            &tape,
+            &mut grads,
+        );
         assert_eq!(g.data[5], 1.0);
         assert_eq!(g.data[7], 2.0);
         assert_eq!(g.data[13], 3.0);
@@ -231,10 +266,13 @@ mod tests {
     fn gap_mean_and_grad() {
         let x = Tensor::new(vec![1.0, 3.0, 5.0, 7.0], vec![1, 1, 2, 2]);
         let mut p = GlobalAvgPool::new();
+        finalize(&mut p);
         let mut ctx = Ctx::train(0, 0);
-        let y = p.forward(&x, &mut ctx);
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
+        let y = p.forward(&x, &mut ctx, Some(&mut tape));
         assert_eq!(y.data, vec![4.0]);
-        let g = p.backward(&Tensor::new(vec![8.0], vec![1, 1]), &mut ctx);
+        let g = p.backward(&Tensor::new(vec![8.0], vec![1, 1]), &mut ctx, &tape, &mut grads);
         assert_eq!(g.data, vec![2.0; 4]);
     }
 }

@@ -2,7 +2,7 @@
 //! PyTorch semantics: `g ← g + λw; m ← μm + g; w ← w − αm`.
 
 use super::Optimizer;
-use crate::nn::Param;
+use crate::nn::{GradStore, Param};
 
 /// Float SGD.
 pub struct FloatSgd {
@@ -21,14 +21,22 @@ impl FloatSgd {
 }
 
 impl Optimizer for FloatSgd {
-    fn step(&mut self, params: &mut [&mut Param], lr: f32, _step_idx: u64) {
+    fn step(&mut self, params: &mut [&mut Param], grads: &GradStore, lr: f32, _step_idx: u64) {
         if self.velocity.len() != params.len() {
             self.velocity = params.iter().map(|p| vec![0f32; p.data.len()]).collect();
         }
         for (p, v) in params.iter_mut().zip(self.velocity.iter_mut()) {
+            let zeros;
+            let g = match grads.get(p) {
+                Some(g) => g,
+                None => {
+                    zeros = vec![0f32; p.data.len()];
+                    &zeros
+                }
+            };
             for i in 0..p.data.len() {
-                let g = p.grad[i] + self.weight_decay * p.data[i];
-                v[i] = self.momentum * v[i] + g;
+                let gi = g[i] + self.weight_decay * p.data[i];
+                v[i] = self.momentum * v[i] + gi;
                 p.data[i] -= lr * v[i];
             }
         }
@@ -38,16 +46,25 @@ impl Optimizer for FloatSgd {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::Registrar;
+
+    fn reg(p: &mut Param) -> GradStore {
+        let mut r = Registrar::new();
+        r.param(p, "p");
+        GradStore::new()
+    }
 
     #[test]
     fn plain_sgd_descends_quadratic() {
         // Minimize 0.5x² — gradient x.
         let mut p = Param::new(vec![1.0], vec![1]);
+        let mut gs = reg(&mut p);
         let mut opt = FloatSgd::new(0.0, 0.0);
         for s in 0..50 {
-            p.grad[0] = p.data[0];
+            gs.clear();
+            gs.buf(&p)[0] = p.data[0];
             let mut ps = [&mut p];
-            opt.step(&mut ps, 0.1, s);
+            opt.step(&mut ps, &gs, 0.1, s);
         }
         assert!(p.data[0].abs() < 0.01);
     }
@@ -56,11 +73,13 @@ mod tests {
     fn momentum_accelerates() {
         let run = |mu: f32| {
             let mut p = Param::new(vec![1.0], vec![1]);
+            let mut gs = reg(&mut p);
             let mut opt = FloatSgd::new(mu, 0.0);
             for s in 0..20 {
-                p.grad[0] = p.data[0];
+                gs.clear();
+                gs.buf(&p)[0] = p.data[0];
                 let mut ps = [&mut p];
-                opt.step(&mut ps, 0.05, s);
+                opt.step(&mut ps, &gs, 0.05, s);
             }
             p.data[0].abs()
         };
@@ -70,11 +89,13 @@ mod tests {
     #[test]
     fn weight_decay_shrinks_weights() {
         let mut p = Param::new(vec![1.0], vec![1]);
+        let mut gs = reg(&mut p);
         let mut opt = FloatSgd::new(0.0, 0.1);
         for s in 0..10 {
-            p.grad[0] = 0.0; // decay only
+            gs.clear();
+            gs.buf(&p)[0] = 0.0; // decay only
             let mut ps = [&mut p];
-            opt.step(&mut ps, 0.5, s);
+            opt.step(&mut ps, &gs, 0.5, s);
         }
         assert!(p.data[0] < 1.0 && p.data[0] > 0.0);
     }

@@ -20,7 +20,7 @@ use crate::dfp::rng::hash2;
 use crate::dfp::round::stochastic_round_u64;
 use crate::dfp::tensor::Dfp16Tensor;
 use crate::dfp::{quantize16, RoundMode};
-use crate::nn::Param;
+use crate::nn::{GradStore, Param};
 
 /// Quantize a positive/negative f32 scalar to a ≤15-bit payload + exponent.
 fn scalar15(x: f32) -> (i64, i32) {
@@ -122,7 +122,7 @@ impl IntSgd {
 }
 
 impl Optimizer for IntSgd {
-    fn step(&mut self, params: &mut [&mut Param], lr: f32, step_idx: u64) {
+    fn step(&mut self, params: &mut [&mut Param], grads: &GradStore, lr: f32, step_idx: u64) {
         if self.states.len() != params.len() {
             self.init_states(params);
         }
@@ -131,8 +131,16 @@ impl Optimizer for IntSgd {
         let (qlr, klr) = scalar15(lr);
         for (pi, (p, st)) in params.iter_mut().zip(self.states.iter_mut()).enumerate() {
             let seed0 = hash2(self.seed, step_idx ^ ((pi as u64) << 32));
+            let zeros;
+            let gf = match grads.get(p) {
+                Some(g) => g,
+                None => {
+                    zeros = vec![0f32; p.data.len()];
+                    &zeros
+                }
+            };
             // ĝ: map the f32 gradient to int16 with SR (unbiased).
-            let g = quantize16(&p.grad, 15, RoundMode::Stochastic(hash2(seed0, 1)));
+            let g = quantize16(gf, 15, RoundMode::Stochastic(hash2(seed0, 1)));
             let kg = g.scale_exp();
             let kw = st.w.scale_exp();
             let km = st.m.scale_exp();
@@ -186,7 +194,14 @@ impl Optimizer for IntSgd {
 mod tests {
     use super::*;
     use crate::dfp::rng::Rng;
+    use crate::nn::Registrar;
     use crate::optim::fsgd::FloatSgd;
+
+    fn reg(p: &mut Param) -> GradStore {
+        let mut r = Registrar::new();
+        r.param(p, "p");
+        GradStore::new()
+    }
 
     #[test]
     fn descends_quadratic_like_float() {
@@ -195,17 +210,21 @@ mod tests {
         let c: Vec<f32> = (0..16).map(|i| ((i as f32) * 0.41).sin()).collect();
         let mut pf = Param::new(vec![0.0; 16], vec![16]);
         let mut pi = Param::new(vec![0.0; 16], vec![16]);
+        let mut gf = reg(&mut pf);
+        let mut gi = reg(&mut pi);
         let mut of = FloatSgd::new(0.9, 0.0);
         let mut oi = IntSgd::new(0.9, 0.0, 7);
         for s in 0..200 {
+            gf.clear();
+            gi.clear();
             for i in 0..16 {
-                pf.grad[i] = pf.data[i] - c[i];
-                pi.grad[i] = pi.data[i] - c[i];
+                gf.buf(&pf)[i] = pf.data[i] - c[i];
+                gi.buf(&pi)[i] = pi.data[i] - c[i];
             }
             let mut a = [&mut pf];
-            of.step(&mut a, 0.05, s);
+            of.step(&mut a, &gf, 0.05, s);
             let mut b = [&mut pi];
-            oi.step(&mut b, 0.05, s);
+            oi.step(&mut b, &gi, 0.05, s);
         }
         for i in 0..16 {
             assert!((pf.data[i] - c[i]).abs() < 1e-3, "float did not converge");
@@ -217,15 +236,19 @@ mod tests {
     fn momentum_matches_float_trajectory() {
         let mut pf = Param::new(vec![1.0], vec![1]);
         let mut pi = Param::new(vec![1.0], vec![1]);
+        let mut gf = reg(&mut pf);
+        let mut gi = reg(&mut pi);
         let mut of = FloatSgd::new(0.9, 1e-2);
         let mut oi = IntSgd::new(0.9, 1e-2, 3);
         for s in 0..100 {
-            pf.grad[0] = pf.data[0];
-            pi.grad[0] = pi.data[0];
+            gf.clear();
+            gi.clear();
+            gf.buf(&pf)[0] = pf.data[0];
+            gi.buf(&pi)[0] = pi.data[0];
             let mut a = [&mut pf];
-            of.step(&mut a, 0.02, s);
+            of.step(&mut a, &gf, 0.02, s);
             let mut b = [&mut pi];
-            oi.step(&mut b, 0.02, s);
+            oi.step(&mut b, &gi, 0.02, s);
             assert!(
                 (pf.data[0] - pi.data[0]).abs() < 0.02 * pf.data[0].abs().max(0.05),
                 "step {s}: {} vs {}",
@@ -243,19 +266,21 @@ mod tests {
         let w0: Vec<f32> = (0..8).map(|_| rng.next_gaussian()).collect();
         let g0: Vec<f32> = (0..8).map(|_| rng.next_gaussian() * 0.1).collect();
         let mut pf = Param::new(w0.clone(), vec![8]);
-        pf.grad = g0.clone();
+        let mut gf = reg(&mut pf);
+        gf.buf(&pf).copy_from_slice(&g0);
         let mut of = FloatSgd::new(0.0, 0.0);
         let mut a = [&mut pf];
-        of.step(&mut a, 0.1, 0);
+        of.step(&mut a, &gf, 0.1, 0);
         let want = pf.data.clone();
         let trials = 2000u64;
         let mut acc = vec![0f64; 8];
         for t in 0..trials {
             let mut p = Param::new(w0.clone(), vec![8]);
-            p.grad = g0.clone();
+            let mut gs = reg(&mut p);
+            gs.buf(&p).copy_from_slice(&g0);
             let mut o = IntSgd::new(0.0, 0.0, t);
             let mut b = [&mut p];
-            o.step(&mut b, 0.1, 0);
+            o.step(&mut b, &gs, 0.1, 0);
             for (s, &v) in acc.iter_mut().zip(&p.data) {
                 *s += v as f64;
             }
@@ -269,11 +294,11 @@ mod tests {
     #[test]
     fn zero_gradients_keep_weights() {
         let mut p = Param::new(vec![0.5, -0.25], vec![2]);
+        let gs = reg(&mut p);
         let mut o = IntSgd::new(0.9, 0.0, 1);
         for s in 0..10 {
-            p.grad = vec![0.0, 0.0];
             let mut b = [&mut p];
-            o.step(&mut b, 0.1, s);
+            o.step(&mut b, &gs, 0.1, s);
         }
         assert!((p.data[0] - 0.5).abs() < 1e-3);
         assert!((p.data[1] + 0.25).abs() < 1e-3);

@@ -15,18 +15,17 @@ pub use fsgd::FloatSgd;
 pub use isgd::IntSgd;
 pub use schedule::LrSchedule;
 
-use crate::nn::Param;
+use crate::nn::{GradStore, Param};
 
 /// Common optimizer interface.
+///
+/// Gradients arrive in a [`GradStore`] (filled by the model's backward
+/// pass); the optimizer reads them and writes new values into each
+/// param's `data`. Optimizer state is positional — aligned with the
+/// order `params` are passed in, which is the order [`crate::nn::Layer::params`]
+/// returns them. Zeroing between steps is the trainer's job, via the
+/// single centralized site [`GradStore::clear`].
 pub trait Optimizer {
-    /// Apply one update step to the parameters, consuming their `grad`
-    /// accumulators and writing new values into `data`.
-    fn step(&mut self, params: &mut [&mut Param], lr: f32, step_idx: u64);
-
-    /// Zero all gradient accumulators.
-    fn zero_grad(&mut self, params: &mut [&mut Param]) {
-        for p in params.iter_mut() {
-            p.zero_grad();
-        }
-    }
+    /// Apply one update step to the parameters.
+    fn step(&mut self, params: &mut [&mut Param], grads: &GradStore, lr: f32, step_idx: u64);
 }

@@ -1,21 +1,61 @@
-//! Minimal checkpoint format: a self-describing little-endian binary blob
-//! of every parameter tensor (magic + count + per-tensor length + f32
-//! data). No serde available offline — the format is 30 lines on purpose.
+//! Versioned checkpoint format: a JSON header describing the model's
+//! registered parameter tree (paths + shapes, straight from the
+//! [`Registrar`]) followed by a compact little-endian f32 payload.
+//!
+//! Layout: `INTCKPT2` magic · u64 header length · UTF-8 JSON header ·
+//! concatenated f32 tensor data in registration order. The header makes a
+//! checkpoint self-describing (`{"version":2,"params":[{"path":…,
+//! "shape":[…]},…]}`) and turns every structural mismatch — renamed
+//! layer, resized tensor, reordered block — into a load-time error
+//! instead of silently misassigned weights. No serde available offline,
+//! so the header is emitted and checked by exact string comparison
+//! against the header the *loading* model derives from its own registrar.
 
-use crate::nn::Layer;
+use crate::nn::{Layer, Registrar};
 use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"INTRAIN1";
+const MAGIC: &[u8; 8] = b"INTCKPT2";
+const MAGIC_V1: &[u8; 8] = b"INTRAIN1";
+
+/// Checkpoint format version written by [`save`].
+pub const VERSION: u32 = 2;
+
+/// The JSON header a model's parameter tree serializes to. Registration
+/// is idempotent (stable paths, gids, and order), so re-running it here
+/// is safe on an already-finalized model.
+pub fn header_json(model: &mut dyn Layer) -> String {
+    let mut r = Registrar::new();
+    model.register(&mut r);
+    let mut s = format!("{{\"version\":{VERSION},\"params\":[");
+    for (i, (path, shape)) in r.param_meta.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str("{\"path\":\"");
+        s.push_str(path);
+        s.push_str("\",\"shape\":[");
+        for (j, d) in shape.iter().enumerate() {
+            if j > 0 {
+                s.push(',');
+            }
+            s.push_str(&d.to_string());
+        }
+        s.push_str("]}");
+    }
+    s.push_str("]}");
+    s
+}
 
 /// Save all model parameters to a file.
 pub fn save(model: &mut dyn Layer, path: &Path) -> std::io::Result<()> {
+    let header = header_json(model);
     let params = model.params();
     let mut f = std::fs::File::create(path)?;
     f.write_all(MAGIC)?;
-    f.write_all(&(params.len() as u64).to_le_bytes())?;
+    f.write_all(&(header.len() as u64).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
     for p in params {
-        f.write_all(&(p.data.len() as u64).to_le_bytes())?;
         for &v in &p.data {
             f.write_all(&v.to_le_bytes())?;
         }
@@ -25,31 +65,31 @@ pub fn save(model: &mut dyn Layer, path: &Path) -> std::io::Result<()> {
 
 /// Load parameters saved by [`save`] into a model of identical structure.
 pub fn load(model: &mut dyn Layer, path: &Path) -> std::io::Result<()> {
+    let bad = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
     let mut f = std::fs::File::open(path)?;
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
+    if &magic == MAGIC_V1 {
+        return Err(bad("unversioned v1 checkpoint: re-save with the current format".into()));
+    }
     if &magic != MAGIC {
-        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic"));
+        return Err(bad("bad magic".into()));
     }
     let mut u64buf = [0u8; 8];
     f.read_exact(&mut u64buf)?;
-    let count = u64::from_le_bytes(u64buf) as usize;
-    let mut params = model.params();
-    if count != params.len() {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("param count mismatch: file {count}, model {}", params.len()),
-        ));
+    let hlen = u64::from_le_bytes(u64buf) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let file_header =
+        String::from_utf8(hbuf).map_err(|_| bad("header is not valid UTF-8".into()))?;
+    let want = header_json(model);
+    if file_header != want {
+        return Err(bad(format!(
+            "checkpoint structure mismatch:\n  file:  {file_header}\n  model: {want}"
+        )));
     }
+    let mut params = model.params();
     for p in params.iter_mut() {
-        f.read_exact(&mut u64buf)?;
-        let n = u64::from_le_bytes(u64buf) as usize;
-        if n != p.data.len() {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                format!("tensor length mismatch: file {n}, model {}", p.data.len()),
-            ));
-        }
         let mut f32buf = [0u8; 4];
         for v in p.data.iter_mut() {
             f.read_exact(&mut f32buf)?;
@@ -66,7 +106,7 @@ mod tests {
     use crate::nn::{Arith, Ctx, Tensor};
 
     #[test]
-    fn roundtrip() {
+    fn roundtrip_forward_bit_identical() {
         let dir = std::env::temp_dir().join("intrain_ckpt_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("m.bin");
@@ -77,9 +117,31 @@ mod tests {
         let x = Tensor::new(vec![0.3; 4], vec![1, 4]);
         let mut c1 = Ctx::eval(0);
         let mut c2 = Ctx::eval(0);
-        let ya = a.forward(&x, &mut c1);
-        let yb = b.forward(&x, &mut c2);
-        assert_eq!(ya.data, yb.data);
+        let ya = a.forward(&x, &mut c1, None);
+        let yb = b.forward(&x, &mut c2, None);
+        let bits = |t: &Tensor| t.data.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&ya), bits(&yb));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_int_mode_bit_identical() {
+        // Same trajectory through the quantized pipeline: identical weights
+        // and identical Ctx seeds must give bit-equal int8-mode logits.
+        let dir = std::env::temp_dir().join("intrain_ckpt_test_int");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.bin");
+        let mut a = mlp(&[6, 12, 3], Arith::int8(), 5);
+        save(&mut a, &path).unwrap();
+        let mut b = mlp(&[6, 12, 3], Arith::int8(), 9);
+        load(&mut b, &path).unwrap();
+        let x = Tensor::new(vec![0.17; 12], vec![2, 6]);
+        let mut c1 = Ctx::train(3, 7);
+        let mut c2 = Ctx::train(3, 7);
+        let ya = a.forward(&x, &mut c1, None);
+        let yb = b.forward(&x, &mut c2, None);
+        let bits = |t: &Tensor| t.data.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&ya), bits(&yb));
         std::fs::remove_file(&path).unwrap();
     }
 
@@ -91,7 +153,19 @@ mod tests {
         let mut a = mlp(&[4, 8, 2], Arith::Float, 1);
         save(&mut a, &path).unwrap();
         let mut b = mlp(&[4, 6, 2], Arith::Float, 1);
-        assert!(load(&mut b, &path).is_err());
+        let err = load(&mut b, &path).unwrap_err();
+        assert!(err.to_string().contains("structure mismatch"), "{err}");
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn header_names_every_param() {
+        let mut a = mlp(&[4, 8, 2], Arith::Float, 1);
+        let h = header_json(&mut a);
+        assert!(h.starts_with("{\"version\":2,"), "{h}");
+        // Two linear layers, each w + b, with stable container paths.
+        assert_eq!(h.matches("\"path\"").count(), 4);
+        assert!(h.contains(".w\""), "{h}");
+        assert!(h.contains(".b\""), "{h}");
     }
 }

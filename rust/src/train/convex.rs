@@ -9,7 +9,7 @@
 //! shifted by a small amount (Remark 3).
 
 use crate::dfp::rng::Rng;
-use crate::nn::Param;
+use crate::nn::{GradStore, Param, Registrar};
 use crate::optim::{FloatSgd, IntSgd, Optimizer};
 
 /// Result of one gap experiment.
@@ -63,14 +63,18 @@ pub fn run_gap(cfg: &QuadCfg, integer: bool) -> GapResult {
     let c: Vec<f32> =
         (0..cfg.dim).map(|_| cfg.c_min + (cfg.c_max - cfg.c_min) * rng.next_f32()).collect();
     let mut p = Param::new(vec![0.0; cfg.dim], vec![cfg.dim]);
+    let mut reg = Registrar::new();
+    reg.param(&mut p, "w");
+    let mut grads = GradStore::new();
     let mut fopt = FloatSgd::new(0.0, 0.0);
     let mut iopt = IntSgd::new(0.0, 0.0, cfg.seed ^ 0xD1CE);
     let mut trajectory = Vec::with_capacity(cfg.steps);
     for step in 0..cfg.steps {
+        grads.clear();
         // Noisy gradient (both arms get the same noise realization).
         for i in 0..cfg.dim {
             let g = c[i] * (p.data[i] - wstar[i]) + cfg.sigma * rng.next_gaussian();
-            p.grad[i] = if integer {
+            grads.buf(&p)[i] = if integer {
                 // Map the gradient through the int8 representation (the
                 // fixed-point gradient of Assumption 2(iii,b)).
                 let q = crate::dfp::quantize(
@@ -87,9 +91,9 @@ pub fn run_gap(cfg: &QuadCfg, integer: bool) -> GapResult {
         }
         let mut ps = [&mut p];
         if integer {
-            iopt.step(&mut ps, cfg.lr, step as u64);
+            iopt.step(&mut ps, &grads, cfg.lr, step as u64);
         } else {
-            fopt.step(&mut ps, cfg.lr, step as u64);
+            fopt.step(&mut ps, &grads, cfg.lr, step as u64);
         }
         trajectory.push(loss(&p.data, &wstar, &c) as f32);
     }

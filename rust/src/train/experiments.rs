@@ -10,7 +10,7 @@ use crate::metrics::map::{average_precision, Detection};
 use crate::metrics::miou::MiouAccum;
 use crate::models::ssd::SsdLite;
 use crate::models::{fcn_seg, mobilenet_tiny, resnet_tiny, VitTiny};
-use crate::nn::{Arith, Ctx, Layer, Tensor};
+use crate::nn::{Arith, Ctx, GradStore, Layer, Tape, Tensor};
 use crate::optim::LrSchedule;
 use crate::train::trainer::{TrainConfig, TrainRecord, Trainer};
 
@@ -121,7 +121,7 @@ pub fn run_segmentation(arith: Arith, coco: bool, budget: &Budget, seed: u64) ->
         let mask = test.sample(i, &mut img);
         let x = Tensor::new(img.clone(), vec![1, 3, test.hw, test.hw]);
         let mut ctx = Ctx::eval(0);
-        let logits = model.forward(&x, &mut ctx);
+        let logits = model.forward(&x, &mut ctx, None);
         let c = logits.shape[1];
         let sp = test.hw * test.hw;
         let pred: Vec<usize> = (0..sp)
@@ -154,6 +154,8 @@ pub fn run_detection(arith: Arith, variant: &str, budget: &Budget, seed: u64) ->
     let mut opt = crate::coordinator::driver::optimizer_for(&arith, seed ^ 0xD0D0);
     let bs = budget.batch.min(16);
     let steps = budget.epochs * ds.len() / bs;
+    let mut tape = Tape::new();
+    let mut grads = GradStore::new();
     for step in 0..steps {
         // Assemble a batch of scenes.
         let scenes: Vec<_> = (0..bs).map(|r| ds.scene((step * bs + r) % ds.len())).collect();
@@ -166,19 +168,20 @@ pub fn run_detection(arith: Arith, variant: &str, budget: &Budget, seed: u64) ->
         let mut ctx = Ctx::train(seed, step as u64);
         let head = {
             let _s = crate::telemetry::trace::span("forward");
-            det.forward(&xt, &mut ctx)
+            det.forward(&xt, &mut ctx, Some(&mut tape))
         };
         let (loss, grad) = det.loss(&head, &refs);
         {
             let _s = crate::telemetry::trace::span("backward");
-            det.backward(&grad, &mut ctx);
+            det.backward(&grad, &mut ctx, &tape, &mut grads);
         }
-        let mut params = det.params();
         {
             let _s = crate::telemetry::trace::span("optimizer_step");
-            opt.step(&mut params, 0.02, step as u64);
+            let mut params = det.params();
+            opt.step(&mut params, &grads, 0.02, step as u64);
         }
-        opt.zero_grad(&mut params);
+        grads.clear();
+        tape.clear();
         if crate::telemetry::enabled() {
             crate::telemetry::emit(
                 crate::telemetry::Event::new("step")
@@ -195,7 +198,7 @@ pub fn run_detection(arith: Arith, variant: &str, budget: &Budget, seed: u64) ->
         let sc = eval.scene(i);
         let xt = Tensor::new(sc.img.clone(), vec![1, 3, eval.hw, eval.hw]);
         let mut ctx = Ctx::eval(0);
-        let head = det.forward(&xt, &mut ctx);
+        let head = det.forward(&xt, &mut ctx, None);
         dets.extend(det.decode(&head, i, 0.3));
         gts.push(sc.boxes);
     }

@@ -78,7 +78,7 @@ pub fn probe(
             // stats quality.
             let mut ctx = Ctx::train(seed, u64::MAX - 1);
             ctx.bn_momentum = Some(0.0);
-            let logits = model.forward(&x, &mut ctx);
+            let logits = model.forward(&x, &mut ctx, None);
             let (loss, _) = softmax_ce(&logits, &b.y);
             z[i * steps + j] = loss;
         }

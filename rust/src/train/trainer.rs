@@ -5,7 +5,7 @@
 use crate::data::loader::{BatchIter, Dataset};
 use crate::metrics::classify::{top1, topk};
 use crate::nn::softmax_ce::{softmax_ce, softmax_ce_pixels};
-use crate::nn::{Ctx, Layer, Tensor};
+use crate::nn::{Ctx, GradStore, Layer, Tape, Tensor};
 use crate::optim::{LrSchedule, Optimizer};
 use crate::telemetry::{self, metrics::DURATION_BUCKETS, trace, Event};
 
@@ -98,6 +98,10 @@ impl<'a> Trainer<'a> {
         let mut rec = TrainRecord::default();
         let mut step = 0u64;
         let in_shape = train_ds.input_shape();
+        // One tape + grad store reused across steps: clearing the tape
+        // recycles its arena buffers, clearing the store zeroes in place.
+        let mut tape = Tape::new();
+        let mut grads = GradStore::new();
         for epoch in 0..self.cfg.epochs {
             let mut ep_loss = 0f64;
             let mut nb = 0usize;
@@ -124,7 +128,7 @@ impl<'a> Trainer<'a> {
                 let mut ctx = Ctx::train(self.cfg.seed, step);
                 let logits = {
                     let _s = trace::span("forward");
-                    self.model.forward(&x, &mut ctx)
+                    self.model.forward(&x, &mut ctx, Some(&mut tape))
                 };
                 let (loss, grad) = if self.dense {
                     softmax_ce_pixels(&logits, &b.y)
@@ -133,15 +137,16 @@ impl<'a> Trainer<'a> {
                 };
                 {
                     let _s = trace::span("backward");
-                    self.model.backward(&grad, &mut ctx);
+                    self.model.backward(&grad, &mut ctx, &tape, &mut grads);
                 }
                 let lr = self.cfg.schedule.at(step);
                 {
                     let _s = trace::span("optimizer_step");
                     let mut params = self.model.params();
-                    self.opt.step(&mut params, lr, step);
-                    self.opt.zero_grad(&mut params);
+                    self.opt.step(&mut params, &grads, lr, step);
                 }
+                grads.clear();
+                tape.clear();
                 rec.step_loss.push(loss);
                 rec.step_lr.push(lr);
                 if let Some((g_loss, g_lr, h_step)) = &instruments {
@@ -213,7 +218,7 @@ impl<'a> Trainer<'a> {
             // Cumulative-average momentum 1/(i+1): after k batches the
             // running stats equal the plain average of the k batch stats.
             ctx.bn_momentum = Some(1.0 / (i + 1) as f32);
-            self.model.forward(&x, &mut ctx);
+            self.model.forward(&x, &mut ctx, None);
         }
     }
 
@@ -237,7 +242,7 @@ impl<'a> Trainer<'a> {
             let x = Tensor::new(b.x, shape);
             let mut ctx = Ctx::train(self.cfg.seed, u64::MAX);
             ctx.bn_momentum = Some(0.0); // batch stats, no running update
-            let logits = self.model.forward(&x, &mut ctx);
+            let logits = self.model.forward(&x, &mut ctx, None);
             if self.dense {
                 // Per-pixel argmax accuracy.
                 let (bn, c) = (logits.shape[0], logits.shape[1]);

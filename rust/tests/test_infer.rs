@@ -1,0 +1,115 @@
+//! Concurrent-inference conformance: one immutable model (`Arc<dyn
+//! Layer>`) shared across the persistent worker pool must produce logits
+//! byte-identical to a single-threaded tape-less forward over the same
+//! batches — for all three vision models (ViT, SSD-lite, MobileNet) in
+//! int8 mode, where every stochastic-rounding seed site is live.
+//!
+//! The pool size is resolved once per process, so the ≥4-thread case is
+//! exercised via subprocess re-exec with `PALLAS_THREADS=4` (the same
+//! pattern as the golden-trajectory determinism test), and its digest is
+//! compared against a `PALLAS_THREADS=1` child.
+
+use intrain::infer::{infer_batches, infer_batches_serial, InferReport};
+use intrain::models::{mobilenet_tiny, SsdLite, VitTiny};
+use intrain::nn::{Arith, Layer, Tensor};
+use std::sync::Arc;
+
+fn fnv1a(h: u64, w: u32) -> u64 {
+    (h ^ w as u64).wrapping_mul(0x0000_0100_0000_01b3)
+}
+
+fn digest(rep: &InferReport) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for o in &rep.outputs {
+        for &x in o.logits.data.iter() {
+            h = fnv1a(h, x.to_bits());
+        }
+    }
+    h
+}
+
+fn models() -> Vec<(&'static str, Arc<dyn Layer>)> {
+    vec![
+        ("vit", Arc::new(VitTiny::new(10, 3, 16, 4, 32, 2, 4, Arith::int8(), 5))),
+        ("ssd", Arc::new(SsdLite::new(3, 16, 4, false, Arith::int8(), 6))),
+        ("mobilenet", Arc::new(mobilenet_tiny(10, 3, 16, Arith::int8(), 7))),
+    ]
+}
+
+fn batches(n: usize, bs: usize) -> Vec<Tensor> {
+    let mut rng = intrain::dfp::rng::Rng::new(99);
+    (0..n)
+        .map(|_| {
+            Tensor::new(
+                (0..bs * 3 * 256).map(|_| rng.next_gaussian() * 0.3).collect(),
+                vec![bs, 3, 16, 16],
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn pool_inference_matches_serial_bitwise() {
+    // Whatever pool size this process resolved: parallel fan-out over the
+    // shared Arc must equal the serial loop to the bit, batch by batch.
+    for (name, model) in models() {
+        let xs = batches(8, 2);
+        let par = infer_batches(model.as_ref(), &xs, 11);
+        let ser = infer_batches_serial(model.as_ref(), &xs, 11);
+        assert_eq!(par.outputs.len(), ser.outputs.len());
+        for (i, (a, b)) in par.outputs.iter().zip(&ser.outputs).enumerate() {
+            let bits = |t: &Tensor| t.data.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&a.logits), bits(&b.logits), "{name}: batch {i} diverged");
+        }
+    }
+}
+
+/// Child half of the pool-size determinism test. Inert under a normal run;
+/// re-executed with `INFER_DET_CHILD=1` it checks parallel≡serial under
+/// the parent-chosen `PALLAS_THREADS` and prints one digest per model.
+#[test]
+fn infer_child_emits_digests() {
+    if std::env::var("INFER_DET_CHILD").is_err() {
+        return;
+    }
+    if let Ok(want) = std::env::var("PALLAS_THREADS") {
+        let want: usize = want.parse().unwrap();
+        assert_eq!(intrain::dfp::exec::pool().threads(), want, "pool override not honored");
+    }
+    for (name, model) in models() {
+        let xs = batches(8, 2);
+        let par = infer_batches(model.as_ref(), &xs, 11);
+        let ser = infer_batches_serial(model.as_ref(), &xs, 11);
+        assert_eq!(digest(&par), digest(&ser), "{name}: parallel != serial in child");
+        println!("INFER_DIGEST[{name}]={:016x}", digest(&par));
+    }
+}
+
+#[test]
+fn concurrent_inference_bit_identical_across_pool_sizes() {
+    let exe = std::env::current_exe().expect("test binary path");
+    let digests_for = |threads: &str| -> Vec<String> {
+        let out = std::process::Command::new(&exe)
+            .args(["--exact", "infer_child_emits_digests", "--nocapture", "--test-threads=1"])
+            .env("INFER_DET_CHILD", "1")
+            .env("PALLAS_THREADS", threads)
+            .output()
+            .expect("spawn child test process");
+        assert!(
+            out.status.success(),
+            "child (PALLAS_THREADS={threads}) failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+        let ds: Vec<String> = stdout
+            .lines()
+            .filter(|l| l.starts_with("INFER_DIGEST["))
+            .map(str::to_string)
+            .collect();
+        assert_eq!(ds.len(), 3, "expected 3 model digests in child output:\n{stdout}");
+        ds
+    };
+    // ≥4 pool threads sharing each Arc<Model> vs a single-thread pool:
+    // identical logits, bit for bit, for all three models.
+    assert_eq!(digests_for("4"), digests_for("1"));
+}
